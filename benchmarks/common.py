@@ -1,0 +1,127 @@
+"""Shared harness for the paper-figure benchmarks (Sec. V setup).
+
+Builds the two evaluation tasks (MNIST-like logistic regression — convex;
+CIFAR-like 4-conv CNN — non-convex) on seeded synthetic data with the
+paper's non-IID shard partitioning, and runs the PO-FL simulator for a set
+of scheduling policies.
+
+``reduced=True`` (the default for ``python -m benchmarks.run``) shrinks
+datasets/rounds/trials so the whole suite runs on CPU in minutes; pass
+--full to individual figure modules for paper-scale runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.channel import ChannelConfig
+from repro.core.pofl import POFLConfig, run_pofl
+from repro.data.partition import partition_noniid_shards
+from repro.data.synthetic import make_classification_dataset
+from repro.models import small
+
+POLICIES = ("pofl", "importance", "channel", "deterministic", "noisefree")
+
+
+@dataclasses.dataclass
+class Task:
+    name: str
+    loss_fn: object
+    eval_fn: object
+    params0: object
+    data: object
+
+
+def build_task(
+    kind: str,
+    n_devices: int = 30,
+    classes_per_device: int = 2,
+    n_train: int = 6000,
+    n_test: int = 1000,
+    seed: int = 0,
+) -> Task:
+    """kind: 'mnist' (logreg) or 'cifar' (cnn)."""
+    key = jax.random.PRNGKey(seed)
+    k_train, k_test, k_init = jax.random.split(key, 3)
+    ds = "mnist_like" if kind == "mnist" else "cifar_like"
+    x_tr, y_tr = make_classification_dataset(ds, n_train, k_train)
+    x_te, y_te = make_classification_dataset(ds, n_test, k_test)
+    data = partition_noniid_shards(
+        x_tr, y_tr, n_devices, shards_per_device=classes_per_device, seed=seed
+    )
+    if kind == "mnist":
+        params0 = small.init_logreg(k_init)
+        loss_fn = small.logreg_loss
+        eval_fn = small.make_eval_fn(small.logreg_logits, loss_fn, x_te, y_te)
+    else:
+        params0 = small.init_cnn(k_init)
+        loss_fn = small.cnn_loss
+        eval_fn = small.make_eval_fn(small.cnn_logits, loss_fn, x_te, y_te)
+    return Task(kind, loss_fn, eval_fn, params0, data)
+
+
+def run_policies(
+    task: Task,
+    policies=POLICIES,
+    n_rounds: int = 100,
+    n_trials: int = 1,
+    n_scheduled: int = 10,
+    alpha: float = 0.1,
+    noise_power: float = 1e-11,
+    lr0: float | None = None,
+    eval_every: int = 5,
+    seed: int = 0,
+) -> dict:
+    """Returns {policy: {"acc": (trials, evals), "rounds": [...], ...}}."""
+    lr0 = lr0 if lr0 is not None else (0.1 if task.name == "mnist" else 0.5)
+    out = {}
+    for policy in policies:
+        accs, e_coms, e_vars = [], [], []
+        rounds = None
+        for trial in range(n_trials):
+            cfg = POFLConfig(
+                n_devices=task.data.n_devices,
+                n_scheduled=n_scheduled,
+                alpha=alpha,
+                policy=policy,
+                noise_power=noise_power,
+                lr0=lr0,
+                seed=seed + 1000 * trial,
+            )
+            _, hist = run_pofl(
+                task.loss_fn, task.params0, task.data, cfg, n_rounds,
+                eval_fn=task.eval_fn, eval_every=eval_every,
+                channel_cfg=ChannelConfig(
+                    n_devices=task.data.n_devices, noise_power=noise_power
+                ),
+            )
+            accs.append(hist.test_acc)
+            e_coms.append(np.mean(hist.e_com))
+            e_vars.append(np.mean(hist.e_var))
+            rounds = hist.test_round
+        out[policy] = {
+            "acc": np.asarray(accs),
+            "final_acc": float(np.mean([a[-1] for a in accs])),
+            "best_acc": float(np.mean([np.max(a) for a in accs])),
+            "rounds": rounds,
+            "e_com": float(np.mean(e_coms)),
+            "e_var": float(np.mean(e_vars)),
+        }
+    return out
+
+
+def print_table(title: str, results: dict, key: str = "best_acc"):
+    print(f"\n== {title} ==")
+    for policy, r in results.items():
+        print(f"  {policy:>14s}: {key}={r[key]:.4f}  "
+              f"e_com={r['e_com']:.3e}  e_var={r['e_var']:.3e}")
+
+
+def timed(fn, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    return out, time.time() - t0

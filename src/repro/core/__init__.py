@@ -1,0 +1,17 @@
+"""PO-FL core: channel model, AirComp signal chain, scheduling, simulator."""
+from repro.core.channel import ChannelConfig, ChannelState
+from repro.core.pofl import DeviceData, History, POFLConfig, make_round_step, run_pofl
+from repro.core.scheduling import POLICIES, Schedule, scheduling_probs
+
+__all__ = [
+    "ChannelConfig",
+    "ChannelState",
+    "DeviceData",
+    "History",
+    "POFLConfig",
+    "POLICIES",
+    "Schedule",
+    "make_round_step",
+    "run_pofl",
+    "scheduling_probs",
+]

@@ -1,0 +1,76 @@
+"""Wireless channel model for over-the-air FL (paper Sec. V-A).
+
+Rayleigh block-fading channels with free-space path loss:
+
+    h_i^t = sqrt(g_i) * lambda_i^t,     lambda_i^t ~ CN(0, 1)
+    g_i   = G0 * (c / (4 pi f0 d_i))^PL
+
+The channel is *simulated* (seeded PRNG) — on a TPU mesh the links are
+reliable, so fading/noise are injected explicitly (see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+C_LIGHT = 3.0e8
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelConfig:
+    """Physical-layer constants (defaults = paper Sec. V-A)."""
+
+    n_devices: int = 30
+    d_min: float = 10.0          # min device-server distance [m]
+    d_max: float = 50.0          # max device-server distance [m]
+    antenna_gain: float = 4.11   # G0
+    carrier_freq: float = 915e6  # f0 [Hz]
+    path_loss_exp: float = 3.76  # PL
+    tx_power: float = 1.0        # P [W]
+    noise_power: float = 1e-11   # sigma_z^2 [W]
+
+
+def path_loss(cfg: ChannelConfig, distances: jnp.ndarray) -> jnp.ndarray:
+    """Free-space path loss g_i for device distances [m]."""
+    wavelength_term = C_LIGHT / (4.0 * jnp.pi * cfg.carrier_freq * distances)
+    return cfg.antenna_gain * wavelength_term ** cfg.path_loss_exp
+
+
+def device_distances(cfg: ChannelConfig, key: jax.Array) -> jnp.ndarray:
+    """Uniformly distributed device distances in [d_min, d_max]."""
+    return jax.random.uniform(
+        key, (cfg.n_devices,), minval=cfg.d_min, maxval=cfg.d_max
+    )
+
+
+@partial(jax.jit, static_argnums=0)
+def sample_channels(cfg: ChannelConfig, gains: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
+    """Sample complex channel coefficients h_i^t (Rayleigh block fading).
+
+    Returns complex64 array of shape (n_devices,).
+    """
+    k_re, k_im = jax.random.split(key)
+    lam = (
+        jax.random.normal(k_re, gains.shape) + 1j * jax.random.normal(k_im, gains.shape)
+    ) / jnp.sqrt(2.0)
+    return jnp.sqrt(gains).astype(jnp.complex64) * lam.astype(jnp.complex64)
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelState:
+    """Static per-run channel state (distances/gains are drawn once)."""
+
+    cfg: ChannelConfig
+    gains: jnp.ndarray  # (n_devices,)
+
+    @staticmethod
+    def create(cfg: ChannelConfig, key: jax.Array) -> "ChannelState":
+        dists = device_distances(cfg, key)
+        return ChannelState(cfg=cfg, gains=path_loss(cfg, dists))
+
+    def sample(self, key: jax.Array) -> jnp.ndarray:
+        """Draw this round's fading realization h^t (complex, (n_devices,))."""
+        return sample_channels(self.cfg, self.gains, key)

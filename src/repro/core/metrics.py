@@ -1,0 +1,22 @@
+"""Convergence-bound diagnostics (Theorem 1 terms) tracked during training."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class RoundMetrics(NamedTuple):
+    """Per-round diagnostics matching the Thm. 1 decomposition."""
+
+    loss: jnp.ndarray          # global train loss f(w^t)
+    e_com: jnp.ndarray         # Eq. 15 closed-form communication distortion
+    e_var: jnp.ndarray         # realized global update variance
+    grad_norm: jnp.ndarray     # ||ŷ^t||
+    n_scheduled: jnp.ndarray   # realized |S^t|
+    a_scalar: jnp.ndarray      # denoise scalar a^t (Lemma 1)
+
+
+def bound_objective(e_com: jnp.ndarray, e_var: jnp.ndarray, alpha: float) -> jnp.ndarray:
+    """The (P1) objective: (1+α)·e_com + (1+1/α)·e_var."""
+    return (1.0 + alpha) * e_com + (1.0 + 1.0 / alpha) * e_var

@@ -1,0 +1,195 @@
+"""PO-FL — Algorithm 1: the faithful over-the-air FL simulator.
+
+This is the paper's training loop at paper scale (N≈30 devices, vmap over
+devices). Every step of Algorithm 1 is implemented:
+
+  1. broadcast w^t                      (implicit — shared params)
+  2. local mini-batch gradients g_i^t   (vmap of jax.grad over devices)
+  3. upload scalar stats M_i, V_i, ||g_i||
+  4. server computes p_i^t (scheduling.py), samples S^t, broadcasts stats
+  5. devices normalize + transmit concurrently; server denoises (aircomp.py)
+  6. w^{t+1} = w^t − η^t ŷ^t
+
+The whole round is a single jitted function; the T-round loop is Python so
+that evaluation/metrics can stream out.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from repro.core import aircomp, scheduling
+from repro.core.channel import ChannelConfig, ChannelState
+from repro.core.metrics import RoundMetrics
+
+
+@dataclasses.dataclass(frozen=True)
+class POFLConfig:
+    """Hyper-parameters for the PO-FL simulator (defaults = paper Sec. V-A)."""
+
+    n_devices: int = 30
+    n_scheduled: int = 10
+    alpha: float = 0.1
+    policy: str = "pofl"
+    sampler: str = "without_replacement"  # or "bernoulli" (PO-FL-B variant)
+    tx_power: float = 1.0
+    noise_power: float = 1e-11
+    batch_size: int = 10
+    lr0: float = 0.1
+    lr_decay: float = 0.95
+    lr_min: float = 1e-5
+    simulate_physical: bool = False  # full Eq.5→8 path vs Eq.16 (same in law)
+    seed: int = 0
+
+    def lr(self, t: jnp.ndarray) -> jnp.ndarray:
+        """Paper Sec. V-A: η^t = max(η0 · 0.95^t, 1e-5)."""
+        return jnp.maximum(self.lr0 * self.lr_decay**t, self.lr_min)
+
+
+class DeviceData(NamedTuple):
+    """Stacked per-device datasets (equal shard sizes, as in the paper)."""
+
+    features: jnp.ndarray  # (N, m, ...)
+    labels: jnp.ndarray    # (N, m)
+
+    @property
+    def n_devices(self) -> int:
+        return self.features.shape[0]
+
+    @property
+    def samples_per_device(self) -> int:
+        return self.features.shape[1]
+
+
+class History(NamedTuple):
+    loss: list
+    e_com: list
+    e_var: list
+    test_acc: list
+    test_round: list
+
+
+def _device_gradients(loss_fn, params, feats, labels):
+    """vmap(jax.grad) over the device axis → stacked flat gradients (N, D)."""
+
+    def one(fx, fy):
+        g = jax.grad(loss_fn)(params, fx, fy)
+        flat, _ = ravel_pytree(g)
+        return flat
+
+    return jax.vmap(one)(feats, labels)
+
+
+def make_round_step(
+    loss_fn: Callable[[Any, jnp.ndarray, jnp.ndarray], jnp.ndarray],
+    data: DeviceData,
+    channel: ChannelState,
+    cfg: POFLConfig,
+):
+    """Build the jitted single-round step implementing Algorithm 1."""
+
+    n = data.n_devices
+    m = data.samples_per_device
+    data_frac = jnp.full((n,), 1.0 / n)  # equal shards: m_i/M = 1/N
+
+    noise_free = cfg.policy == "noisefree"
+    agg_noise_power = 0.0 if noise_free else cfg.noise_power
+
+    def round_step(params, key, t):
+        k_batch, k_chan, k_sched, k_noise = jax.random.split(key, 4)
+
+        # -- step 2: local mini-batch gradients ---------------------------
+        idx = jax.random.randint(k_batch, (n, cfg.batch_size), 0, m)
+        feats = jnp.take_along_axis(
+            data.features,
+            idx.reshape((n, cfg.batch_size) + (1,) * (data.features.ndim - 2)),
+            axis=1,
+        )
+        labels = jnp.take_along_axis(data.labels, idx, axis=1)
+        g = _device_gradients(loss_fn, params, feats, labels)  # (N, D)
+        dim = g.shape[-1]
+
+        # -- step 3: uploaded scalar statistics ---------------------------
+        stats = aircomp.local_stats(g)
+
+        # -- step 4: scheduling -------------------------------------------
+        h = channel.sample(k_chan)
+        h_abs = jnp.abs(h)
+        probs = scheduling.scheduling_probs(
+            cfg.policy, stats.norm, stats.var, h_abs, data_frac, dim,
+            cfg.alpha, cfg.tx_power, cfg.noise_power,
+        )
+        if cfg.policy == "deterministic":
+            sched = scheduling.sample_without_replacement(k_sched, probs, cfg.n_scheduled)
+            rho = scheduling.deterministic_weights(sched, data_frac)
+            mask = sched.mask
+        elif cfg.sampler == "bernoulli":
+            mask, pi = scheduling.sample_bernoulli(k_sched, probs, cfg.n_scheduled)
+            rho = scheduling.bernoulli_weights(pi, data_frac)
+        else:
+            sched = scheduling.sample_without_replacement(k_sched, probs, cfg.n_scheduled)
+            rho = scheduling.aggregation_weights(sched, probs, data_frac, cfg.n_scheduled)
+            mask = sched.mask
+
+        # -- steps 5-6: AirComp aggregation + model update ----------------
+        y_hat, e_com = aircomp.aircomp_aggregate(
+            g, rho, h, mask, k_noise, cfg.tx_power, agg_noise_power,
+            simulate_physical=cfg.simulate_physical,
+        )
+        e_var = scheduling.global_update_variance(g, rho, mask, data_frac, cfg.n_scheduled)
+
+        flat_params, unravel_p = ravel_pytree(params)
+        new_params = unravel_p(flat_params - cfg.lr(t) * y_hat)
+
+        a = aircomp.denoise_scalar(rho, h_abs, mask, cfg.tx_power)
+        metrics = RoundMetrics(
+            loss=jnp.zeros(()),  # filled by caller's eval if desired
+            e_com=e_com,
+            e_var=e_var,
+            grad_norm=jnp.linalg.norm(y_hat),
+            n_scheduled=jnp.sum(mask),
+            a_scalar=a,
+        )
+        return new_params, metrics
+
+    return jax.jit(round_step)
+
+
+def run_pofl(
+    loss_fn,
+    params0,
+    data: DeviceData,
+    cfg: POFLConfig,
+    n_rounds: int,
+    eval_fn: Callable[[Any], tuple[float, float]] | None = None,
+    eval_every: int = 5,
+    channel_cfg: ChannelConfig | None = None,
+) -> tuple[Any, History]:
+    """Run Algorithm 1 for ``n_rounds`` and return (params, history)."""
+    key = jax.random.PRNGKey(cfg.seed)
+    k_chan_init, key = jax.random.split(key)
+    ch_cfg = channel_cfg or ChannelConfig(
+        n_devices=cfg.n_devices,
+        tx_power=cfg.tx_power,
+        noise_power=cfg.noise_power,
+    )
+    channel = ChannelState.create(ch_cfg, k_chan_init)
+    step = make_round_step(loss_fn, data, channel, cfg)
+
+    hist = History(loss=[], e_com=[], e_var=[], test_acc=[], test_round=[])
+    params = params0
+    for t in range(n_rounds):
+        key, k_round = jax.random.split(key)
+        params, metrics = step(params, k_round, jnp.asarray(t, jnp.float32))
+        hist.e_com.append(float(metrics.e_com))
+        hist.e_var.append(float(metrics.e_var))
+        if eval_fn is not None and (t % eval_every == 0 or t == n_rounds - 1):
+            loss, acc = eval_fn(params)
+            hist.loss.append(float(loss))
+            hist.test_acc.append(float(acc))
+            hist.test_round.append(t)
+    return params, hist

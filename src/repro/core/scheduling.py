@@ -1,0 +1,202 @@
+"""Device scheduling policies (paper Sec. IV + Sec. V baselines).
+
+Policies produce *single-draw* scheduling probabilities p_i^t (Σp=1); the
+multi-device schedule is drawn by repeated sampling **without replacement**
+with the Eq. 36 renormalization, and aggregation weights follow Eq. 37.
+
+Implemented policies:
+  * ``pofl``          — Eq. 34/35 (channel + gradient-importance aware, ours)
+  * ``importance``    — p_i ∝ (m_i/M)·||g_i||          [Remark 2 / refs 13,22]
+  * ``channel``       — p_i ∝ |h_i|²                   [Remark 2 / refs 13,24]
+  * ``noisefree``     — Eq. 34/35 with σ_z² = 0 (idealized benchmark)
+  * ``deterministic`` — uniform random subset, direct (biased) aggregation
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+POLICIES = ("pofl", "importance", "channel", "noisefree", "deterministic")
+
+
+def pofl_q(
+    grad_norms: jnp.ndarray,
+    grad_vars: jnp.ndarray,
+    h_abs: jnp.ndarray,
+    data_frac: jnp.ndarray,
+    dim: int,
+    alpha: float,
+    tx_power: float,
+    noise_power: float,
+) -> jnp.ndarray:
+    """Eq. 35:  Q_i = sqrt((1+α)·Ṽ_g D σ_z² m_i²/(P|h_i|²M²) + (1+1/α)·m_i²||g_i||²/M²).
+
+    Args:
+      grad_norms: (N,) uploaded ||g_i||.
+      grad_vars:  (N,) uploaded V_i (per-device gradient entry variance).
+      h_abs:      (N,) |h_i| this round.
+      data_frac:  (N,) m_i / M.
+    """
+    v_g_tilde = jnp.sum(data_frac * grad_vars)
+    com_term = (
+        (1.0 + alpha)
+        * v_g_tilde
+        * dim
+        * noise_power
+        * data_frac**2
+        / (tx_power * jnp.maximum(h_abs, 1e-30) ** 2)
+    )
+    var_term = (1.0 + 1.0 / alpha) * data_frac**2 * grad_norms**2
+    return jnp.sqrt(com_term + var_term)
+
+
+def scheduling_probs(
+    policy: str,
+    grad_norms: jnp.ndarray,
+    grad_vars: jnp.ndarray,
+    h_abs: jnp.ndarray,
+    data_frac: jnp.ndarray,
+    dim: int,
+    alpha: float,
+    tx_power: float,
+    noise_power: float,
+) -> jnp.ndarray:
+    """Single-draw probabilities p_i (Eq. 34 for pofl; Remark 2 for baselines)."""
+    if policy == "pofl":
+        q = pofl_q(grad_norms, grad_vars, h_abs, data_frac, dim, alpha, tx_power, noise_power)
+    elif policy == "noisefree":
+        q = pofl_q(grad_norms, grad_vars, h_abs, data_frac, dim, alpha, tx_power, 0.0)
+    elif policy == "importance":
+        q = data_frac * grad_norms
+    elif policy == "channel":
+        q = h_abs**2
+    elif policy == "deterministic":
+        q = jnp.ones_like(h_abs)
+    else:  # pragma: no cover - guarded by POLICIES
+        raise ValueError(f"unknown policy {policy!r}")
+    q = jnp.maximum(q, 1e-30)
+    return q / jnp.sum(q)
+
+
+class Schedule(NamedTuple):
+    """One round's draw: indices Y_{t,k}, their step-k renormalized probs q_k,
+    and the 0/1 device mask."""
+
+    indices: jnp.ndarray  # (S,) int32 — Y_{t,1..S}
+    step_probs: jnp.ndarray  # (S,) — q^t_{Y_{t,k}} at the k-th selection (Eq. 36)
+    mask: jnp.ndarray  # (N,) float — 1{i ∈ S^t}
+
+
+def sample_without_replacement(
+    key: jax.Array, probs: jnp.ndarray, n_scheduled: int
+) -> Schedule:
+    """Sequential sampling without replacement with Eq. 36 renormalization.
+
+    At step k the live probabilities are q_i = p_i / (1 - Σ_{j<k} p_{Y_j})
+    for unselected i (0 otherwise); we record q_{Y_k} for the Eq. 37 weights.
+    """
+    n = probs.shape[0]
+
+    def step(carry, k_key):
+        mask, cum_p = carry
+        alive = 1.0 - mask
+        q = jnp.where(alive > 0, probs, 0.0) / jnp.maximum(1.0 - cum_p, 1e-30)
+        # Gumbel-max draw over the renormalized distribution (scale-invariant,
+        # so the shared denominator does not change the draw — but q_k does
+        # enter the aggregation weights).
+        logits = jnp.where(alive > 0, jnp.log(jnp.maximum(probs, 1e-30)), -jnp.inf)
+        idx = jax.random.categorical(k_key, logits)
+        q_k = q[idx]
+        mask = mask.at[idx].set(1.0)
+        cum_p = cum_p + probs[idx]
+        return (mask, cum_p), (idx, q_k)
+
+    keys = jax.random.split(key, n_scheduled)
+    (mask, _), (indices, step_probs) = jax.lax.scan(
+        step, (jnp.zeros(n), jnp.zeros(())), keys
+    )
+    return Schedule(indices=indices.astype(jnp.int32), step_probs=step_probs, mask=mask)
+
+
+def aggregation_weights(
+    schedule: Schedule, probs: jnp.ndarray, data_frac: jnp.ndarray, n_scheduled: int
+) -> jnp.ndarray:
+    """Per-device aggregation weights ρ_i scattered to an (N,) vector.
+
+    Eq. 37: ŷ uses (1/|S|)·m_i/(M·q_{Y_k}) for the k-th selected device.
+    For |S| = 1 this reduces to the Eq. 16 weight m_i/(M p_i).
+    """
+    del probs
+    n = data_frac.shape[0]
+    w_k = data_frac[schedule.indices] / jnp.maximum(schedule.step_probs, 1e-30)
+    w_k = w_k / n_scheduled
+    return jnp.zeros(n).at[schedule.indices].add(w_k)
+
+
+def bernoulli_inclusion_probs(probs: jnp.ndarray, n_scheduled: int) -> jnp.ndarray:
+    """Inclusion probabilities π_i with Σπ = S and π_i ∝ p_i where possible.
+
+    π_i = min(1, c·p_i) with c chosen so Σπ_i = S (Poisson/conditional-Poisson
+    style sampling with a target expected size). Solved by bisection on c —
+    monotone, a few fixed iterations suffice (runs under jit).
+    """
+
+    def body(_, bounds):
+        lo, hi = bounds
+        mid = 0.5 * (lo + hi)
+        total = jnp.sum(jnp.minimum(1.0, mid * probs))
+        lo = jnp.where(total < n_scheduled, mid, lo)
+        hi = jnp.where(total < n_scheduled, hi, mid)
+        return lo, hi
+
+    n = probs.shape[0]
+    hi0 = jnp.asarray(n / jnp.maximum(jnp.min(probs), 1e-30))
+    lo, hi = jax.lax.fori_loop(0, 50, body, (jnp.zeros(()), hi0))
+    c = 0.5 * (lo + hi)
+    return jnp.clip(c * probs, 1e-30, 1.0)
+
+
+def sample_bernoulli(
+    key: jax.Array, probs: jnp.ndarray, n_scheduled: int
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Beyond-paper variant (PO-FL-B): independent Bernoulli scheduling.
+
+    Device i is scheduled independently with π_i (E[|S|] = n_scheduled) and
+    reweighted by m_i/(M π_i) — a Horvitz–Thompson estimator that is *exactly*
+    unbiased for any |S|, unlike the Eq. 37 sequential estimator (which is
+    exactly unbiased only for |S| = 1; see tests/test_scheduling.py).
+
+    Returns (mask, pi).
+    """
+    pi = bernoulli_inclusion_probs(probs, n_scheduled)
+    mask = (jax.random.uniform(key, probs.shape) < pi).astype(jnp.float32)
+    return mask, pi
+
+
+def bernoulli_weights(pi: jnp.ndarray, data_frac: jnp.ndarray) -> jnp.ndarray:
+    """Horvitz–Thompson weights ρ_i = m_i/(M π_i) (applied with the mask)."""
+    return data_frac / jnp.maximum(pi, 1e-30)
+
+
+def deterministic_weights(schedule: Schedule, data_frac: jnp.ndarray) -> jnp.ndarray:
+    """Baseline direct aggregation: m_i / Σ_{j∈S} m_j on the selected set (biased)."""
+    sel = schedule.mask * data_frac
+    return sel / jnp.maximum(jnp.sum(sel), 1e-30)
+
+
+def global_update_variance(
+    g: jnp.ndarray, rho: jnp.ndarray, mask: jnp.ndarray, data_frac: jnp.ndarray,
+    n_scheduled: int,
+) -> jnp.ndarray:
+    """e_var (Thm. 1): ||Σ_{i∈S} ρ_i g_i − |S|·Σ_j (m_j/M) g_j||²  with ρ=m/(Mp).
+
+    Note: under the Eq. 37 convention (weights already divided by |S|) the
+    comparison target is the plain global gradient; we use the Eq. 37-scaled
+    weights so the target is Σ_j (m_j/M) g_j.
+    """
+    est = jnp.sum((rho * mask)[:, None] * g, axis=0)
+    target = jnp.sum(data_frac[:, None] * g, axis=0)
+    del n_scheduled
+    return jnp.sum((est - target) ** 2)

@@ -1,0 +1,97 @@
+"""JVP-sketched per-device gradient statistics (beyond-paper optimization).
+
+Algorithm 1 needs every device's gradient scalars (M_i, V_i, ‖g_i‖) *before*
+scheduling. At paper scale that's a vmap over 30 devices; at production scale
+(100M–123B parameters, FL device = data-parallel slice) materializing
+per-device gradients costs n_dev full backward passes.
+
+Observation: all three scalars are functions of inner products g_i·v —
+ *directional derivatives* of the per-device loss vector, computable for ALL
+devices simultaneously with ONE forward-mode JVP:
+
+    jvp(L, params, v)[1][i] = g_i · v     where L(params) = (L_1, ..., L_N)
+
+  * M_i  = (g_i · 1) / D                      — exact, one JVP with v = 1
+  * ‖g_i‖² = E_{v~N(0,I)}[(g_i·v)²]           — Hutchinson estimate, k probes
+  * V_i  = ‖g_i‖²/D − M_i²                    — derived
+
+Cost: (k+1) JVPs ≈ (k+1)·2 forward passes, independent of n_dev — versus
+n_dev backward passes for the exact path. Unbiased (so Lemma 2 still holds
+in expectation over probes); variance ∝ 1/k. Validated against exact stats
+in tests/test_sketch.py.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aircomp import GradStats
+
+
+def sketch_device_stats(
+    per_device_loss: Callable,
+    params,
+    key: jax.Array,
+    n_probes: int = 4,
+) -> GradStats:
+    """Estimate (M_i, V_i, ‖g_i‖) for every FL device.
+
+    Args:
+      per_device_loss: params -> (n_devices,) loss vector (one scalar per
+        FL device, each the mean loss over that device's local examples).
+      params: model parameters pytree.
+      key: PRNG key for the Hutchinson probes.
+      n_probes: number of random probes for the norm estimate.
+    """
+    dim = sum(int(jnp.size(l)) for l in jax.tree.leaves(params))
+
+    # exact per-device gradient mean: one JVP along the all-ones direction
+    ones = jax.tree.map(jnp.ones_like, params)
+    _, dots_ones = jax.jvp(per_device_loss, (params,), (ones,))
+    mean = dots_ones / dim  # (n_devices,)
+
+    # Hutchinson norm estimate: k probes v ~ N(0, I)
+    def one_probe(k):
+        leaves, treedef = jax.tree.flatten(params)
+        keys = jax.random.split(k, len(leaves))
+        v = jax.tree.unflatten(
+            treedef,
+            [jax.random.normal(kk, l.shape, l.dtype) for kk, l in zip(keys, leaves)],
+        )
+        _, dots = jax.jvp(per_device_loss, (params,), (v,))
+        return dots**2
+
+    sq = jax.lax.map(one_probe, jax.random.split(key, n_probes))
+    norm_sq = jnp.mean(sq, axis=0)  # (n_devices,)
+    var = jnp.maximum(norm_sq / dim - mean**2, 0.0)
+    return GradStats(mean=mean, var=var, norm=jnp.sqrt(norm_sq))
+
+
+def exact_device_stats(
+    per_device_grad: Callable,
+    params,
+    n_devices: int,
+) -> tuple[GradStats, object]:
+    """Faithful path: sequential per-device backwards, accumulating stats
+    AND the stacked flat gradients are never materialized — only the stats
+    and (optionally) a caller-weighted running sum.
+
+    Args:
+      per_device_grad: (params, i) -> grads pytree for FL device i.
+    Returns (stats, grads_by_device) where grads_by_device is a function
+    i -> grads (recomputed; use sketch mode to avoid this cost).
+    """
+
+    def one(i):
+        g = per_device_grad(params, i)
+        leaves = jax.tree.leaves(g)
+        total = sum(int(jnp.size(l)) for l in leaves)
+        s = sum(jnp.sum(l.astype(jnp.float32)) for l in leaves)
+        sq = sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves)
+        mean = s / total
+        return mean, jnp.maximum(sq / total - mean**2, 0.0), jnp.sqrt(sq)
+
+    means, variances, norms = jax.lax.map(one, jnp.arange(n_devices))
+    return GradStats(mean=means, var=variances, norm=norms), None

@@ -1,0 +1,8 @@
+from repro.data.partition import partition_noniid_shards
+from repro.data.synthetic import make_classification_dataset, make_token_dataset
+
+__all__ = [
+    "make_classification_dataset",
+    "make_token_dataset",
+    "partition_noniid_shards",
+]

@@ -1,0 +1,79 @@
+"""Seeded synthetic datasets (offline container — see DESIGN.md §7).
+
+``mnist_like``: 784-dim, 10 classes — stands in for MNIST (logistic regression,
+convex case). ``cifar_like``: 3×32×32, 10 classes — stands in for CIFAR-10
+(CNN, non-convex case). Classes are Gaussian clusters around random prototype
+directions with per-class structure so that (a) a linear model is learnable
+but not trivially, and (b) non-IID label sharding produces genuinely
+heterogeneous local gradients.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def make_classification_dataset(
+    kind: str,
+    n_samples: int,
+    key: jax.Array,
+    n_classes: int = 10,
+    noise: float = 0.8,
+    proto_seed: int = 42,
+):
+    """Returns (features, labels) with features flattened for 'mnist_like'
+    and shaped (n, 32, 32, 3) for 'cifar_like'.
+
+    Class prototypes are fixed by ``proto_seed`` (NOT by ``key``) so that
+    train/test splits drawn with different sample keys share one underlying
+    distribution.
+    """
+    if kind == "mnist_like":
+        dim = 784
+        shape = (dim,)
+    elif kind == "cifar_like":
+        dim = 32 * 32 * 3
+        shape = (32, 32, 3)
+    else:
+        raise ValueError(kind)
+
+    _, k_label, k_noise, k_scale = jax.random.split(key, 4)
+    k_proto = jax.random.PRNGKey(proto_seed)
+    prototypes = jax.random.normal(k_proto, (n_classes, dim)) / jnp.sqrt(dim)
+    labels = jax.random.randint(k_label, (n_samples,), 0, n_classes)
+    eps = jax.random.normal(k_noise, (n_samples, dim)) / jnp.sqrt(dim)
+    # per-sample scale variation (mimics stroke-thickness / luminance variety)
+    scale = 1.0 + 0.3 * jax.random.normal(k_scale, (n_samples, 1))
+    feats = scale * (prototypes[labels] + noise * eps)
+    feats = feats.reshape((n_samples,) + shape)
+    return feats.astype(jnp.float32), labels.astype(jnp.int32)
+
+
+def make_token_dataset(
+    n_sequences: int,
+    seq_len: int,
+    vocab_size: int,
+    key: jax.Array,
+    order: int = 2,
+):
+    """Synthetic LM corpus: a random order-``order`` Markov chain over a small
+    effective vocabulary slice, so next-token prediction has learnable signal."""
+    eff_vocab = min(vocab_size, 256)
+    k_table, k_init, k_walk = jax.random.split(key, 3)
+    # Sparse-ish transition logits
+    table = jax.random.gumbel(k_table, (eff_vocab, eff_vocab))
+    table = jnp.where(table > 1.0, table, -1e9)  # keep only likely transitions
+    init = jax.random.randint(k_init, (n_sequences,), 0, eff_vocab)
+
+    def step(tok, k):
+        nxt = jax.random.categorical(k, table[tok])
+        return nxt, nxt
+
+    keys = jax.random.split(k_walk, seq_len - 1)
+
+    def walk(tok0, i):
+        _, seq = jax.lax.scan(step, tok0, jax.vmap(lambda k: jax.random.fold_in(k, i))(keys))
+        return jnp.concatenate([tok0[None], seq])
+
+    toks = jax.vmap(walk)(init, jnp.arange(n_sequences))
+    return toks.astype(jnp.int32)

@@ -1,0 +1,7 @@
+from repro.kernels.aircomp.ops import (
+    aircomp_aggregate_fused,
+    aircomp_fused,
+    aircomp_fused_ref,
+)
+
+__all__ = ["aircomp_aggregate_fused", "aircomp_fused", "aircomp_fused_ref"]

@@ -1,0 +1,29 @@
+"""Public op: fused AirComp aggregation with automatic backend dispatch.
+
+``use_pallas='auto'`` runs the Pallas kernel on TPU, the pure-jnp reference
+on CPU (interpret-mode execution is for tests, not production CPU use).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.aircomp.kernel import aircomp_fused
+from repro.kernels.aircomp.ref import aircomp_fused_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def aircomp_aggregate_fused(
+    g, coeff, m_g, v_g, a, z, *, use_pallas: str | bool = "auto", tile_d: int = 512
+):
+    """Fused Eq. 5→8: ŷ = Σ_i coeff_i·(g_i − M_g) + sqrt(V_g)/a·z + M_g."""
+    if use_pallas == "auto":
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return aircomp_fused(g, coeff, m_g, v_g, a, z, tile_d=tile_d)
+    return aircomp_fused_ref(g, coeff, m_g, v_g, a, z)
+
+
+__all__ = ["aircomp_aggregate_fused", "aircomp_fused", "aircomp_fused_ref"]

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the fused AirComp aggregation kernel.
+
+Computes the full Eq. 5→8 physical signal chain in one expression:
+
+    ŷ[d] = Σ_i mask_i · ρ_i · (g_i[d] − M_g) + (sqrt(V_g)/a) · z[d] + M_g·Σ_i mask_i·ρ_i·0 ...
+
+More precisely (matching core/aircomp.aircomp_aggregate simulate_physical=True
+with real-valued effective channel after Lemma-1 inversion):
+
+    s_i[d]  = (g_i[d] − M_g) / sqrt(V_g)                       (Eq. 5)
+    y~[d]   = Σ_i mask_i · ρ_i · a · s_i[d] + z[d]             (Eq. 7, b_i h_i = ρ_i a)
+    ŷ[d]    = sqrt(V_g)/a · y~[d] + M_g                        (Eq. 8)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def aircomp_fused_ref(g, coeff, m_g, v_g, a, z):
+    """Args:
+      g:     (n_devices, D) stacked local gradients
+      coeff: (n_devices,)   mask_i · ρ_i
+      m_g, v_g, a: scalars  (global mean/variance, denoise scalar)
+      z:     (D,)           receiver noise ~ N(0, σ_z²)
+    Returns ŷ: (D,)
+    """
+    sqrt_vg = jnp.sqrt(jnp.maximum(v_g, 1e-30))
+    s = (g - m_g) / sqrt_vg                      # Eq. 5
+    y_tilde = jnp.sum(coeff[:, None] * a * s, axis=0) + z  # Eq. 7
+    return sqrt_vg / a * y_tilde + m_g           # Eq. 8

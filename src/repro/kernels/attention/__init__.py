@@ -1,0 +1,3 @@
+from repro.kernels.attention.ops import attention, flash_attention, mha_ref
+
+__all__ = ["attention", "flash_attention", "mha_ref"]

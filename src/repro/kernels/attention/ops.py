@@ -1,0 +1,31 @@
+"""Public op: flash attention with backend dispatch."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels.attention.kernel import flash_attention
+from repro.kernels.attention.ref import mha_ref
+
+
+def attention(
+    q, k, v, *,
+    causal: bool = True,
+    sliding_window: Optional[int] = None,
+    q_offset: int = 0,
+    use_pallas: str | bool = "auto",
+    block_q: int = 256,
+    block_k: int = 256,
+):
+    if use_pallas == "auto":
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        return flash_attention(
+            q, k, v, causal=causal, sliding_window=sliding_window,
+            q_offset=q_offset, block_q=block_q, block_k=block_k,
+        )
+    return mha_ref(q, k, v, causal=causal, sliding_window=sliding_window, q_offset=q_offset)
+
+
+__all__ = ["attention", "flash_attention", "mha_ref"]

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the flash-attention kernel: plain masked softmax
+attention with GQA broadcast, causal and sliding-window masks."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def mha_ref(
+    q: jnp.ndarray,  # (b, sq, h, dh)
+    k: jnp.ndarray,  # (b, sk, kv, dh)
+    v: jnp.ndarray,  # (b, sk, kv, dh)
+    *,
+    causal: bool = True,
+    sliding_window: Optional[int] = None,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """Returns (b, sq, h, dh). Query position i attends keys j with
+    j ≤ i + q_offset (causal) and j > i + q_offset − window (sliding)."""
+    b, sq, h, dh = q.shape
+    kv = k.shape[2]
+    rep = h // kv
+    qg = q.reshape(b, sq, kv, rep, dh)
+    scores = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k) / math.sqrt(dh)
+
+    qi = jnp.arange(sq)[:, None] + q_offset
+    kj = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask = mask & (kj <= qi)
+    if sliding_window is not None:
+        mask = mask & (kj > qi - sliding_window)
+    scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", probs, v)
+    return out.reshape(b, sq, h, dh)

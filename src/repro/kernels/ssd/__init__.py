@@ -1,0 +1,3 @@
+from repro.kernels.ssd.ops import ssd, ssd_chunked_ref, ssd_naive, ssd_pallas
+
+__all__ = ["ssd", "ssd_pallas", "ssd_chunked_ref", "ssd_naive"]

@@ -1,0 +1,93 @@
+"""Mamba2 SSD chunked scan — Pallas TPU kernel (arXiv:2405.21060).
+
+State-space duality splits the linear recurrence into:
+  * intra-chunk: a (q × q) masked-decay "attention" — MXU matmuls;
+  * inter-chunk: an exponential-decay state recurrence carried ACROSS grid
+    steps in a VMEM scratch accumulator (the TPU grid is executed
+    sequentially, which is exactly the dependency order we need).
+
+Grid: (batch, n_chunks) — chunks innermost so the state scratch carries the
+recurrence; the batch dimension resets it at chunk 0.
+
+Block shapes (per grid step, all VMEM):
+  xdt (1, q, h, p) · la (1, q, h) · B/C (1, q, n) · state scratch (h, n, p)
+
+MXU alignment: q (chunk) is a multiple of 128 in production (256 default);
+h·p and n are multiples of 128 for the einsums that hit the MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(xdt_ref, la_ref, b_ref, c_ref, y_ref, state_ref):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _reset():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    xdt = xdt_ref[0].astype(jnp.float32)  # (q, h, p)
+    la = la_ref[0].astype(jnp.float32)    # (q, h)
+    B = b_ref[0].astype(jnp.float32)      # (q, n)
+    C = c_ref[0].astype(jnp.float32)      # (q, n)
+    q = xdt.shape[0]
+
+    La = jnp.cumsum(la, axis=0)  # (q, h) inclusive cumulative log decay
+
+    # ---- intra-chunk: masked-decay attention (MXU) ----------------------
+    G = C @ B.T  # (q, q)
+    diff = La[:, None, :] - La[None, :, :]  # (q, k, h)
+    mask = jnp.tril(jnp.ones((q, q), dtype=bool))
+    diff = jnp.where(mask[:, :, None], diff, -jnp.inf)
+    M = G[:, :, None] * jnp.exp(diff)  # (q, k, h)
+    y_intra = jnp.einsum("qkh,khp->qhp", M, xdt)
+
+    # ---- inter-chunk: contribution of the carried state ------------------
+    state = state_ref[...].astype(jnp.float32)  # (h, n, p)
+    y_inter = jnp.einsum("qn,hnp,qh->qhp", C, state, jnp.exp(La))
+
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # ---- state update: S ← exp(La_q)·S + Σ_t exp(La_q − La_t)·B_t ⊗ x_t --
+    seg = jnp.exp(La[-1:, :] - La)  # (q, h) decay from t to chunk end
+    new_contrib = jnp.einsum("qh,qn,qhp->hnp", seg, B, xdt)
+    chunk_decay = jnp.exp(La[-1])[:, None, None]  # (h, 1, 1)
+    state_ref[...] = (chunk_decay * state + new_contrib).astype(state_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_pallas(
+    xdt: jnp.ndarray,  # (b, s, h, p)
+    la: jnp.ndarray,   # (b, s, h)
+    B: jnp.ndarray,    # (b, s, n)
+    C: jnp.ndarray,    # (b, s, n)
+    *,
+    chunk: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Chunked SSD scan. Returns y: (b, s, h, p). Requires s % chunk == 0."""
+    b, s, h, p = xdt.shape
+    n = B.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    return pl.pallas_call(
+        _ssd_kernel,
+        grid=(b, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, h, p), lambda bi, ci: (bi, ci, 0, 0)),
+            pl.BlockSpec((1, chunk, h), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, ci: (bi, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, h, p), lambda bi, ci: (bi, ci, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s, h, p), xdt.dtype),
+        scratch_shapes=[pltpu.VMEM((h, n, p), jnp.float32)],
+        interpret=interpret,
+    )(xdt, la, B, C)

@@ -1,0 +1,19 @@
+"""Public op: chunked SSD scan with backend dispatch."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssd.kernel import ssd_pallas
+from repro.kernels.ssd.ref import ssd_chunked_ref, ssd_naive
+
+
+def ssd(xdt, la, B, C, *, chunk: int = 256, use_pallas: str | bool = "auto"):
+    """y = SSD(xdt, la, B, C). Pallas on TPU, chunked jnp elsewhere."""
+    if use_pallas == "auto":
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        return ssd_pallas(xdt, la, B, C, chunk=chunk)
+    return ssd_chunked_ref(xdt, la, B, C, chunk)
+
+
+__all__ = ["ssd", "ssd_pallas", "ssd_chunked_ref", "ssd_naive"]

@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for the Mamba2 SSD kernel.
+
+``ssd_naive`` materializes the full sequential recurrence — the ground truth:
+
+    S_t = exp(la_t)·S_{t-1} + B_t ⊗ x_t     (state: (h, n, p))
+    y_t = C_t · S_t
+
+``ssd_chunked_ref`` re-exports the chunked jnp implementation from
+models/layers.py (itself validated against ``ssd_naive``); the Pallas kernel
+is checked against both.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ssd_chunked as ssd_chunked_ref  # noqa: F401
+
+
+def ssd_naive(xdt, la, B, C):
+    """Sequential recurrence oracle.
+
+    Args:
+      xdt: (b, s, h, p) dt-scaled inputs
+      la:  (b, s, h)    log decay (≤ 0)
+      B:   (b, s, n)    input projection (shared across heads)
+      C:   (b, s, n)    output projection
+    Returns y: (b, s, h, p)
+    """
+    b, s, h, p = xdt.shape
+    n = B.shape[-1]
+
+    def step(state, inp):
+        x_t, la_t, b_t, c_t = inp
+        # state: (b, h, n, p)
+        state = jnp.exp(la_t)[..., None, None] * state + jnp.einsum(
+            "bn,bhp->bhnp", b_t, x_t
+        )
+        y_t = jnp.einsum("bn,bhnp->bhp", c_t, state)
+        return state, y_t
+
+    init = jnp.zeros((b, h, n, p), xdt.dtype)
+    _, ys = jax.lax.scan(
+        step,
+        init,
+        (
+            jnp.moveaxis(xdt, 1, 0),
+            jnp.moveaxis(la, 1, 0),
+            jnp.moveaxis(B, 1, 0),
+            jnp.moveaxis(C, 1, 0),
+        ),
+    )
+    return jnp.moveaxis(ys, 0, 1)

@@ -1,0 +1,59 @@
+"""Batched serving driver: prefill once, decode autoregressively.
+
+The KV cache is sharded batch×("pod","data"), sequence×"model"
+(flash-decoding style distributed attention — DESIGN.md §5); the decode loop
+reuses one compiled serve_step with a donated cache.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.steps import build_prefill_step, build_serve_step
+from repro.models import api
+from repro.models.config import INPUT_SHAPES, InputShape, ModelConfig
+
+
+class Server:
+    def __init__(self, cfg: ModelConfig, shape: InputShape, mesh, dtype=jnp.bfloat16):
+        self.cfg, self.shape, self.mesh, self.dtype = cfg, shape, mesh, dtype
+        self.serve_bundle = build_serve_step(cfg, shape, mesh, dtype)
+
+    def load_params(self, params):
+        return jax.device_put(params, self.serve_bundle.in_shardings["params"])
+
+    def decode(self, params, first_token, cache, start_t: int, n_tokens: int):
+        """Greedy decode ``n_tokens`` tokens from a prefilled cache."""
+        tok = first_token
+        toks = [np.asarray(tok)]
+        cache = jax.device_put(cache, self.serve_bundle.in_shardings["cache"])
+        for i in range(n_tokens - 1):
+            tok, cache = self.serve_bundle.fn(
+                params, tok, cache, jnp.asarray(start_t + i, jnp.int32)
+            )
+            toks.append(np.asarray(tok))
+        return np.concatenate(toks, axis=1), cache
+
+
+def serve_demo(cfg: ModelConfig, mesh, batch: dict, n_tokens: int = 16,
+               shape_name: str = "decode_32k", dtype=jnp.bfloat16, seed: int = 0):
+    """End-to-end: init params → prefill → batched greedy decode."""
+    shape = INPUT_SHAPES[shape_name]
+    params = api.model_init(cfg, jax.random.PRNGKey(seed))
+    t0 = time.time()
+    logits, cache = api.model_prefill(params, cfg, batch, dtype)
+    first = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    t_prefill = time.time() - t0
+
+    server = Server(cfg, shape, mesh, dtype)
+    params = server.load_params(params)
+    t0 = time.time()
+    toks, _ = server.decode(
+        params, first, cache, start_t=batch["tokens"].shape[1], n_tokens=n_tokens
+    )
+    t_decode = time.time() - t0
+    return toks, {"prefill_s": t_prefill, "decode_s": t_decode,
+                  "tok_per_s": n_tokens * toks.shape[0] / max(t_decode, 1e-9)}

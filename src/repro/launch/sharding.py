@@ -1,0 +1,266 @@
+"""Sharding rules: parameters (FSDP + tensor parallel), activations, caches.
+
+Rules (DESIGN.md §5):
+  * params: last dim divisible by |model| → "model" (tensor parallel);
+    largest remaining dim divisible by |fsdp| → ("pod","data") (FSDP).
+    Leaves under a scanned layer stack skip their leading layer dim.
+  * activations/batches: batch dim over ("pod","data") when divisible.
+  * KV caches: batch over ("pod","data"), *sequence* over "model"
+    (flash-decoding style — uniform across archs regardless of kv_heads).
+  * SSM state: batch over ("pod","data"), heads over "model".
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import batch_axes, batch_ways
+from repro.models.cache import AttnCache, EncDecCache, HybridCache, SSMCache
+
+MIN_SHARD_SIZE = 4096  # don't bother sharding tiny leaves
+
+
+def _fsdp_axes(mesh):
+    return batch_axes(mesh)
+
+
+def param_spec(shape, mesh, skip_leading: int = 0) -> P:
+    spec: list = [None] * len(shape)
+    dims = list(range(skip_leading, len(shape)))
+    if not dims or int(np.prod([shape[d] for d in dims])) < MIN_SHARD_SIZE:
+        return P(*spec)
+
+    msize = mesh.shape["model"]
+    fax = _fsdp_axes(mesh)
+    fsize = batch_ways(mesh)
+
+    # tensor-parallel: LAST eligible dim over "model"
+    model_dim: Optional[int] = None
+    for d in reversed(dims):
+        if shape[d] % msize == 0 and shape[d] >= msize:
+            spec[d] = "model"
+            model_dim = d
+            break
+
+    # FSDP: largest remaining dim over ("pod","data")
+    cands = [
+        d for d in dims
+        if d != model_dim and shape[d] % fsize == 0 and shape[d] >= fsize
+    ]
+    if cands:
+        d = max(cands, key=lambda i: shape[i])
+        spec[d] = fax if len(fax) > 1 else fax[0]
+    return P(*spec)
+
+
+_STACKED_KEYS = ("layers", "enc_layers")
+
+
+def _is_stacked(path) -> bool:
+    return any(
+        getattr(k, "key", None) in _STACKED_KEYS for k in path
+    )
+
+
+def _is_moe(path) -> bool:
+    return any(getattr(k, "key", None) == "moe" for k in path)
+
+
+def _path_leaf_name(path) -> str:
+    last = path[-1]
+    return str(getattr(last, "key", getattr(last, "name", "")))
+
+
+def moe_strategy(cfg, shape, mesh) -> str | None:
+    """"ep" (experts over "model") vs "dp" (groups over "model", expert
+    weights gathered): EP's scatter/gather lowers to per-layer all-reduces
+    of the FULL token tensor over the model axis (~23 GB/layer at olmoe
+    train scale — §Perf iteration 8), so EP only pays off when the expert
+    weights are larger than the dispatched token traffic (big experts or
+    small token counts, e.g. decode)."""
+    if cfg.moe is None:
+        return None
+    msize = mesh.shape["model"]
+    moe = cfg.moe
+    if moe.n_experts % msize:
+        return "dp"
+    if shape.kind == "train":
+        # measured (§Perf iteration 8): in the backward pass DP-mode's
+        # gathered expert weights interact with gradient accumulation far
+        # worse than EP's token all-reduces — keep EP for training
+        return "ep"
+    n_tok = shape.global_batch * (shape.seq_len if shape.kind == "prefill" else 1)
+    token_bytes = n_tok * moe.top_k * cfg.d_model * 4 * 2
+    weight_bytes = 3 * moe.n_experts * cfg.d_model * moe.d_ff_expert * 2 * 3
+    return "dp" if weight_bytes < token_bytes else "ep"
+
+
+def params_pspecs(params_shape, mesh, moe_mode: str | None = "ep"):
+    """PartitionSpec pytree for a params (shape) pytree.
+
+    Special cases: the embedding table shards VOCAB over "model" and d_model
+    over FSDP (and lm_head the transpose) — so the tied/untied output head
+    contracts into vocab-sharded logits locally. The generic rule (last dim
+    → "model") would instead produce a full-vocab (B, chunk, V) all-reduce
+    over the model axis (~10 GB/device at 150k vocab; §Perf iteration 1).
+    MoE expert weights follow ``moe_mode`` ("ep": E over "model"; "dp":
+    model-replicated, FSDP on the largest dim — see moe_strategy).
+    """
+    msize = mesh.shape["model"]
+    fax = _fsdp_axes(mesh)
+    fsize = batch_ways(mesh)
+    f_axes = fax if len(fax) > 1 else fax[0]
+
+    def leaf_spec(path, leaf):
+        name = _path_leaf_name(path)
+        shape = leaf.shape
+        if name == "embed" and len(shape) == 2:
+            v_ok = shape[0] % msize == 0
+            d_ok = shape[1] % fsize == 0
+            return P("model" if v_ok else None, f_axes if d_ok else None)
+        if name == "lm_head" and len(shape) == 2:
+            d_ok = shape[0] % fsize == 0
+            v_ok = shape[1] % msize == 0
+            return P(f_axes if d_ok else None, "model" if v_ok else None)
+        if (
+            name in ("w_gate", "w_in", "w_out") and len(shape) == 4
+            and _is_moe(path)
+        ):
+            # (L, E, D, F): "ep" → E over "model"; "dp" → model-replicated
+            # (gathered per layer), FSDP on the bigger of D/F either way
+            e_ok = moe_mode == "ep" and shape[1] % msize == 0
+            d_dim = 2 if shape[2] >= shape[3] else 3
+            spec = [None, "model" if e_ok else None, None, None]
+            if shape[d_dim] % fsize == 0:
+                spec[d_dim] = f_axes
+            return P(*spec)
+        return param_spec(shape, mesh, skip_leading=1 if _is_stacked(path) else 0)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params_shape)
+
+
+def _batched(shape_b, mesh) -> P | tuple:
+    """Batch-dim spec component: over ("pod","data") when divisible."""
+    fax = _fsdp_axes(mesh)
+    if shape_b % batch_ways(mesh) == 0:
+        return fax if len(fax) > 1 else fax[0]
+    # try data only
+    if "data" in mesh.axis_names and shape_b % mesh.shape["data"] == 0:
+        return "data"
+    return None
+
+
+def batch_pspecs(batch_struct, mesh):
+    """Specs for a train/prefill batch dict {tokens, [embeds|frames]}."""
+
+    def spec(leaf):
+        bspec = _batched(leaf.shape[0], mesh)
+        return P(bspec, *([None] * (len(leaf.shape) - 1)))
+
+    return jax.tree.map(spec, batch_struct)
+
+
+def _seq_spec(seq_len, mesh):
+    msize = mesh.shape["model"]
+    return "model" if (seq_len % msize == 0 and seq_len >= msize) else None
+
+
+def cache_pspecs(cache_struct, mesh):
+    """Specs for decode caches (AttnCache / SSMCache / Hybrid / EncDec)."""
+    msize = mesh.shape["model"]
+
+    def attn_specs(c: AttnCache):
+        L, b, s, kv, dh = c.k.shape
+        bs = _batched(b, mesh)
+        ss = _seq_spec(s, mesh)
+        kvspec = P(None, bs, ss, None, None)
+        return AttnCache(k=kvspec, v=kvspec, pos=P(None))
+
+    def ssm_specs(c: SSMCache):
+        L, b, h, n, p = c.state.shape
+        bs = _batched(b, mesh)
+        hs = "model" if h % msize == 0 else None
+        cch = c.conv.shape[-1]
+        cs = "model" if cch % msize == 0 else None
+        return SSMCache(
+            state=P(None, bs, hs, None, None),
+            conv=P(None, bs, None, cs),
+        )
+
+    if isinstance(cache_struct, HybridCache):
+        return HybridCache(
+            ssm=ssm_specs(cache_struct.ssm), attn=attn_specs(cache_struct.attn)
+        )
+    if isinstance(cache_struct, EncDecCache):
+        L, b, s_enc, kv, dh = cache_struct.cross_k.shape
+        bs = _batched(b, mesh)
+        xs = P(None, bs, _seq_spec(s_enc, mesh), None, None)
+        return EncDecCache(
+            self_attn=attn_specs(cache_struct.self_attn), cross_k=xs, cross_v=xs
+        )
+    if isinstance(cache_struct, SSMCache):
+        return ssm_specs(cache_struct)
+    return attn_specs(cache_struct)
+
+
+def activation_specs(cfg, shape, mesh) -> dict:
+    """NamedShardings for the named activation cut-points (layers.constrain).
+
+    residual: attention-family archs shard the SEQUENCE over "model"
+    (Megatron-style sequence parallelism — remat-saved (B,S,D) carries
+    otherwise replicate 16× over the model axis and blow HBM); SSM/hybrid
+    archs shard d_model instead (the SSD chunk scan iterates the sequence).
+    moe_buffer: expert dim over "model" (expert parallelism).
+    Decode steps get only moe_buffer (S=1 has no sequence to shard).
+    """
+    from jax.sharding import NamedSharding
+
+    msize = mesh.shape["model"]
+    bt = _batched(shape.global_batch, mesh)
+    out = {}
+    if shape.kind in ("train", "prefill"):
+        dspec = "model" if cfg.d_model % msize == 0 else None
+        if cfg.arch_type in ("ssm", "hybrid"):
+            out["residual"] = P(bt, None, dspec)
+        else:
+            sspec = "model" if shape.seq_len % msize == 0 else None
+            out["residual"] = P(bt, sspec, None)
+        out["ce_input"] = P(bt, None, dspec)
+    if cfg.moe is not None:
+        from repro.models.layers import _moe_group_size
+
+        if shape.kind in ("train", "prefill"):
+            n_tok = shape.global_batch * shape.seq_len
+        else:
+            n_tok = shape.global_batch
+        gs = _moe_group_size(n_tok)
+        n_groups = n_tok // gs
+        ways = batch_ways(mesh)
+        mode = moe_strategy(cfg, shape, mesh)
+        if mode == "dp":
+            # groups over (batch axes × "model") — dispatch fully local
+            all_ax = tuple(a for a in mesh.axis_names)
+            full = ways * msize
+            if n_groups % full == 0 and n_groups >= full:
+                gspec = all_ax
+            elif n_groups % ways == 0 and n_groups >= ways:
+                gspec = bt
+            else:
+                gspec = None
+            out["moe_buffer"] = P(gspec, None, None, None)
+        else:
+            gspec = bt if (n_groups % ways == 0 and n_groups >= ways) else None
+            espec = "model" if cfg.moe.n_experts % msize == 0 else None
+            out["moe_buffer"] = P(gspec, espec, None, None)
+    return {k: NamedSharding(mesh, v) for k, v in out.items()}
+
+
+def to_shardings(pspecs, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), pspecs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

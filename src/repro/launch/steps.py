@@ -1,0 +1,428 @@
+"""Sharded step builders: train_step / prefill_step / serve_step / stats_step.
+
+Each builder returns (jitted_fn, arg_structs, in_shardings, out_shardings)
+so the same object serves the real driver (launch/train.py, launch/serve.py)
+and the multi-pod dry-run (.lower(**structs).compile()).
+
+PO-FL at production scale (DESIGN.md §5):
+  * FL device = one (pod × data) slice; n_fl = |pod|·|data|.
+  * The AirComp weighted superposition Σ_i c_i·g_i is realized as per-example
+    loss weights c_dev(e)·n_fl — the global data-parallel mean gradient then
+    *equals* the PO-FL aggregate (tested against the reference in
+    tests/test_distributed.py).
+  * Receiver noise (Eq. 16): ν·z added to every gradient leaf post-backward,
+    ν = sqrt(V_g)/a computed host-side from the round's schedule/channel.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.launch.mesh import batch_ways
+from repro.launch.sharding import (
+    activation_specs,
+    batch_pspecs,
+    cache_pspecs,
+    moe_strategy,
+    params_pspecs,
+    to_shardings,
+)
+from repro.models import layers as Lyr
+from repro.models import api
+from repro.models.config import InputShape, ModelConfig
+from repro.optim.optimizers import OptState, Optimizer
+
+
+class StepBundle(NamedTuple):
+    fn: object            # jitted function
+    arg_structs: dict     # kwargs of ShapeDtypeStructs for .lower(**...)
+    in_shardings: object
+    out_shardings: object
+
+
+def _ns(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def params_structs(cfg: ModelConfig):
+    return jax.eval_shape(lambda: api.model_init(cfg, jax.random.PRNGKey(0)))
+
+
+def opt_structs(optimizer: Optimizer, p_structs):
+    return jax.eval_shape(optimizer.init, p_structs)
+
+
+def opt_pspecs(p_specs, o_structs):
+    """Optimizer state mirrors parameter sharding (FSDP: mu/nu shard with p)."""
+    mu = p_specs if o_structs.mu is not None else None
+    nu = p_specs if o_structs.nu is not None else None
+    return OptState(step=P(), mu=mu, nu=nu)
+
+
+
+def _layer_param_shardings(p_specs, mesh, key: str):
+    """Per-layer (leading layer dim stripped) NamedSharding tree for the
+    scanned parameter stack ``key`` — installed as activation sharding so
+    scan bodies can constrain their parameter slice (and its cotangent)."""
+    if not isinstance(p_specs, dict) or key not in p_specs:
+        return None
+    def strip(spec):
+        return NamedSharding(mesh, P(*tuple(spec)[1:]))
+    return jax.tree.map(strip, p_specs[key], is_leaf=lambda x: isinstance(x, P))
+
+# --------------------------------------------------------------------------
+# train
+# --------------------------------------------------------------------------
+
+
+def auto_microbatches(cfg: ModelConfig, shape: InputShape, mesh,
+                      budget_gib: float = 4.0) -> int:
+    """Gradient-accumulation factor: split the global batch until the
+    remat-saved residual carries (n_layers · B·S·D · 2 bytes / chips) fit
+    ``budget_gib`` per device. Powers of two; keeps ≥1 example per FL slice.
+
+    Budget is calibrated for the TPU target (bf16 carries; 16 GiB HBM minus
+    params/optimizer/transients). Microbatches multiply ALL weight-gradient
+    and weight-gather collectives (§Perf iteration 7), so m must be as small
+    as memory allows — the CPU dry-run's f32-upcast artifacts must NOT force
+    m upward."""
+    n_chips = mesh.devices.size
+    n_fl = batch_ways(mesh)
+    n_layers = cfg.n_layers + (
+        cfg.encdec.n_enc_layers if cfg.encdec is not None else 0
+    )
+    act_gib = (
+        n_layers * shape.global_batch * shape.seq_len * cfg.d_model * 2
+        / n_chips / 2**30
+    )
+    m = 1
+    while act_gib / m > budget_gib and shape.global_batch // (m * 2) >= n_fl:
+        m *= 2
+    return m
+
+
+def build_train_step(
+    cfg: ModelConfig,
+    shape: InputShape,
+    mesh,
+    optimizer: Optimizer,
+    dtype=jnp.bfloat16,
+    remat: bool = True,
+    aircomp_noise: bool = True,
+    n_microbatches: int | None = None,
+) -> StepBundle:
+    n_fl = batch_ways(mesh)
+    specs = configs.input_specs(cfg, shape, dtype)
+    batch_struct = specs["batch"]
+    b = batch_struct["tokens"].shape[0]
+    assert b % n_fl == 0, (b, n_fl)
+    n_micro = n_microbatches or auto_microbatches(cfg, shape, mesh)
+    assert b % (n_micro * n_fl) == 0, (b, n_micro, n_fl)
+
+    p_structs = params_structs(cfg)
+    o_structs = opt_structs(optimizer, p_structs)
+    p_specs = params_pspecs(p_structs, mesh, moe_strategy(cfg, shape, mesh))
+    o_specs = opt_pspecs(p_specs, o_structs)
+    b_specs = batch_pspecs(batch_struct, mesh)
+    from repro.launch.sharding import _batched  # noqa: PLC0415
+
+    # CE logits chunks MUST shard the vocab over "model" — replicated they
+    # cost ~10 GB/device at 150k vocab (EXPERIMENTS.md §Perf iteration 1).
+    logits_sh = _ns(mesh, P(_batched(b, mesh), None, "model"))
+
+    act_sh = activation_specs(cfg, shape, mesh)
+    for k_, n_ in (("layers", "layer_params"), ("enc_layers", "enc_layer_params")):
+        lsh = _layer_param_shardings(p_specs, mesh, k_)
+        if lsh is not None:
+            act_sh[n_] = lsh
+
+    def train_step(params, opt_state, batch, coeffs, noise_amp, noise_key):
+        # per-example weights: examples of FL device d get c_d · n_fl so the
+        # global mean gradient equals Σ_d c_d · g_d (the PO-FL aggregate).
+        w = jnp.repeat(coeffs * n_fl, b // n_fl, total_repeat_length=b)
+
+        def loss_fn(p, mb, mw):
+            # mixed precision: master weights stay fp32 in the optimizer;
+            # compute weights are cast ONCE here so the per-layer FSDP
+            # all-gathers move bf16 (2×) — grads flow back through the cast
+            # and arrive fp32 (§Perf iteration 5)
+            p = jax.tree.map(
+                lambda x: x.astype(dtype) if x.dtype == jnp.float32 else x, p
+            )
+            return api.model_loss(
+                p, cfg, mb, dtype=dtype, remat=remat, loss_weights=mw,
+                logits_sharding=logits_sh,
+            )
+
+        p_shardings = jax.tree.map(lambda s: _ns(mesh, s), p_specs,
+                                   is_leaf=lambda x: isinstance(x, P))
+
+        with Lyr.activation_shardings(**act_sh):
+            if n_micro == 1:
+                (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, batch, w
+                )
+                grads = jax.lax.with_sharding_constraint(grads, p_shardings)
+            else:
+                # gradient accumulation: interleave so every microbatch holds
+                # b/(m·n_fl) examples of EVERY FL device (batch is laid out
+                # FL-device-major) — the mean of microbatch gradients is then
+                # exactly the full-batch PO-FL aggregate.
+                def to_micro(x):
+                    per = b // n_fl
+                    x = x.reshape((n_fl, n_micro, per // n_micro) + x.shape[1:])
+                    return jnp.moveaxis(x, 1, 0).reshape(
+                        (n_micro, b // n_micro) + x.shape[3:]
+                    )
+
+                mbs = jax.tree.map(to_micro, batch)
+                mws = to_micro(w)
+
+                def mb_step(acc, inp):
+                    mb, mw = inp
+                    (l, a), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                        params, mb, mw
+                    )
+                    # FSDP-shard the per-microbatch gradients BEFORE the
+                    # accumulate: unconstrained, XLA keeps the accumulator
+                    # replicated and emits full-tensor f32 all-reduces
+                    # (9.9 GiB/layer at 123B — §Perf iteration 6)
+                    g = jax.lax.with_sharding_constraint(g, p_shardings)
+                    acc_g, acc_l, acc_a = acc
+                    return (
+                        jax.tree.map(jnp.add, acc_g, g),
+                        acc_l + l, acc_a + a,
+                    ), None
+
+                zero_g = jax.lax.with_sharding_constraint(
+                    jax.tree.map(
+                        lambda x: jnp.zeros(x.shape, jnp.float32), params
+                    ),
+                    p_shardings,
+                )
+                (g_sum, l_sum, a_sum), _ = jax.lax.scan(
+                    mb_step, (zero_g, jnp.zeros(()), jnp.zeros(())), (mbs, mws)
+                )
+                grads = jax.tree.map(lambda x: x / n_micro, g_sum)
+                loss, aux = l_sum / n_micro, a_sum / n_micro
+
+        if aircomp_noise:
+            # Eq. 16 receiver noise: ν·z on the aggregated gradient
+            leaves, treedef = jax.tree.flatten(grads)
+            keys = jax.random.split(noise_key, len(leaves))
+            leaves = [
+                l + noise_amp.astype(l.dtype)
+                * jax.random.normal(k, l.shape, l.dtype)
+                for l, k in zip(leaves, keys)
+            ]
+            grads = jax.tree.unflatten(treedef, leaves)
+
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        return new_params, new_opt, loss
+
+    arg_structs = dict(
+        params=p_structs,
+        opt_state=o_structs,
+        batch=batch_struct,
+        coeffs=jax.ShapeDtypeStruct((n_fl,), jnp.float32),
+        noise_amp=jax.ShapeDtypeStruct((), jnp.float32),
+        noise_key=jax.ShapeDtypeStruct((2,), jnp.uint32),
+    )
+    in_sh = dict(
+        params=to_shardings(p_specs, mesh),
+        opt_state=jax.tree.map(
+            lambda s: _ns(mesh, s), o_specs,
+            is_leaf=lambda x: isinstance(x, P),
+        ),
+        batch=to_shardings(b_specs, mesh),
+        coeffs=_ns(mesh, P()),
+        noise_amp=_ns(mesh, P()),
+        noise_key=_ns(mesh, P()),
+    )
+    out_sh = (in_sh["params"], in_sh["opt_state"], _ns(mesh, P()))
+    fn = jax.jit(
+        train_step,
+        in_shardings=tuple(in_sh.values()),
+        out_shardings=out_sh,
+        donate_argnums=(0, 1),
+    )
+    return StepBundle(fn, arg_structs, in_sh, out_sh)
+
+
+# --------------------------------------------------------------------------
+# per-device statistics (the Algorithm-1 "upload M_i, V_i, ||g_i||" pass)
+# --------------------------------------------------------------------------
+
+
+def build_stats_step(
+    cfg: ModelConfig,
+    shape: InputShape,
+    mesh,
+    dtype=jnp.bfloat16,
+    n_probes: int = 4,
+    remat: bool = True,
+) -> StepBundle:
+    """JVP-sketched per-FL-device gradient stats (core/sketch.py)."""
+    from repro.core.sketch import sketch_device_stats
+
+    n_fl = batch_ways(mesh)
+    specs = configs.input_specs(cfg, shape, dtype)
+    batch_struct = specs["batch"]
+    b = batch_struct["tokens"].shape[0]
+
+    p_structs = params_structs(cfg)
+    p_specs = params_pspecs(p_structs, mesh, moe_strategy(cfg, shape, mesh))
+    b_specs = batch_pspecs(batch_struct, mesh)
+    from repro.launch.sharding import _batched  # noqa: PLC0415
+
+    logits_sh = _ns(mesh, P(_batched(b, mesh), None, "model"))
+
+    act_sh = activation_specs(cfg, shape, mesh)
+    for k_, n_ in (("layers", "layer_params"), ("enc_layers", "enc_layer_params")):
+        lsh = _layer_param_shardings(p_specs, mesh, k_)
+        if lsh is not None:
+            act_sh[n_] = lsh
+
+    def stats_step(params, batch, key):
+        def per_device_loss(p):
+            per_ex, _ = api.model_loss(
+                p, cfg, batch, dtype=dtype, remat=remat, reduce=False,
+                logits_sharding=logits_sh,
+            )
+            return per_ex.reshape(n_fl, b // n_fl).mean(axis=1)
+
+        with Lyr.activation_shardings(**act_sh):
+            s = sketch_device_stats(per_device_loss, params, key, n_probes)
+        return s.mean, s.var, s.norm
+
+    arg_structs = dict(
+        params=p_structs,
+        batch=batch_struct,
+        key=jax.ShapeDtypeStruct((2,), jnp.uint32),
+    )
+    in_sh = dict(
+        params=to_shardings(p_specs, mesh),
+        batch=to_shardings(b_specs, mesh),
+        key=_ns(mesh, P()),
+    )
+    out_sh = (_ns(mesh, P()),) * 3
+    fn = jax.jit(
+        stats_step, in_shardings=tuple(in_sh.values()), out_shardings=out_sh
+    )
+    return StepBundle(fn, arg_structs, in_sh, out_sh)
+
+
+# --------------------------------------------------------------------------
+# prefill / decode (serving)
+# --------------------------------------------------------------------------
+
+
+def build_prefill_step(
+    cfg: ModelConfig, shape: InputShape, mesh, dtype=jnp.bfloat16
+) -> StepBundle:
+    specs = configs.input_specs(cfg, shape, dtype)
+    batch_struct = specs["batch"]
+    p_structs = params_structs(cfg)
+    p_specs = params_pspecs(p_structs, mesh, moe_strategy(cfg, shape, mesh))
+    b_specs = batch_pspecs(batch_struct, mesh)
+
+    act_sh = activation_specs(cfg, shape, mesh)
+    for k_, n_ in (("layers", "layer_params"), ("enc_layers", "enc_layer_params")):
+        lsh = _layer_param_shardings(p_specs, mesh, k_)
+        if lsh is not None:
+            act_sh[n_] = lsh
+
+    def prefill_step(params, batch):
+        params = jax.tree.map(
+            lambda x: x.astype(dtype) if x.dtype == jnp.float32 else x, params
+        )
+        with Lyr.activation_shardings(**act_sh):
+            logits, cache = api.model_prefill(params, cfg, batch, dtype)
+        return logits, cache
+
+    # cache out-sharding from its eval_shape structure
+    cache_struct = jax.eval_shape(
+        lambda p, bt: api.model_prefill(p, cfg, bt, dtype)[1],
+        p_structs, batch_struct,
+    )
+    c_specs = cache_pspecs(cache_struct, mesh)
+    b_sz = batch_struct["tokens"].shape[0]
+    from repro.launch.sharding import _batched  # noqa: PLC0415
+
+    logits_spec = P(_batched(b_sz, mesh), None, "model")
+
+    arg_structs = dict(params=p_structs, batch=batch_struct)
+    in_sh = dict(
+        params=to_shardings(p_specs, mesh), batch=to_shardings(b_specs, mesh)
+    )
+    out_sh = (_ns(mesh, logits_spec), to_shardings(c_specs, mesh))
+    fn = jax.jit(
+        prefill_step, in_shardings=tuple(in_sh.values()), out_shardings=out_sh
+    )
+    return StepBundle(fn, arg_structs, in_sh, out_sh)
+
+
+def build_serve_step(
+    cfg: ModelConfig, shape: InputShape, mesh, dtype=jnp.bfloat16
+) -> StepBundle:
+    """One decode step: one new token against a seq_len-deep KV/SSM cache."""
+    specs = configs.input_specs(cfg, shape, dtype)
+    token_struct, cache_struct, t_struct = (
+        specs["token"], specs["cache"], specs["t"],
+    )
+    p_structs = params_structs(cfg)
+    p_specs = params_pspecs(p_structs, mesh, moe_strategy(cfg, shape, mesh))
+    c_specs = cache_pspecs(cache_struct, mesh)
+    b = token_struct.shape[0]
+    from repro.launch.sharding import _batched  # noqa: PLC0415
+
+    tok_spec = P(_batched(b, mesh), None)
+
+    act_sh = activation_specs(cfg, shape, mesh)  # moe_buffer only for decode
+
+    def serve_step(params, token, cache, t):
+        params = jax.tree.map(
+            lambda x: x.astype(dtype) if x.dtype == jnp.float32 else x, params
+        )
+        with Lyr.activation_shardings(**act_sh):
+            logits, new_cache = api.model_decode(params, cfg, token, cache, t, dtype)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        return next_tok, new_cache
+
+    arg_structs = dict(
+        params=p_structs, token=token_struct, cache=cache_struct, t=t_struct
+    )
+    in_sh = dict(
+        params=to_shardings(p_specs, mesh),
+        token=_ns(mesh, tok_spec),
+        cache=to_shardings(c_specs, mesh),
+        t=_ns(mesh, P()),
+    )
+    out_sh = (_ns(mesh, tok_spec), to_shardings(c_specs, mesh))
+    fn = jax.jit(
+        serve_step,
+        in_shardings=tuple(in_sh.values()),
+        out_shardings=out_sh,
+        donate_argnums=(2,),
+    )
+    return StepBundle(fn, arg_structs, in_sh, out_sh)
+
+
+def build_step(
+    cfg: ModelConfig, shape: InputShape, mesh, dtype=jnp.bfloat16,
+    optimizer: Optimizer | None = None,
+) -> StepBundle:
+    """Dispatch on the shape kind: train / prefill / decode."""
+    if shape.kind == "train":
+        from repro.optim.optimizers import adamw
+
+        return build_train_step(cfg, shape, mesh, optimizer or adamw(1e-4))
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, shape, mesh, dtype)
+    return build_serve_step(cfg, shape, mesh, dtype)

@@ -1,0 +1,14 @@
+from repro.models.api import model_decode, model_init, model_loss, model_prefill
+from repro.models.cache import init_cache
+from repro.models.config import INPUT_SHAPES, InputShape, ModelConfig
+
+__all__ = [
+    "INPUT_SHAPES",
+    "InputShape",
+    "ModelConfig",
+    "init_cache",
+    "model_decode",
+    "model_init",
+    "model_loss",
+    "model_prefill",
+]

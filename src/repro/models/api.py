@@ -1,0 +1,52 @@
+"""Unified model API dispatching on architecture family.
+
+batch dict keys: "tokens" always; "embeds" for VLM patch embeddings;
+"frames" for audio frame embeddings (enc-dec).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models import encdec, transformer
+from repro.models.cache import init_cache
+from repro.models.config import ModelConfig
+
+
+def model_init(cfg: ModelConfig, key):
+    if cfg.arch_type == "encdec":
+        return encdec.init_encdec(cfg, key)
+    return transformer.init_model(cfg, key)
+
+
+def model_loss(
+    params, cfg: ModelConfig, batch: dict, dtype=jnp.float32,
+    remat: bool = False, loss_weights=None, reduce: bool = True,
+    logits_sharding=None, aux_coeff: float = 0.01,
+):
+    """Returns (loss, aux); with reduce=False, (per_example (B,), aux)."""
+    if cfg.arch_type == "encdec":
+        return encdec.encdec_loss(
+            params, cfg, batch["tokens"], batch["frames"], dtype, remat,
+            loss_weights=loss_weights, reduce=reduce,
+            logits_sharding=logits_sharding, aux_coeff=aux_coeff,
+        )
+    return transformer.lm_loss(
+        params, cfg, batch["tokens"], batch.get("embeds"), dtype, remat,
+        loss_weights=loss_weights, reduce=reduce,
+        logits_sharding=logits_sharding, aux_coeff=aux_coeff,
+    )
+
+
+def model_prefill(params, cfg: ModelConfig, batch: dict, dtype=jnp.float32):
+    if cfg.arch_type == "encdec":
+        return encdec.prefill_encdec(params, cfg, batch["tokens"], batch["frames"], dtype)
+    return transformer.prefill(params, cfg, batch["tokens"], batch.get("embeds"), dtype)
+
+
+def model_decode(params, cfg: ModelConfig, token, cache, t, dtype=jnp.float32):
+    if cfg.arch_type == "encdec":
+        return encdec.decode_step_encdec(params, cfg, token, cache, t, dtype)
+    return transformer.decode_step(params, cfg, token, cache, t, dtype)
+
+
+__all__ = ["model_init", "model_loss", "model_prefill", "model_decode", "init_cache"]

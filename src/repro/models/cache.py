@@ -1,0 +1,121 @@
+"""Decode caches: KV (full or ring-buffer) and SSM recurrent state."""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+class AttnCache(NamedTuple):
+    k: jnp.ndarray    # (L, B, S_cache, KV, dh)
+    v: jnp.ndarray    # (L, B, S_cache, KV, dh)
+    pos: jnp.ndarray  # (S_cache,) absolute position per slot, -1 = empty
+
+
+class SSMCache(NamedTuple):
+    state: jnp.ndarray  # (L, B, H, N, P)
+    conv: jnp.ndarray   # (L, B, K-1, di+2n)
+
+
+class HybridCache(NamedTuple):
+    ssm: SSMCache
+    attn: AttnCache  # leading dim = number of shared-block invocations
+
+
+class EncDecCache(NamedTuple):
+    self_attn: AttnCache   # decoder self-attention cache
+    cross_k: jnp.ndarray   # (L, B, S_enc, KV, dh) — encoder keys (fixed)
+    cross_v: jnp.ndarray
+
+
+def cache_seq_len(cfg: ModelConfig, context_len: int) -> int:
+    """Ring-buffer caches only keep the window."""
+    if cfg.sliding_window is not None:
+        return min(cfg.sliding_window, context_len)
+    return context_len
+
+
+def init_attn_cache(
+    cfg: ModelConfig, batch: int, context_len: int, n_layers: Optional[int] = None,
+    dtype=jnp.float32,
+) -> AttnCache:
+    L = n_layers if n_layers is not None else cfg.n_layers
+    s = cache_seq_len(cfg, context_len)
+    kv, dh = cfg.n_kv_heads, cfg.head_dim
+    return AttnCache(
+        k=jnp.zeros((L, batch, s, kv, dh), dtype),
+        v=jnp.zeros((L, batch, s, kv, dh), dtype),
+        pos=jnp.full((s,), -1, jnp.int32),
+    )
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> SSMCache:
+    s = cfg.ssm
+    d = cfg.d_model
+    nh = s.n_heads(d)
+    return SSMCache(
+        state=jnp.zeros((cfg.n_layers, batch, nh, s.d_state, s.head_dim), dtype),
+        conv=jnp.zeros(
+            (cfg.n_layers, batch, s.conv_kernel - 1, s.d_inner(d) + 2 * s.d_state),
+            dtype,
+        ),
+    )
+
+
+def n_shared_invocations(cfg: ModelConfig) -> int:
+    return (cfg.n_layers + cfg.hybrid.attn_every - 1) // cfg.hybrid.attn_every
+
+
+def pad_cache(cache, total_len: int):
+    """Grow a prefill-sized cache to decode capacity ``total_len`` (attention
+    caches pad the sequence dim with empty slots, pos = -1; SSM state is O(1)
+    and unchanged)."""
+
+    def pad_attn(c: AttnCache) -> AttnCache:
+        s = c.k.shape[2]
+        extra = total_len - s
+        if extra <= 0:
+            return c
+        pad_kv = [(0, 0)] * c.k.ndim
+        pad_kv[2] = (0, extra)
+        return AttnCache(
+            k=jnp.pad(c.k, pad_kv),
+            v=jnp.pad(c.v, pad_kv),
+            pos=jnp.pad(c.pos, (0, extra), constant_values=-1),
+        )
+
+    if isinstance(cache, HybridCache):
+        return HybridCache(ssm=cache.ssm, attn=pad_attn(cache.attn))
+    if isinstance(cache, EncDecCache):
+        return EncDecCache(
+            self_attn=pad_attn(cache.self_attn),
+            cross_k=cache.cross_k,
+            cross_v=cache.cross_v,
+        )
+    if isinstance(cache, SSMCache):
+        return cache
+    return pad_attn(cache)
+
+
+def init_cache(cfg: ModelConfig, batch: int, context_len: int, dtype=jnp.float32):
+    if cfg.arch_type == "ssm":
+        return init_ssm_cache(cfg, batch, dtype)
+    if cfg.arch_type == "hybrid":
+        return HybridCache(
+            ssm=init_ssm_cache(cfg, batch, dtype),
+            attn=init_attn_cache(
+                cfg, batch, context_len, n_layers=n_shared_invocations(cfg), dtype=dtype
+            ),
+        )
+    if cfg.arch_type == "encdec":
+        enc_len = cfg.encdec.n_enc_frames
+        kv, dh = cfg.n_kv_heads, cfg.head_dim
+        return EncDecCache(
+            self_attn=init_attn_cache(cfg, batch, context_len, dtype=dtype),
+            cross_k=jnp.zeros((cfg.n_layers, batch, enc_len, kv, dh), dtype),
+            cross_v=jnp.zeros((cfg.n_layers, batch, enc_len, kv, dh), dtype),
+        )
+    return init_attn_cache(cfg, batch, context_len, dtype=dtype)

@@ -1,0 +1,198 @@
+"""Encoder-decoder stack (SeamlessM4T-style speech-to-text backbone).
+
+The modality frontend (mel-spectrogram + conformer feature extractor) is a
+stub per the assignment: the encoder consumes precomputed frame embeddings
+``(B, n_frames, d_model)`` provided by input_specs().
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.cache import AttnCache, EncDecCache
+from repro.models.config import ModelConfig
+from repro.models.transformer import logits_from_hidden
+
+
+def _init_enc_layer(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": L.init_rmsnorm(cfg.d_model),
+        "attn": L.init_attention(ks[0], cfg),
+        "ln2": L.init_rmsnorm(cfg.d_model),
+        "mlp": L.init_mlp(ks[1], cfg.d_model, cfg.d_ff),
+    }
+
+
+def _init_dec_layer(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": L.init_rmsnorm(cfg.d_model),
+        "self_attn": L.init_attention(ks[0], cfg),
+        "ln_x": L.init_rmsnorm(cfg.d_model),
+        "cross_attn": L.init_attention(ks[1], cfg),
+        "ln2": L.init_rmsnorm(cfg.d_model),
+        "mlp": L.init_mlp(ks[2], cfg.d_model, cfg.d_ff),
+    }
+
+
+def init_encdec(cfg: ModelConfig, key) -> dict:
+    k_embed, k_enc, k_dec, k_head = jax.random.split(key, 4)
+    enc_keys = jax.random.split(k_enc, cfg.encdec.n_enc_layers)
+    dec_keys = jax.random.split(k_dec, cfg.n_layers)
+    return {
+        "embed": L.dense_init(k_embed, (cfg.vocab_padded, cfg.d_model), scale=0.02),
+        "enc_layers": jax.vmap(partial(_init_enc_layer, cfg))(enc_keys),
+        "layers": jax.vmap(partial(_init_dec_layer, cfg))(dec_keys),
+        "enc_norm": L.init_rmsnorm(cfg.d_model),
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+        "lm_head": L.dense_init(k_head, (cfg.d_model, cfg.vocab_padded)),
+    }
+
+
+def encode(params, cfg: ModelConfig, frames: jnp.ndarray, dtype=jnp.float32):
+    """Bidirectional encoder over precomputed frame embeddings."""
+
+    def body(x, lp):
+        x = L.constrain(x, "residual")
+        lp = L.constrain_tree(lp, "enc_layer_params")
+        x = x + L.attention_fwd(
+            lp["attn"], L.rmsnorm(lp["ln1"], x, cfg.norm_eps), cfg,
+            causal=False, dtype=dtype,
+        )
+        x = x + L.mlp_fwd(lp["mlp"], L.rmsnorm(lp["ln2"], x, cfg.norm_eps), dtype)
+        return x, None
+
+    x, _ = jax.lax.scan(body, frames.astype(dtype), params["enc_layers"])
+    return L.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _cross_kv(lp, enc_out, cfg: ModelConfig, dtype):
+    b, s, _ = enc_out.shape
+    kv, dh = cfg.n_kv_heads, cfg.head_dim
+    k = (enc_out @ lp["cross_attn"]["wk"].astype(dtype))
+    v = (enc_out @ lp["cross_attn"]["wv"].astype(dtype))
+    if cfg.qkv_bias:
+        k = k + lp["cross_attn"]["bk"].astype(dtype)
+        v = v + lp["cross_attn"]["bv"].astype(dtype)
+    return k.reshape(b, s, kv, dh), v.reshape(b, s, kv, dh)
+
+
+def _decoder_layer(lp, x, enc_out, cfg, dtype, return_kv=False):
+    x = L.constrain(x, "residual")
+    lp = L.constrain_tree(lp, "layer_params")
+    h = L.attention_fwd(
+        lp["self_attn"], L.rmsnorm(lp["ln1"], x, cfg.norm_eps), cfg,
+        dtype=dtype, return_kv=return_kv,
+    )
+    if return_kv:
+        h, kv = h
+    x = x + h
+    ckv = _cross_kv(lp, enc_out, cfg, dtype)
+    x = x + L.attention_fwd(
+        lp["cross_attn"], L.rmsnorm(lp["ln_x"], x, cfg.norm_eps), cfg,
+        kv_override=ckv, dtype=dtype, use_rope=False,
+    )
+    x = x + L.mlp_fwd(lp["mlp"], L.rmsnorm(lp["ln2"], x, cfg.norm_eps), dtype)
+    if return_kv:
+        return x, (kv, ckv)
+    return x
+
+
+def _decoder_hidden(params, cfg, tokens, frames, dtype, remat):
+    enc_out = encode(params, cfg, frames, dtype)
+    x = params["embed"].astype(dtype)[tokens]
+
+    def body(x, lp):
+        return _decoder_layer(lp, x, enc_out, cfg, dtype), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+
+def forward_encdec(
+    params, cfg: ModelConfig, tokens: jnp.ndarray, frames: jnp.ndarray,
+    dtype=jnp.float32, remat: bool = False,
+):
+    x = _decoder_hidden(params, cfg, tokens, frames, dtype, remat)
+    return logits_from_hidden(params, cfg, x, dtype)
+
+
+def encdec_loss(
+    params, cfg: ModelConfig, tokens, frames, dtype=jnp.float32,
+    remat: bool = False, loss_weights=None, aux_coeff: float = 0.0,
+    reduce: bool = True, logits_sharding=None,
+):
+    from repro.models.transformer import chunked_ce
+
+    x = _decoder_hidden(params, cfg, tokens, frames, dtype, remat)
+    per_example = chunked_ce(params, cfg, x, tokens, dtype, logits_sharding)
+    if loss_weights is not None:
+        per_example = per_example * loss_weights
+    if not reduce:
+        return per_example, jnp.zeros((), jnp.float32)
+    return jnp.mean(per_example), jnp.zeros((), jnp.float32)
+
+
+def prefill_encdec(
+    params, cfg: ModelConfig, tokens, frames, dtype=jnp.float32,
+):
+    enc_out = encode(params, cfg, frames, dtype)
+    x = params["embed"].astype(dtype)[tokens]
+
+    def body(x, lp):
+        x, (kv, ckv) = _decoder_layer(lp, x, enc_out, cfg, dtype, return_kv=True)
+        return x, (kv, ckv)
+
+    x, ((ks, vs), (cks, cvs)) = jax.lax.scan(body, x, params["layers"])
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    cache = EncDecCache(
+        self_attn=AttnCache(k=ks, v=vs, pos=jnp.arange(tokens.shape[1], dtype=jnp.int32)),
+        cross_k=cks,
+        cross_v=cvs,
+    )
+    return logits_from_hidden(params, cfg, x[:, -1:, :], dtype), cache
+
+
+def decode_step_encdec(
+    params, cfg: ModelConfig, token, cache: EncDecCache, t, dtype=jnp.float32,
+):
+    x = params["embed"].astype(dtype)[token]
+    s_max = cache.self_attn.k.shape[2]
+    slot = (t % s_max).astype(jnp.int32)
+    new_pos = jax.lax.dynamic_update_slice(
+        cache.self_attn.pos, t[None].astype(jnp.int32), (slot,)
+    )
+
+    def body(x, inp):
+        lp, ck, cv, xk, xv = inp
+        h, (ck, cv, _) = L.attention_decode(
+            lp["self_attn"], L.rmsnorm(lp["ln1"], x, cfg.norm_eps), cfg,
+            ck, cv, new_pos, t, dtype=dtype,
+        )
+        x = x + h
+        x = x + L.attention_fwd(
+            lp["cross_attn"], L.rmsnorm(lp["ln_x"], x, cfg.norm_eps), cfg,
+            kv_override=(xk, xv), dtype=dtype, use_rope=False,
+        )
+        x = x + L.mlp_fwd(lp["mlp"], L.rmsnorm(lp["ln2"], x, cfg.norm_eps), dtype)
+        return x, (ck, cv)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x,
+        (params["layers"], cache.self_attn.k, cache.self_attn.v,
+         cache.cross_k, cache.cross_v),
+    )
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    new_cache = EncDecCache(
+        self_attn=AttnCache(k=ks, v=vs, pos=new_pos),
+        cross_k=cache.cross_k,
+        cross_v=cache.cross_v,
+    )
+    return logits_from_hidden(params, cfg, x, dtype), new_cache

@@ -1,0 +1,603 @@
+"""Layer primitives: norms, RoPE, GQA attention, SwiGLU, MoE, Mamba2 SSD.
+
+Design: optax/flax-free. Every layer is an (init_<layer>, <layer>_fwd) pair of
+pure functions over plain dict pytrees. Decode-path variants operate on a
+single token against a cache (see cache.py).
+
+All matmul-heavy ops accept a ``dtype`` for the compute precision (bf16 on
+TPU); parameters are stored fp32 and cast at use (mixed precision).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+# --------------------------------------------------------------------------
+# activation-sharding registry
+#
+# The launch layer installs NamedShardings for named activation cut-points
+# (trace-time state: the step builders wrap model calls in
+# ``activation_shardings(...)`` so the constraints land in the traced HLO).
+# Model code stays mesh-agnostic; with nothing installed this is a no-op.
+#
+# Names:  "residual"   — the (B, S, D) stream at every layer boundary
+#         "moe_buffer" — the (G, E, C, ·) expert dispatch buffers
+#         "logits"     — the (B, CHUNK, V) CE logits chunks
+# --------------------------------------------------------------------------
+
+from contextlib import contextmanager
+
+_ACT_SHARDINGS: dict = {}
+
+
+@contextmanager
+def activation_shardings(**kw):
+    old = dict(_ACT_SHARDINGS)
+    _ACT_SHARDINGS.update(kw)
+    try:
+        yield
+    finally:
+        _ACT_SHARDINGS.clear()
+        _ACT_SHARDINGS.update(old)
+
+
+def constrain(x, name: str):
+    s = _ACT_SHARDINGS.get(name)
+    if s is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, s)
+
+
+def constrain_tree(tree, name: str):
+    """Constrain a pytree (e.g. one scanned layer's parameter slice) with a
+    matching pytree of shardings. Crucially, with_sharding_constraint's
+    TRANSPOSE is itself — so constraining the per-layer primal slice inside
+    the scan body forces the per-layer gradient cotangent to the same
+    (FSDP) sharding, turning the backward's full-tensor gradient
+    all-reduces into reduce-scatters (§Perf iteration 6)."""
+    specs = _ACT_SHARDINGS.get(name)
+    if specs is None:
+        return tree
+    return jax.tree.map(jax.lax.with_sharding_constraint, tree, specs)
+
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+
+
+def dense_init(key, shape, scale: Optional[float] = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * scale).astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * params["scale"]
+    return out.astype(dt)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, n_heads, head_dim); positions: broadcastable to (..., S)."""
+    freqs = rope_freqs(x.shape[-1], theta)  # (head_dim/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention (GQA, optional bias / sliding window)
+# --------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig):
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h * dh)),
+        "wk": dense_init(ks[1], (d, kv * dh)),
+        "wv": dense_init(ks[2], (d, kv * dh)),
+        "wo": dense_init(ks[3], (h * dh, d)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * dh,), jnp.float32)
+        p["bk"] = jnp.zeros((kv * dh,), jnp.float32)
+        p["bv"] = jnp.zeros((kv * dh,), jnp.float32)
+    return p
+
+
+def _qkv(params, x, cfg: ModelConfig, dtype):
+    b, s, _ = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ params["wq"].astype(dtype)
+    k = x @ params["wk"].astype(dtype)
+    v = x @ params["wv"].astype(dtype)
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(dtype)
+        k = k + params["bk"].astype(dtype)
+        v = v + params["bv"].astype(dtype)
+    return (
+        q.reshape(b, s, h, dh),
+        k.reshape(b, s, kv, dh),
+        v.reshape(b, s, kv, dh),
+    )
+
+
+def attention_scores_mask(
+    s_q: int, s_k: int, q_offset: int = 0, causal: bool = True,
+    sliding_window: Optional[int] = None,
+):
+    """(s_q, s_k) boolean mask; True = attend. q position i_abs = i + q_offset."""
+    qi = jnp.arange(s_q)[:, None] + q_offset
+    kj = jnp.arange(s_k)[None, :]
+    m = jnp.ones((s_q, s_k), bool)
+    if causal:
+        m = m & (kj <= qi)
+    if sliding_window is not None:
+        m = m & (kj > qi - sliding_window)
+    return m
+
+
+# query-chunked attention kicks in above this sequence length: the (S_q, S_k)
+# score matrix is never materialized whole — only (Q_CHUNK, S_k) per scan step
+# (flash-attention-style memory behaviour expressed in XLA; the Pallas flash
+# kernel in kernels/attention is the TPU hot path).
+ATTN_CHUNK_THRESHOLD = 2048
+ATTN_Q_CHUNK = 1024
+
+
+def _attention_core(
+    q, k, v, *, causal: bool, sliding_window: Optional[int], q_offset: int,
+    dtype, q_chunk: Optional[int] = None,
+):
+    """softmax(QKᵀ/√d)V with GQA broadcast. q: (B,Sq,KV,rep,dh); k,v: (B,Sk,KV,dh)."""
+    b, sq, kvh, rep, dh = q.shape
+    s_k = k.shape[1]
+
+    def block(q_c, off):
+        scores = jnp.einsum("bqgrd,bkgd->bgrqk", q_c, k) / math.sqrt(dh)
+        if causal or sliding_window is not None:
+            mask = attention_scores_mask(
+                q_c.shape[1], s_k, off, causal, sliding_window
+            )
+            scores = jnp.where(mask[None, None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(dtype)
+        return jnp.einsum("bgrqk,bkgd->bqgrd", probs, v)
+
+    if q_chunk is None and sq > ATTN_CHUNK_THRESHOLD and sq % ATTN_Q_CHUNK == 0:
+        q_chunk = ATTN_Q_CHUNK
+    if q_chunk is None or sq <= q_chunk or sq % q_chunk != 0:
+        return block(q, q_offset)
+
+    nc = sq // q_chunk
+    qs = jnp.moveaxis(q.reshape(b, nc, q_chunk, kvh, rep, dh), 1, 0)
+
+    @jax.checkpoint
+    def body(_, inp):
+        q_c, ci = inp
+        return None, block(q_c, q_offset + ci * q_chunk)
+
+    _, outs = jax.lax.scan(body, None, (qs, jnp.arange(nc)))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, sq, kvh, rep, dh)
+
+
+def attention_fwd(
+    params,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    positions: Optional[jnp.ndarray] = None,
+    causal: bool = True,
+    kv_override: Optional[tuple] = None,
+    return_kv: bool = False,
+    dtype=jnp.float32,
+    use_rope: bool = True,
+):
+    """Full-sequence attention (train / prefill). GQA via reshape-broadcast.
+
+    kv_override: (k, v) of shape (B, S_kv, KV, dh) for cross-attention.
+    Long sequences run query-chunked (see _attention_core) so the score
+    matrix never exceeds (Q_CHUNK, S_k) per step.
+    """
+    b, s, _ = x.shape
+    h, kv_heads, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    rep = h // kv_heads
+    q, k, v = _qkv(params, x, cfg, dtype)
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+    if kv_override is not None:
+        k, v = kv_override
+        is_causal = False
+        window = None
+    else:
+        if use_rope:
+            k = apply_rope(k, positions, cfg.rope_theta)
+        is_causal = causal
+        window = cfg.sliding_window
+    q = q.reshape(b, s, kv_heads, rep, dh)
+    out = _attention_core(
+        q, k, v, causal=is_causal, sliding_window=window, q_offset=0, dtype=dtype
+    ).reshape(b, s, h * dh)
+    out = out @ params["wo"].astype(dtype)
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def attention_decode(
+    params,
+    x: jnp.ndarray,            # (B, 1, D) — one new token
+    cfg: ModelConfig,
+    cache_k: jnp.ndarray,      # (B, S_max, KV, dh)
+    cache_v: jnp.ndarray,
+    cache_pos: jnp.ndarray,    # (S_max,) absolute positions stored per slot (-1 empty)
+    t: jnp.ndarray,            # scalar — absolute position of the new token
+    *,
+    dtype=jnp.float32,
+    use_rope: bool = True,
+    update_cache: bool = True,
+):
+    """Single-token decode against a (possibly ring-buffer) KV cache.
+
+    The cache sequence dim may be sharded over the model axis — the softmax
+    reduction then lowers to psum collectives under pjit (flash-decoding
+    style partial-softmax merge is what XLA SPMD generates).
+    """
+    b, s1, _ = x.shape
+    h, kv_heads, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    rep = h // kv_heads
+    s_max = cache_k.shape[1]
+    q, k_new, v_new = _qkv(params, x, cfg, dtype)
+    pos = jnp.full((1, 1), t)
+    if use_rope:
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k_new = apply_rope(k_new, pos, cfg.rope_theta)
+
+    if update_cache:
+        slot = (t % s_max).astype(jnp.int32)  # ring buffer (= t when S_max > t)
+        cache_k = jax.lax.dynamic_update_slice(cache_k, k_new, (0, slot, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(cache_v, v_new, (0, slot, 0, 0))
+        cache_pos = jax.lax.dynamic_update_slice(cache_pos, pos[0].astype(jnp.int32), (slot,))
+
+    # validity: slot written, causal, within window
+    valid = (cache_pos >= 0) & (cache_pos <= t)
+    if cfg.sliding_window is not None:
+        valid = valid & (cache_pos > t - cfg.sliding_window)
+
+    q = q.reshape(b, 1, kv_heads, rep, dh)
+    scores = jnp.einsum("bqgrd,bkgd->bgrqk", q, cache_k) / math.sqrt(dh)
+    scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(dtype)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", probs, cache_v).reshape(b, 1, h * dh)
+    out = out @ params["wo"].astype(dtype)
+    return out, (cache_k, cache_v, cache_pos)
+
+
+# --------------------------------------------------------------------------
+# SwiGLU MLP
+# --------------------------------------------------------------------------
+
+
+def init_mlp(key, d: int, d_ff: int):
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (d, d_ff)),
+        "w_in": dense_init(ks[1], (d, d_ff)),
+        "w_out": dense_init(ks[2], (d_ff, d)),
+    }
+
+
+def mlp_fwd(params, x, dtype=jnp.float32):
+    g = jax.nn.silu(x @ params["w_gate"].astype(dtype))
+    u = x @ params["w_in"].astype(dtype)
+    return (g * u) @ params["w_out"].astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Mixture of Experts (capacity-based GShard dispatch)
+# --------------------------------------------------------------------------
+
+
+def init_moe(key, cfg: ModelConfig):
+    moe = cfg.moe
+    d, f, e = cfg.d_model, moe.d_ff_expert, moe.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, e), scale=0.02),
+        "w_gate": dense_init(ks[1], (e, d, f)),
+        "w_in": dense_init(ks[2], (e, d, f)),
+        "w_out": dense_init(ks[3], (e, f, d)),
+    }
+    if moe.n_shared_experts:
+        p["shared"] = init_mlp(ks[4], d, f * moe.n_shared_experts)
+    return p
+
+
+def moe_capacity(n_tokens: int, moe) -> int:
+    cap = int(math.ceil(n_tokens * moe.top_k / moe.n_experts * moe.capacity_factor))
+    return max(cap, moe.top_k)
+
+
+MOE_GROUP_SIZE = 1024  # routing-group size (GShard "G"); capacity is per group
+
+
+def _moe_group_size(n_tok: int) -> int:
+    gs = min(MOE_GROUP_SIZE, n_tok)
+    while n_tok % gs:
+        gs -= 1
+    return gs
+
+
+def moe_fwd(params, x, cfg: ModelConfig, dtype=jnp.float32):
+    """Capacity-limited top-k MoE with scatter/gather dispatch.
+
+    Tokens are processed in routing groups of ≤ MOE_GROUP_SIZE with per-group
+    capacity C = ceil(gs·k·cf/E), so dispatch memory is O(G·E·C·D) = O(T·k·cf·D)
+    and dispatch *compute* is O(T·k·D) scatter/gather moves — NOT the
+    O(T·E·C·D) of the one-hot einsum formulation, which at production token
+    counts (10⁶ tokens) would dwarf the expert FLOPs themselves.
+
+    Returns (out, aux_loss). x: (B, S, D).
+    """
+    moe = cfg.moe
+    b, s, d = x.shape
+    n_tok = b * s
+    e, k = moe.n_experts, moe.top_k
+    gs = _moe_group_size(n_tok)
+    n_groups = n_tok // gs
+    cap = moe_capacity(gs, moe)
+
+    xt = x.reshape(n_groups, gs, d)
+    logits = (xt @ params["router"].astype(dtype)).astype(jnp.float32)  # (G,gs,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # (G, gs, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance auxiliary loss (over all tokens)
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(gate_idx[..., 0].reshape(-1), e, dtype=jnp.float32), axis=0
+    )
+    frac_probs = jnp.mean(probs.reshape(-1, e), axis=0)
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+
+    # position of each (token, slot) within its expert, per group.
+    # Slot-major cumsum (k outer, token inner) so the per-k scatters below
+    # see consistent positions.
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.int32)  # (G, gs, k, E)
+    flat = jnp.moveaxis(onehot, 2, 1).reshape(n_groups, k * gs, e)  # k-major
+    pos = jnp.cumsum(flat, axis=1) * flat - 1               # (G, k*gs, E)
+    pos_tok = jnp.max(pos, axis=-1).reshape(n_groups, k, gs)  # ≥ -1
+    e_tok = jnp.moveaxis(gate_idx, 2, 1)                    # (G, k, gs)
+    within = (pos_tok >= 0) & (pos_tok < cap)
+    # overflow → index `cap`, dropped by scatter mode="drop"
+    pos_safe = jnp.where(within, pos_tok, cap)
+
+    # dispatch: k sequential scatter-adds of (G, gs, D) — NEVER materializes
+    # the k×-duplicated (G, gs·k, D) token tensor (≈ 6 GB/dev at olmoe's
+    # top-8, 1M tokens; §Perf iteration 4)
+    def scatter_k(xg, e_g, p_g):
+        buf = jnp.zeros((e, cap, d), dtype)
+        for kk in range(k):
+            buf = buf.at[e_g[kk], p_g[kk]].add(xg, mode="drop")
+        return buf
+
+    xe = jax.vmap(scatter_k)(xt, e_tok, pos_safe)  # (G, E, C, D)
+    xe = constrain(xe, "moe_buffer")  # expert-parallel: E over "model"
+
+    g = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, params["w_gate"].astype(dtype)))
+    u = jnp.einsum("gecd,edf->gecf", xe, params["w_in"].astype(dtype))
+    ye = jnp.einsum("gecf,efd->gecd", g * u, params["w_out"].astype(dtype))
+    ye = constrain(ye, "moe_buffer")
+
+    gv = (jnp.moveaxis(gate_vals, 2, 1) * within).astype(dtype)  # (G, k, gs)
+
+    def gather_k(ye_g, e_g, p_g, gv_g):
+        out = jnp.zeros((gs, d), dtype)
+        for kk in range(k):
+            vals = ye_g.at[e_g[kk], p_g[kk]].get(mode="fill", fill_value=0)
+            out = out + vals * gv_g[kk][:, None]
+        return out
+
+    out = jax.vmap(gather_k)(ye, e_tok, pos_safe, gv).reshape(b, s, d)
+
+    if moe.n_shared_experts:
+        out = out + mlp_fwd(params["shared"], x, dtype)
+    return out, aux
+
+
+# --------------------------------------------------------------------------
+# Mamba2 (SSD — state-space duality, arXiv:2405.21060)
+# --------------------------------------------------------------------------
+
+
+def init_mamba2(key, cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    n = s.d_state
+    ks = jax.random.split(key, 5)
+    # in_proj → [z(di), x(di), B(n), C(n), dt(nh)]  (single B/C group)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di + 2 * n + nh)),
+        "conv_w": dense_init(ks[1], (s.conv_kernel, di + 2 * n), scale=0.5),
+        "conv_b": jnp.zeros((di + 2 * n,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm": init_rmsnorm(di),
+        "out_proj": dense_init(ks[4], (di, d)),
+    }
+
+
+def _split_mamba_proj(zxbcdt, di, n, nh):
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : 2 * di + 2 * n]
+    dt = zxbcdt[..., 2 * di + 2 * n :]
+    return z, xbc, dt
+
+
+def causal_conv1d(xbc, w, b):
+    """Depthwise causal conv over the sequence dim. xbc: (B, S, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + xbc.shape[1], :] * w[i] for i in range(k))
+    return out + b
+
+
+def ssd_chunked(xdt, la, B, C, chunk: int):
+    """Chunked SSD scan (pure-jnp; kernels/ssd has the Pallas version).
+
+    Args:
+      xdt: (b, s, h, p)  — dt-scaled inputs
+      la:  (b, s, h)     — log decay  (la = -exp(A_log)·dt ≤ 0)
+      B:   (b, s, n)     — input projections  (single group, shared over heads)
+      C:   (b, s, n)     — output projections
+    Returns y: (b, s, h, p)
+    """
+    b, s, h, p = xdt.shape
+    n = B.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    c = s // chunk
+    q = chunk
+    xdt = xdt.reshape(b, c, q, h, p)
+    la = la.reshape(b, c, q, h)
+    Bc = B.reshape(b, c, q, n)
+    Cc = C.reshape(b, c, q, n)
+
+    La = jnp.cumsum(la, axis=2)  # (b,c,q,h) inclusive cumulative log decay
+    # --- intra-chunk (quadratic within chunk; the MXU-friendly part)
+    G = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)  # (b,c,q,q)
+    # decay matrix exp(La_i - La_j) for i >= j. Mask diff BEFORE the exp:
+    # exp of a large positive (upper-triangle) diff is inf, and inf·0 = NaN
+    # in the backward pass of a post-exp where().
+    diff = La[:, :, :, None, :] - La[:, :, None, :, :]  # (b,c,q,k,h)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    diff = jnp.where(mask[None, None, :, :, None], diff, -jnp.inf)
+    decay = jnp.exp(diff)
+    M = G[..., None] * decay  # (b,c,q,k,h)
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", M, xdt)
+
+    # --- chunk-boundary states
+    seg = jnp.exp(La[:, :, -1:, :] - La)  # (b,c,q,h): decay from t to chunk end
+    S_c = jnp.einsum("bcqh,bcqn,bcqhp->bchnp", seg, Bc, xdt)  # (b,c,h,n,p)
+    chunk_decay = jnp.exp(La[:, :, -1, :])  # (b,c,h)
+
+    def scan_fn(carry, inp):
+        s_c, dec = inp
+        # keep the recurrent state in f32: exp(La) is f32 and the decay
+        # product must not round through bf16 across chunks
+        new = dec[..., None, None] * carry + s_c.astype(jnp.float32)
+        return new, carry  # emit the state *entering* the chunk
+
+    init = jnp.zeros((b, h, n, p), jnp.float32)
+    _, S_prev = jax.lax.scan(
+        scan_fn,
+        init,
+        (jnp.moveaxis(S_c, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    S_prev = jnp.moveaxis(S_prev, 0, 1)  # (b,c,h,n,p) state entering each chunk
+
+    y_inter = jnp.einsum("bcqn,bchnp,bcqh->bcqhp", Cc, S_prev, jnp.exp(La))
+    return (y_intra + y_inter).astype(xdt.dtype).reshape(b, s, h, p)
+
+
+def mamba2_fwd(params, x, cfg: ModelConfig, dtype=jnp.float32, chunk=None):
+    """Full-sequence Mamba2 block (train / prefill). x: (B, S, D)."""
+    s_cfg = cfg.ssm
+    d = cfg.d_model
+    di = s_cfg.d_inner(d)
+    nh = s_cfg.n_heads(d)
+    n = s_cfg.d_state
+    p_dim = s_cfg.head_dim
+    chunk = chunk or s_cfg.chunk_size
+
+    zxbcdt = x @ params["in_proj"].astype(dtype)
+    z, xbc, dt = _split_mamba_proj(zxbcdt, di, n, nh)
+    xbc = jax.nn.silu(causal_conv1d(xbc, params["conv_w"].astype(dtype), params["conv_b"].astype(dtype)))
+    xin = xbc[..., :di]
+    B = xbc[..., di : di + n]
+    C = xbc[..., di + n :]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,nh)
+    la = -jnp.exp(params["A_log"])[None, None, :] * dt  # log decay
+    xh = xin.reshape(*xin.shape[:-1], nh, p_dim)
+    xdt = xh * dt[..., None].astype(dtype)
+
+    y = ssd_chunked(xdt, la.astype(jnp.float32), B, C, chunk)
+    y = y + params["D"].astype(dtype)[None, None, :, None] * xh
+    y = y.reshape(*y.shape[:-2], di)
+    y = rmsnorm(params["norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    return y @ params["out_proj"].astype(dtype)
+
+
+def mamba2_decode(params, x, cfg: ModelConfig, ssm_state, conv_state, dtype=jnp.float32):
+    """Single-token recurrent step. x: (B, 1, D).
+
+    ssm_state: (B, H, N, P); conv_state: (B, K-1, di+2n).
+    """
+    s_cfg = cfg.ssm
+    d = cfg.d_model
+    di = s_cfg.d_inner(d)
+    nh = s_cfg.n_heads(d)
+    n = s_cfg.d_state
+    p_dim = s_cfg.head_dim
+    k = s_cfg.conv_kernel
+
+    zxbcdt = x @ params["in_proj"].astype(dtype)
+    z, xbc, dt = _split_mamba_proj(zxbcdt, di, n, nh)  # (B,1,·)
+
+    window = jnp.concatenate([conv_state, xbc], axis=1)  # (B, K, C)
+    conv_out = jnp.einsum("bkc,kc->bc", window, params["conv_w"].astype(dtype)) + params[
+        "conv_b"
+    ].astype(dtype)
+    xbc1 = jax.nn.silu(conv_out)[:, None, :]
+    new_conv_state = window[:, 1:, :]
+
+    xin = xbc1[..., :di]
+    B = xbc1[..., di : di + n][:, 0]  # (B, n)
+    C = xbc1[..., di + n :][:, 0]
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,nh)
+    a = jnp.exp(-jnp.exp(params["A_log"])[None] * dt)  # (B,nh)
+    xh = xin[:, 0].reshape(-1, nh, p_dim)
+    xdt = xh * dt[..., None].astype(dtype)
+
+    new_state = a[..., None, None].astype(dtype) * ssm_state + jnp.einsum(
+        "bn,bhp->bhnp", B, xdt
+    )
+    y = jnp.einsum("bn,bhnp->bhp", C, new_state) + params["D"].astype(dtype)[None, :, None] * xh
+    y = y.reshape(-1, 1, di)
+    y = rmsnorm(params["norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    return y @ params["out_proj"].astype(dtype), new_state, new_conv_state

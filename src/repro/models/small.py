@@ -1,0 +1,115 @@
+"""Paper-scale evaluation models (Sec. V-A).
+
+  * logistic regression on 784-dim inputs (MNIST case — convex)
+  * 4-conv-layer CNN on 32×32×3 inputs (CIFAR-10 case — non-convex),
+    adapted from the paper's reference CNN (conv 3→32→64→128→128, 2×2 pools,
+    one hidden dense layer).
+
+Pure-function (init, loss, accuracy) triples over dict pytrees, matching the
+core/pofl.py simulator interface.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# logistic regression (convex)
+# --------------------------------------------------------------------------
+
+
+def init_logreg(key, dim: int = 784, n_classes: int = 10):
+    kw, _ = jax.random.split(key)
+    return {
+        "w": jax.random.normal(kw, (dim, n_classes)) * 0.01,
+        "b": jnp.zeros((n_classes,)),
+    }
+
+
+def logreg_logits(params, x):
+    x = x.reshape(x.shape[0], -1)
+    return x @ params["w"] + params["b"]
+
+
+def logreg_loss(params, x, y):
+    logits = logreg_logits(params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+
+
+# --------------------------------------------------------------------------
+# 4-conv CNN (non-convex)
+# --------------------------------------------------------------------------
+
+_CNN_CHANNELS = (32, 64, 128, 128)
+
+
+def init_cnn(key, n_classes: int = 10, in_ch: int = 3):
+    ks = jax.random.split(key, 6)
+    params = {}
+    c_prev = in_ch
+    for i, c in enumerate(_CNN_CHANNELS):
+        params[f"conv{i}"] = {
+            "w": jax.random.normal(ks[i], (3, 3, c_prev, c))
+            * jnp.sqrt(2.0 / (9 * c_prev)),
+            "b": jnp.zeros((c,)),
+        }
+        c_prev = c
+    # two 2×2 pools over 32×32 → 8×8 spatial, then global-average → c_prev
+    params["fc1"] = {
+        "w": jax.random.normal(ks[4], (c_prev, 128)) * jnp.sqrt(2.0 / c_prev),
+        "b": jnp.zeros((128,)),
+    }
+    params["out"] = {
+        "w": jax.random.normal(ks[5], (128, n_classes)) * jnp.sqrt(1.0 / 128),
+        "b": jnp.zeros((n_classes,)),
+    }
+    return params
+
+
+def _conv(x, p):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return jax.nn.relu(y + p["b"])
+
+
+def _pool(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def cnn_logits(params, x):
+    x = _conv(x, params["conv0"])
+    x = _conv(x, params["conv1"])
+    x = _pool(x)
+    x = _conv(x, params["conv2"])
+    x = _pool(x)
+    x = _conv(x, params["conv3"])
+    x = jnp.mean(x, axis=(1, 2))  # global average pool
+    x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    return x @ params["out"]["w"] + params["out"]["b"]
+
+
+def cnn_loss(params, x, y):
+    logp = jax.nn.log_softmax(cnn_logits(params, x), axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+
+
+# --------------------------------------------------------------------------
+# shared eval
+# --------------------------------------------------------------------------
+
+
+def make_eval_fn(logits_fn, loss_fn, x_test, y_test, batch: int = 1000):
+    @jax.jit
+    def _eval(params):
+        logits = logits_fn(params, x_test[:batch])
+        acc = jnp.mean(jnp.argmax(logits, -1) == y_test[:batch])
+        loss = loss_fn(params, x_test[:batch], y_test[:batch])
+        return loss, acc
+
+    return _eval

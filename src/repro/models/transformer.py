@@ -1,0 +1,504 @@
+"""Decoder-only model stacks (dense / moe / ssm / hybrid / vlm).
+
+One homogeneous layer body scanned over the stacked layer parameters
+(fast compiles, remat-friendly); the Zamba2-style hybrid applies a *shared*
+attention block every ``hybrid.attn_every`` layers via lax.cond.
+
+Public entry points:
+  init_model(cfg, key)                       -> params
+  forward(params, cfg, tokens, ...)          -> logits        (train / prefill)
+  lm_loss(params, cfg, tokens, ...)          -> (loss, aux)
+  prefill(params, cfg, tokens, ...)          -> (logits, cache)
+  decode_step(params, cfg, token, cache, t)  -> (logits, cache)
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.cache import (
+    AttnCache,
+    HybridCache,
+    SSMCache,
+    init_cache,
+    n_shared_invocations,
+)
+from repro.models.config import ModelConfig
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+
+def _init_layer(cfg: ModelConfig, key) -> dict:
+    ks = jax.random.split(key, 4)
+    if cfg.arch_type in ("dense", "vlm"):
+        return {
+            "ln1": L.init_rmsnorm(cfg.d_model),
+            "attn": L.init_attention(ks[0], cfg),
+            "ln2": L.init_rmsnorm(cfg.d_model),
+            "mlp": L.init_mlp(ks[1], cfg.d_model, cfg.d_ff),
+        }
+    if cfg.arch_type == "moe":
+        return {
+            "ln1": L.init_rmsnorm(cfg.d_model),
+            "attn": L.init_attention(ks[0], cfg),
+            "ln2": L.init_rmsnorm(cfg.d_model),
+            "moe": L.init_moe(ks[1], cfg),
+        }
+    if cfg.arch_type in ("ssm", "hybrid"):
+        return {
+            "ln1": L.init_rmsnorm(cfg.d_model),
+            "mamba": L.init_mamba2(ks[0], cfg),
+        }
+    raise ValueError(cfg.arch_type)
+
+
+def init_model(cfg: ModelConfig, key) -> dict:
+    k_embed, k_layers, k_head, k_extra = jax.random.split(key, 4)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    params = {
+        "embed": L.dense_init(k_embed, (cfg.vocab_padded, cfg.d_model), scale=0.02),
+        "layers": jax.vmap(partial(_init_layer, cfg))(layer_keys),
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(k_head, (cfg.d_model, cfg.vocab_padded))
+    if cfg.arch_type == "hybrid":
+        ks = jax.random.split(k_extra, 2)
+        params["shared_block"] = {
+            "ln1": L.init_rmsnorm(cfg.d_model),
+            "attn": L.init_attention(ks[0], cfg),
+            "ln2": L.init_rmsnorm(cfg.d_model),
+            "mlp": L.init_mlp(ks[1], cfg.d_model, cfg.d_ff),
+        }
+    if cfg.arch_type == "vlm":
+        params["vis_proj"] = L.dense_init(k_extra, (cfg.d_model, cfg.d_model))
+    return params
+
+
+# --------------------------------------------------------------------------
+# full-sequence forward (train / prefill)
+# --------------------------------------------------------------------------
+
+
+def _shared_block_fwd(sp, x, cfg, dtype, return_kv=False):
+    h = L.attention_fwd(
+        sp["attn"], L.rmsnorm(sp["ln1"], x, cfg.norm_eps), cfg,
+        dtype=dtype, return_kv=return_kv,
+    )
+    if return_kv:
+        h, kv = h
+    x = x + h
+    x = x + L.mlp_fwd(sp["mlp"], L.rmsnorm(sp["ln2"], x, cfg.norm_eps), dtype)
+    if return_kv:
+        return x, kv
+    return x
+
+
+def _layer_fwd(cfg: ModelConfig, shared, lp, x, idx, dtype):
+    """One scanned layer. Returns (x, aux)."""
+    x = L.constrain(x, "residual")
+    lp = L.constrain_tree(lp, "layer_params")
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.arch_type in ("dense", "vlm"):
+        x = x + L.attention_fwd(
+            lp["attn"], L.rmsnorm(lp["ln1"], x, cfg.norm_eps), cfg, dtype=dtype
+        )
+        x = x + L.mlp_fwd(lp["mlp"], L.rmsnorm(lp["ln2"], x, cfg.norm_eps), dtype)
+    elif cfg.arch_type == "moe":
+        x = x + L.attention_fwd(
+            lp["attn"], L.rmsnorm(lp["ln1"], x, cfg.norm_eps), cfg, dtype=dtype
+        )
+        h, aux = L.moe_fwd(lp["moe"], L.rmsnorm(lp["ln2"], x, cfg.norm_eps), cfg, dtype)
+        x = x + h
+    elif cfg.arch_type == "ssm":
+        x = x + L.mamba2_fwd(lp["mamba"], L.rmsnorm(lp["ln1"], x, cfg.norm_eps), cfg, dtype)
+    elif cfg.arch_type == "hybrid":
+        x = jax.lax.cond(
+            idx % cfg.hybrid.attn_every == 0,
+            lambda v: _shared_block_fwd(shared, v, cfg, dtype),
+            lambda v: v,
+            x,
+        )
+        x = x + L.mamba2_fwd(lp["mamba"], L.rmsnorm(lp["ln1"], x, cfg.norm_eps), cfg, dtype)
+    return x, aux
+
+
+def embed_inputs(params, cfg: ModelConfig, tokens, embeds, dtype):
+    """Token embedding; VLM prepends projected patch embeddings."""
+    x = params["embed"].astype(dtype)[tokens]
+    if cfg.arch_type == "vlm":
+        assert embeds is not None, "vlm requires patch embeddings"
+        vis = embeds.astype(dtype) @ params["vis_proj"].astype(dtype)
+        x = jnp.concatenate([vis, x], axis=1)
+    return x
+
+
+def backbone(params, cfg: ModelConfig, x, dtype, remat: bool = False):
+    """Scan the layer stack. x: (B, S, D) -> (B, S, D), aux."""
+    shared = params.get("shared_block")
+
+    def body(carry, inp):
+        x, aux = carry
+        lp, idx = inp
+        x, a = _layer_fwd(cfg, shared, lp, x, idx, dtype)
+        return (x, aux + a), None
+
+    if remat:
+        body = jax.checkpoint(body)
+
+    (x, aux), _ = jax.lax.scan(
+        body,
+        (x, jnp.zeros((), jnp.float32)),
+        (params["layers"], jnp.arange(cfg.n_layers)),
+    )
+    return L.rmsnorm(params["final_norm"], x, cfg.norm_eps), aux
+
+
+def logits_from_hidden(params, cfg: ModelConfig, x, dtype):
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(dtype)
+    if cfg.vocab_padded != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.vocab_padded) < cfg.vocab_size
+        logits = jnp.where(pad_mask, logits, -1e30)
+    return logits
+
+
+def forward(
+    params,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,
+    embeds: Optional[jnp.ndarray] = None,
+    dtype=jnp.float32,
+    remat: bool = False,
+):
+    """Full-sequence logits. For VLM the logits cover only token positions."""
+    x = embed_inputs(params, cfg, tokens, embeds, dtype)
+    x, aux = backbone(params, cfg, x, dtype, remat)
+    if cfg.arch_type == "vlm":
+        x = x[:, embeds.shape[1]:, :]
+    return logits_from_hidden(params, cfg, x, dtype), aux
+
+
+CE_CHUNK = 1024  # sequence-chunked cross entropy: (B, CHUNK, V) logits live,
+                 # never the full (B, S, V) — at production vocab (150k–256k)
+                 # the full logits tensor would be hundreds of GB.
+
+
+def chunked_ce(params, cfg: ModelConfig, x, tokens, dtype, logits_sharding=None):
+    """Per-example mean NLL of next-token prediction, computed in sequence
+    chunks with rematerialization. x: (B, S, D) final hidden; tokens (B, S).
+
+    ``logits_sharding``: optional NamedSharding for each (B, CHUNK, V) logits
+    chunk — shard V over "model" or the chunk is replicated across the model
+    axis (a ~10 GB/device regression at 150k vocab; see EXPERIMENTS.md §Perf).
+    """
+    b, s, d = x.shape
+    # re-shard the hidden stream D×"model" before the sequence slicing
+    # below: with S×"model" (sequence-parallel residual) the uneven [:-1]
+    # slice forces XLA to re-lay-out, and it picks batch-replicated copies
+    # (~1 GB each at 76B scale; §Perf iteration 4)
+    x = L.constrain(x, "ce_input")
+    s1 = s - 1
+    chunk = min(CE_CHUNK, s1)
+    nc = -(-s1 // chunk)
+    pad = nc * chunk - s1
+    x_in = jnp.pad(x[:, :-1], ((0, 0), (0, pad), (0, 0)))
+    tgt = jnp.pad(tokens[:, 1:], ((0, 0), (0, pad)))
+    valid = jnp.pad(jnp.ones((b, s1), jnp.float32), ((0, 0), (0, pad)))
+
+    xs = jnp.moveaxis(x_in.reshape(b, nc, chunk, d), 1, 0)
+    tgts = jnp.moveaxis(tgt.reshape(b, nc, chunk), 1, 0)
+    valids = jnp.moveaxis(valid.reshape(b, nc, chunk), 1, 0)
+
+    @jax.checkpoint
+    def body(acc, inp):
+        xc, tc, vc = inp
+        logits = logits_from_hidden(params, cfg, xc, dtype)
+        if logits_sharding is not None:
+            logits = jax.lax.with_sharding_constraint(logits, logits_sharding)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, tc[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(nll * vc, axis=-1), None
+
+    acc, _ = jax.lax.scan(body, jnp.zeros((b,), jnp.float32), (xs, tgts, valids))
+    return acc / s1
+
+
+def lm_loss(
+    params,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,
+    embeds: Optional[jnp.ndarray] = None,
+    dtype=jnp.float32,
+    remat: bool = False,
+    loss_weights: Optional[jnp.ndarray] = None,
+    aux_coeff: float = 0.01,
+    reduce: bool = True,
+    logits_sharding=None,
+):
+    """Next-token cross entropy (+ MoE aux). ``loss_weights``: per-example
+    weights (B,) — the hook the PO-FL trainer uses for device reweighting.
+    ``reduce=False`` returns the per-example loss vector (B,) instead of the
+    scalar (used by the per-FL-device statistics passes)."""
+    x = embed_inputs(params, cfg, tokens, embeds, dtype)
+    x, aux = backbone(params, cfg, x, dtype, remat)
+    if cfg.arch_type == "vlm":
+        x = x[:, embeds.shape[1]:, :]
+    per_example = chunked_ce(params, cfg, x, tokens, dtype, logits_sharding)  # (B,)
+    if loss_weights is not None:
+        per_example = per_example * loss_weights
+    if not reduce:
+        return per_example, aux
+    return jnp.mean(per_example) + aux_coeff * aux, aux
+
+
+# --------------------------------------------------------------------------
+# prefill
+# --------------------------------------------------------------------------
+
+
+def prefill(
+    params,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,
+    embeds: Optional[jnp.ndarray] = None,
+    dtype=jnp.float32,
+):
+    """Run the full prompt, build the decode cache, return last-pos logits."""
+    b, s = tokens.shape
+    x = embed_inputs(params, cfg, tokens, embeds, dtype)
+    s_total = x.shape[1]
+    shared = params.get("shared_block")
+
+    if cfg.arch_type in ("dense", "vlm", "moe"):
+
+        def body(x, lp):
+            x = L.constrain(x, "residual")
+            lp = L.constrain_tree(lp, "layer_params")
+            h, kv = L.attention_fwd(
+                lp["attn"], L.rmsnorm(lp["ln1"], x, cfg.norm_eps), cfg,
+                dtype=dtype, return_kv=True,
+            )
+            x = x + h
+            if cfg.arch_type == "moe":
+                m, _ = L.moe_fwd(lp["moe"], L.rmsnorm(lp["ln2"], x, cfg.norm_eps), cfg, dtype)
+            else:
+                m = L.mlp_fwd(lp["mlp"], L.rmsnorm(lp["ln2"], x, cfg.norm_eps), dtype)
+            return x + m, kv
+
+        x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+        cache = AttnCache(k=ks, v=vs, pos=jnp.arange(s_total, dtype=jnp.int32))
+    elif cfg.arch_type == "ssm":
+        # SSD prefill: run full sequence, then reconstruct the final state by
+        # a single recurrent pass over the last conv-kernel window is NOT
+        # sufficient — instead we run chunked SSD and also emit final states.
+        x, cache = _ssm_prefill(params, cfg, x, dtype)
+    elif cfg.arch_type == "hybrid":
+        x, cache = _hybrid_prefill(params, cfg, x, dtype)
+    else:
+        raise ValueError(cfg.arch_type)
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = logits_from_hidden(params, cfg, x[:, -1:, :], dtype)
+    return logits, cache
+
+
+def _mamba_layer_with_state(lp, x, cfg, dtype):
+    """Full-sequence Mamba2 that also returns (ssm_state, conv_state)."""
+    s_cfg = cfg.ssm
+    d = cfg.d_model
+    di, nh, n = s_cfg.d_inner(d), s_cfg.n_heads(d), s_cfg.d_state
+
+    h_in = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+    zxbcdt = h_in @ lp["mamba"]["in_proj"].astype(dtype)
+    z, xbc, dt = L._split_mamba_proj(zxbcdt, di, n, nh)
+    conv_state = xbc[:, -(s_cfg.conv_kernel - 1):, :]
+    xbc = jax.nn.silu(
+        L.causal_conv1d(xbc, lp["mamba"]["conv_w"].astype(dtype), lp["mamba"]["conv_b"].astype(dtype))
+    )
+    xin, B, C = xbc[..., :di], xbc[..., di : di + n], xbc[..., di + n :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["mamba"]["dt_bias"])
+    la = -jnp.exp(lp["mamba"]["A_log"])[None, None, :] * dt
+    xh = xin.reshape(*xin.shape[:-1], nh, s_cfg.head_dim)
+    xdt = xh * dt[..., None].astype(dtype)
+
+    chunk = min(s_cfg.chunk_size, x.shape[1])
+    y = L.ssd_chunked(xdt, la.astype(jnp.float32), B, C, chunk)
+
+    # final state: replay the decay-weighted sum over the whole sequence
+    La = jnp.cumsum(la, axis=1)  # (B,S,H)
+    seg = jnp.exp(La[:, -1:, :] - La)  # decay from t to sequence end
+    final_state = jnp.einsum("bsh,bsn,bshp->bhnp", seg.astype(dtype), B, xdt)
+
+    y = y + lp["mamba"]["D"].astype(dtype)[None, None, :, None] * xh
+    y = y.reshape(*y.shape[:-2], di)
+    y = L.rmsnorm(lp["mamba"]["norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    out = x + y @ lp["mamba"]["out_proj"].astype(dtype)
+    return out, final_state, conv_state
+
+
+def _ssm_prefill(params, cfg, x, dtype):
+    def body(x, lp):
+        x = L.constrain(x, "residual")
+        lp = L.constrain_tree(lp, "layer_params")
+        out, st, cv = _mamba_layer_with_state(lp, x, cfg, dtype)
+        return out, (st, cv)
+
+    x, (states, convs) = jax.lax.scan(body, x, params["layers"])
+    return x, SSMCache(state=states, conv=convs)
+
+
+def _hybrid_prefill(params, cfg, x, dtype):
+    shared = params["shared_block"]
+    every = cfg.hybrid.attn_every
+    n_inv = n_shared_invocations(cfg)
+    s_total = x.shape[1]
+    kv, dh = cfg.n_kv_heads, cfg.head_dim
+    ks0 = jnp.zeros((n_inv, x.shape[0], s_total, kv, dh), dtype)
+    vs0 = jnp.zeros_like(ks0)
+
+    def body(carry, inp):
+        x, ks, vs = carry
+        x = L.constrain(x, "residual")
+        lp, idx = inp
+        lp = L.constrain_tree(lp, "layer_params")
+
+        def with_attn(x):
+            out, (k, v) = _shared_block_fwd(shared, x, cfg, dtype, return_kv=True)
+            return out, k, v
+
+        def without(x):
+            z = jnp.zeros((x.shape[0], s_total, kv, dh), dtype)
+            return x, z, z
+
+        x2, k, v = jax.lax.cond(idx % every == 0, with_attn, without, x)
+        inv = idx // every
+        write = (idx % every == 0).astype(dtype)
+        ks = jax.lax.dynamic_update_index_in_dim(
+            ks, write * k + (1 - write) * jax.lax.dynamic_index_in_dim(ks, inv, 0, False),
+            inv, 0)
+        vs = jax.lax.dynamic_update_index_in_dim(
+            vs, write * v + (1 - write) * jax.lax.dynamic_index_in_dim(vs, inv, 0, False),
+            inv, 0)
+        out, st, cv = _mamba_layer_with_state(lp, x2, cfg, dtype)
+        return (out, ks, vs), (st, cv)
+
+    (x, ks, vs), (states, convs) = jax.lax.scan(
+        body, (x, ks0, vs0), (params["layers"], jnp.arange(cfg.n_layers))
+    )
+    cache = HybridCache(
+        ssm=SSMCache(state=states, conv=convs),
+        attn=AttnCache(k=ks, v=vs, pos=jnp.arange(s_total, dtype=jnp.int32)),
+    )
+    return x, cache
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+
+
+def decode_step(
+    params,
+    cfg: ModelConfig,
+    token: jnp.ndarray,  # (B, 1) int32
+    cache,
+    t: jnp.ndarray,      # scalar int32 — absolute position of this token
+    dtype=jnp.float32,
+):
+    """One serve step: consume one token, update the cache, emit logits."""
+    x = params["embed"].astype(dtype)[token]
+
+    if cfg.arch_type in ("dense", "vlm", "moe"):
+        s_max = cache.k.shape[2]
+        slot = (t % s_max).astype(jnp.int32)
+        new_pos = jax.lax.dynamic_update_slice(
+            cache.pos, t[None].astype(jnp.int32), (slot,)
+        )
+
+        def body(x, lp_kv):
+            lp, ck, cv = lp_kv
+            h, (ck, cv, _) = L.attention_decode(
+                lp["attn"], L.rmsnorm(lp["ln1"], x, cfg.norm_eps), cfg,
+                ck, cv, new_pos, t, dtype=dtype,
+            )
+            x = x + h
+            if cfg.arch_type == "moe":
+                m, _ = L.moe_fwd(lp["moe"], L.rmsnorm(lp["ln2"], x, cfg.norm_eps), cfg, dtype)
+            else:
+                m = L.mlp_fwd(lp["mlp"], L.rmsnorm(lp["ln2"], x, cfg.norm_eps), dtype)
+            return x + m, (ck, cv)
+
+        x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cache.k, cache.v))
+        new_cache = AttnCache(k=ks, v=vs, pos=new_pos)
+    elif cfg.arch_type == "ssm":
+
+        def body(x, lp_state):
+            lp, st, cv = lp_state
+            h_in = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+            h, st, cv = L.mamba2_decode(lp["mamba"], h_in, cfg, st, cv, dtype)
+            return x + h, (st, cv)
+
+        x, (states, convs) = jax.lax.scan(
+            body, x, (params["layers"], cache.state, cache.conv)
+        )
+        new_cache = SSMCache(state=states, conv=convs)
+    elif cfg.arch_type == "hybrid":
+        x, new_cache = _hybrid_decode(params, cfg, x, cache, t, dtype)
+    else:
+        raise ValueError(cfg.arch_type)
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return logits_from_hidden(params, cfg, x, dtype), new_cache
+
+
+def _hybrid_decode(params, cfg, x, cache: HybridCache, t, dtype):
+    shared = params["shared_block"]
+    every = cfg.hybrid.attn_every
+    s_max = cache.attn.k.shape[2]
+    slot = (t % s_max).astype(jnp.int32)
+    new_pos = jax.lax.dynamic_update_slice(
+        cache.attn.pos, t[None].astype(jnp.int32), (slot,)
+    )
+
+    def body(carry, inp):
+        x, ks, vs = carry
+        lp, st, cv, idx = inp
+
+        def with_attn(args):
+            x, ks, vs = args
+            inv = idx // every
+            ck = jax.lax.dynamic_index_in_dim(ks, inv, 0, keepdims=False)
+            cvv = jax.lax.dynamic_index_in_dim(vs, inv, 0, keepdims=False)
+            h, (ck, cvv, _) = L.attention_decode(
+                shared["attn"], L.rmsnorm(shared["ln1"], x, cfg.norm_eps), cfg,
+                ck, cvv, new_pos, t, dtype=dtype,
+            )
+            x = x + h
+            x = x + L.mlp_fwd(shared["mlp"], L.rmsnorm(shared["ln2"], x, cfg.norm_eps), dtype)
+            ks = jax.lax.dynamic_update_index_in_dim(ks, ck, inv, 0)
+            vs = jax.lax.dynamic_update_index_in_dim(vs, cvv, inv, 0)
+            return x, ks, vs
+
+        x, ks, vs = jax.lax.cond(
+            idx % every == 0, with_attn, lambda a: a, (x, ks, vs)
+        )
+        h_in = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        h, st, cv = L.mamba2_decode(lp["mamba"], h_in, cfg, st, cv, dtype)
+        return (x + h, ks, vs), (st, cv)
+
+    (x, ks, vs), (states, convs) = jax.lax.scan(
+        body,
+        (x, cache.attn.k, cache.attn.v),
+        (params["layers"], cache.ssm.state, cache.ssm.conv, jnp.arange(cfg.n_layers)),
+    )
+    return x, HybridCache(
+        ssm=SSMCache(state=states, conv=convs),
+        attn=AttnCache(k=ks, v=vs, pos=new_pos),
+    )

@@ -1,0 +1,9 @@
+from repro.optim.optimizers import (
+    OptState,
+    adamw,
+    cosine_schedule,
+    paper_decay_schedule,
+    sgd,
+)
+
+__all__ = ["OptState", "adamw", "sgd", "cosine_schedule", "paper_decay_schedule"]

@@ -1,0 +1,100 @@
+"""Minimal optax-free optimizer substrate (pytree-native, shardable).
+
+Each optimizer is a (init, update) pair operating on pytrees; state tensors
+mirror parameter shapes, so whatever sharding the params carry propagates to
+the optimizer state under pjit (FSDP-compatible).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any    # first moment (or momentum); zeros-pytree
+    nu: Any    # second moment; zeros-pytree (unused by sgd)
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], OptState]
+    update: Callable[[Any, OptState, Any], tuple[Any, OptState]]
+
+
+def _zeros_like_tree(params):
+    return jax.tree.map(jnp.zeros_like, params)
+
+
+def sgd(lr: Callable[[jnp.ndarray], jnp.ndarray] | float, momentum: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr))
+
+    def init(params):
+        return OptState(step=jnp.zeros((), jnp.int32), mu=_zeros_like_tree(params), nu=None)
+
+    def update(grads, state, params):
+        eta = lr_fn(state.step)
+        if momentum > 0.0:
+            mu = jax.tree.map(lambda m, g: momentum * m + g, state.mu, grads)
+        else:
+            mu = grads
+        new_params = jax.tree.map(lambda p, m: p - eta * m, params, mu)
+        return new_params, OptState(step=state.step + 1, mu=mu if momentum > 0 else state.mu, nu=None)
+
+    return Optimizer(init=init, update=update)
+
+
+def adamw(
+    lr: Callable[[jnp.ndarray], jnp.ndarray] | float,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr))
+
+    def init(params):
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            mu=_zeros_like_tree(params),
+            nu=_zeros_like_tree(params),
+        )
+
+    def update(grads, state, params):
+        step = state.step + 1
+        eta = lr_fn(state.step)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m, v):
+            mhat = m / bc1
+            vhat = v / bc2
+            return p - eta * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, OptState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init=init, update=update)
+
+
+def paper_decay_schedule(lr0: float, decay: float = 0.95, lr_min: float = 1e-5):
+    """Paper Sec. V-A: η^t = max(η0 · 0.95^t, 1e-5)."""
+
+    def fn(step):
+        return jnp.maximum(lr0 * decay ** step.astype(jnp.float32), lr_min)
+
+    return fn
+
+
+def cosine_schedule(lr0: float, total_steps: int, warmup: int = 0, lr_min: float = 0.0):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = lr0 * step / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1), 0.0, 1.0)
+        cos = lr_min + 0.5 * (lr0 - lr_min) * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+
+    return fn

@@ -1,0 +1,106 @@
+"""AirComp signal-chain tests: Lemma 1, Eq. 5/8/15/16."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aircomp
+
+
+def _setup(key, n=8, dim=64):
+    k1, k2, k3 = jax.random.split(key, 3)
+    g = jax.random.normal(k1, (n, dim)) * jnp.arange(1, n + 1)[:, None] * 0.1
+    h = (jax.random.normal(k2, (n,)) + 1j * jax.random.normal(k3, (n,))) / jnp.sqrt(2)
+    h = h * jnp.linspace(0.5, 2.0, n)  # varied channel quality
+    rho = jnp.linspace(0.05, 0.2, n)
+    mask = (jnp.arange(n) % 2 == 0).astype(jnp.float32)
+    return g, h, rho, mask
+
+
+def test_lemma1_power_constraint():
+    """|b_i|^2 <= P must hold with equality for the argmin device."""
+    g, h, rho, mask = _setup(jax.random.PRNGKey(0))
+    P = 1.0
+    a = aircomp.denoise_scalar(rho, jnp.abs(h), mask, P)
+    ok = aircomp.power_check(rho, h, a, P)
+    assert bool(jnp.all(ok[mask > 0]))
+    b = aircomp.transmit_scalars(rho, h, a)
+    powers = jnp.where(mask > 0, jnp.abs(b) ** 2, 0.0)
+    np.testing.assert_allclose(float(jnp.max(powers)), P, rtol=1e-5)
+
+
+def test_normalization_unit_stats():
+    """Eq. 5 with the device's own stats gives zero-mean unit-variance symbols."""
+    g = jax.random.normal(jax.random.PRNGKey(0), (4, 4096)) * 3.0 + 1.5
+    stats = aircomp.local_stats(g)
+    s = jax.vmap(aircomp.normalize)(g, stats.mean, stats.var)
+    np.testing.assert_allclose(jnp.mean(s, axis=1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(jnp.var(s, axis=1), 1.0, rtol=1e-4)
+
+
+def test_physical_path_matches_eq16_up_to_mean_term():
+    """The full Eq. 5→8 physical chain equals the Lemma-1 simplified Eq. 16
+    estimator up to the documented M_g·(1−Σρ_i) mean term (DESIGN.md note:
+    Eq. 9 in the paper implicitly assumes Σ_{i∈S} h_i b_i / a = 1)."""
+    g, h, rho, mask = _setup(jax.random.PRNGKey(1))
+    key = jax.random.PRNGKey(7)
+    y_phys, e1 = aircomp.aircomp_aggregate(
+        g, rho, h, mask, key, 1.0, 1e-6, simulate_physical=True
+    )
+    y_eq16, e2 = aircomp.aircomp_aggregate(
+        g, rho, h, mask, key, 1.0, 1e-6, simulate_physical=False
+    )
+    stats = aircomp.local_stats(g)
+    m_g, _ = aircomp.global_stats(stats, rho, mask)
+    mean_term = m_g * (1.0 - jnp.sum(mask * rho))
+    np.testing.assert_allclose(y_phys, y_eq16 + mean_term, rtol=2e-4, atol=1e-6)
+    np.testing.assert_allclose(e1, e2)
+
+
+def test_distortion_closed_form_matches_monte_carlo():
+    """Eq. 15: E||ŷ − y||² over the noise = D σ_z² V_g / P · max ρ²/|h|²."""
+    g, h, rho, mask = _setup(jax.random.PRNGKey(2), n=6, dim=32)
+    P, s2 = 1.0, 1e-3
+    target = jnp.sum((mask * rho)[:, None] * g, axis=0)
+
+    def one(key):
+        y, _ = aircomp.aircomp_aggregate(
+            g, rho, h, mask, key, P, s2, simulate_physical=False
+        )
+        return jnp.sum((y - target) ** 2)
+
+    keys = jax.random.split(jax.random.PRNGKey(3), 4000)
+    emp = jnp.mean(jax.vmap(one)(keys))
+    stats = aircomp.local_stats(g)
+    _, v_g = aircomp.global_stats(stats, rho, mask)
+    closed = aircomp.distortion_closed_form(
+        v_g, rho, jnp.abs(h), mask, g.shape[-1], P, s2
+    )
+    np.testing.assert_allclose(emp, closed, rtol=0.08)
+
+
+def test_zero_noise_recovers_exact_weighted_sum():
+    g, h, rho, mask = _setup(jax.random.PRNGKey(4))
+    y, e = aircomp.aircomp_aggregate(
+        g, rho, h, mask, jax.random.PRNGKey(0), 1.0, 0.0, simulate_physical=False
+    )
+    target = jnp.sum((mask * rho)[:, None] * g, axis=0)
+    np.testing.assert_allclose(y, target, rtol=1e-5, atol=1e-6)
+    assert float(e) == 0.0
+
+    # the physical chain at zero noise recovers the sum + the mean term
+    y_p, _ = aircomp.aircomp_aggregate(
+        g, rho, h, mask, jax.random.PRNGKey(0), 1.0, 0.0, simulate_physical=True
+    )
+    stats = aircomp.local_stats(g)
+    m_g, _ = aircomp.global_stats(stats, rho, mask)
+    mean_term = m_g * (1.0 - jnp.sum(mask * rho))
+    np.testing.assert_allclose(y_p, target + mean_term, rtol=2e-4, atol=1e-6)
+
+
+def test_denoise_scalar_over_scheduled_set_only():
+    rho = jnp.array([0.1, 0.1, 0.1])
+    h_abs = jnp.array([1e-6, 1.0, 2.0])  # device 0 has a terrible channel
+    mask = jnp.array([0.0, 1.0, 1.0])    # ... but is not scheduled
+    a = aircomp.denoise_scalar(rho, h_abs, mask, 1.0)
+    np.testing.assert_allclose(float(a), 1.0 / 0.1, rtol=1e-6)

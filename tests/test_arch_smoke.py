@@ -1,0 +1,141 @@
+"""Per-architecture smoke tests (deliverable f).
+
+For every assigned architecture: instantiate a REDUCED variant of the same
+family (2 layers, d_model ≤ 512, ≤ 4 experts) and run one forward/train step
+on CPU asserting output shapes + no NaNs; plus one prefill→decode step for
+the decode-capable archs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.models import api
+from repro.models.config import INPUT_SHAPES
+
+SMOKE_B, SMOKE_S = 2, 32
+
+
+def _smoke_batch(cfg, key, seq=SMOKE_S):
+    kt, ke = jax.random.split(key)
+    batch = {}
+    if cfg.arch_type == "vlm":
+        n_p = cfg.vlm.n_patches
+        batch["tokens"] = jax.random.randint(kt, (SMOKE_B, seq - n_p), 0, cfg.vocab_size)
+        batch["embeds"] = jax.random.normal(ke, (SMOKE_B, n_p, cfg.d_model))
+    elif cfg.arch_type == "encdec":
+        batch["tokens"] = jax.random.randint(kt, (SMOKE_B, seq), 0, cfg.vocab_size)
+        batch["frames"] = jax.random.normal(
+            ke, (SMOKE_B, cfg.encdec.n_enc_frames, cfg.d_model)
+        )
+    else:
+        batch["tokens"] = jax.random.randint(kt, (SMOKE_B, seq), 0, cfg.vocab_size)
+    return batch
+
+
+@pytest.mark.parametrize("arch_id", configs.ARCH_IDS)
+def test_reduced_train_step(arch_id):
+    cfg = configs.reduced_config(arch_id)
+    key = jax.random.PRNGKey(0)
+    params = api.model_init(cfg, key)
+    batch = _smoke_batch(cfg, jax.random.PRNGKey(1))
+
+    def loss_fn(p):
+        loss, _ = api.model_loss(p, cfg, batch)
+        return loss
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert loss.shape == ()
+    assert jnp.isfinite(loss), f"{arch_id}: non-finite loss {loss}"
+    # gradient flows to every parameter leaf
+    leaves = jax.tree.leaves(grads)
+    assert all(jnp.all(jnp.isfinite(l)) for l in leaves), f"{arch_id}: NaN grads"
+    total_norm = sum(jnp.sum(l * l) for l in leaves) ** 0.5
+    assert total_norm > 0, f"{arch_id}: zero gradient"
+    # one SGD step moves the loss
+    params2 = jax.tree.map(lambda p, g: p - 0.1 * g, params, grads)
+    loss2, _ = api.model_loss(params2, cfg, batch)
+    assert jnp.isfinite(loss2)
+
+
+@pytest.mark.parametrize("arch_id", configs.ARCH_IDS)
+def test_reduced_prefill_decode(arch_id):
+    cfg = configs.reduced_config(arch_id)
+    key = jax.random.PRNGKey(0)
+    params = api.model_init(cfg, key)
+    batch = _smoke_batch(cfg, jax.random.PRNGKey(1))
+
+    logits, cache = api.model_prefill(params, cfg, batch)
+    assert logits.shape == (SMOKE_B, 1, cfg.vocab_padded)
+    assert jnp.all(jnp.isfinite(logits)), f"{arch_id}: NaN prefill logits"
+
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    seq = batch["tokens"].shape[1]
+    t = jnp.asarray(seq, jnp.int32)
+    logits2, cache2 = api.model_decode(params, cfg, tok, cache, t)
+    assert logits2.shape == (SMOKE_B, 1, cfg.vocab_padded)
+    assert jnp.all(jnp.isfinite(logits2)), f"{arch_id}: NaN decode logits"
+
+
+@pytest.mark.parametrize("arch_id", configs.ARCH_IDS)
+def test_full_config_matches_assignment(arch_id):
+    """The full-size config matches the assigned numbers exactly."""
+    cfg = configs.get_config(arch_id)
+    expected = {
+        "zamba2-2.7b": (54, 2560, 32, 32, 10240, 32000),
+        "olmoe-1b-7b": (16, 2048, 16, 16, 1024, 50304),
+        "internvl2-76b": (80, 8192, 64, 8, 28672, 128256),
+        "qwen2-0.5b": (24, 896, 14, 2, 4864, 151936),
+        "mistral-large-123b": (88, 12288, 96, 8, 28672, 32768),
+        "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+        "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256206),
+        "qwen2.5-14b": (48, 5120, 40, 8, 13824, 152064),
+        "phi4-mini-3.8b": (32, 3072, 24, 8, 8192, 200064),
+        "mamba2-370m": (48, 1024, 16, 16, 0, 50280),
+    }[arch_id]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff, cfg.vocab_size)
+    assert got == expected, f"{arch_id}: {got} != {expected}"
+    assert cfg.source, f"{arch_id}: missing source citation"
+    # MoE / SSM extras
+    if arch_id == "olmoe-1b-7b":
+        assert (cfg.moe.n_experts, cfg.moe.top_k) == (64, 8)
+    if arch_id == "llama4-scout-17b-a16e":
+        assert (cfg.moe.n_experts, cfg.moe.top_k) == (16, 1)
+    if arch_id == "zamba2-2.7b":
+        assert cfg.ssm.d_state == 64
+    if arch_id == "mamba2-370m":
+        assert cfg.ssm.d_state == 128
+
+
+def test_long_context_variants():
+    for a in configs.LONG_CONTEXT_VIA_WINDOW:
+        cfg = configs.get_config(a, "long_500k")
+        assert cfg.sliding_window == configs.LONG_CONTEXT_WINDOW
+        assert cfg.supports_long_context
+    for a in ("zamba2-2.7b", "mamba2-370m"):
+        cfg = configs.get_config(a, "long_500k")
+        assert cfg.supports_long_context  # native, no window needed
+    for a in configs.LONG_CONTEXT_SKIP:
+        with pytest.raises(ValueError):
+            configs.get_config(a, "long_500k")
+        assert not configs.supports_shape(a, "long_500k")
+
+
+@pytest.mark.parametrize("shape_name", list(INPUT_SHAPES))
+def test_input_specs_are_structs(shape_name):
+    """input_specs never allocates — everything is a ShapeDtypeStruct."""
+    for arch_id in configs.ARCH_IDS:
+        if not configs.supports_shape(arch_id, shape_name):
+            continue
+        cfg = configs.get_config(arch_id, shape_name)
+        specs = configs.input_specs(cfg, shape_name)
+        for leaf in jax.tree.leaves(specs):
+            assert isinstance(leaf, jax.ShapeDtypeStruct), type(leaf)
+        shape = INPUT_SHAPES[shape_name]
+        if shape.kind in ("train", "prefill"):
+            toks = specs["batch"]["tokens"]
+            assert toks.shape[0] == shape.global_batch
+        else:
+            assert specs["token"].shape == (shape.global_batch, 1)

@@ -1,0 +1,44 @@
+"""Channel-model tests (paper Sec. V-A constants)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.channel import ChannelConfig, ChannelState, device_distances, path_loss
+
+
+def test_path_loss_monotone_decreasing():
+    cfg = ChannelConfig()
+    d = jnp.linspace(10.0, 50.0, 16)
+    g = path_loss(cfg, d)
+    assert jnp.all(g > 0)
+    assert jnp.all(jnp.diff(g) < 0), "path loss gain must decrease with distance"
+
+
+def test_distances_in_range():
+    cfg = ChannelConfig(n_devices=100)
+    d = device_distances(cfg, jax.random.PRNGKey(0))
+    assert d.shape == (100,)
+    assert float(d.min()) >= cfg.d_min and float(d.max()) <= cfg.d_max
+
+
+def test_rayleigh_fading_statistics():
+    """E[|h|^2] = g_i and h is zero-mean complex (CN(0, g))."""
+    cfg = ChannelConfig(n_devices=8)
+    state = ChannelState.create(cfg, jax.random.PRNGKey(0))
+    keys = jax.random.split(jax.random.PRNGKey(1), 4000)
+    hs = jax.vmap(state.sample)(keys)  # (4000, 8)
+    emp_power = jnp.mean(jnp.abs(hs) ** 2, axis=0)
+    np.testing.assert_allclose(emp_power, state.gains, rtol=0.1)
+    emp_mean = jnp.abs(jnp.mean(hs, axis=0))
+    assert float(emp_mean.max()) < 3e-2 * float(jnp.sqrt(state.gains.max())) * 10
+
+
+def test_channel_is_block_fading_iid_over_rounds():
+    cfg = ChannelConfig(n_devices=4)
+    state = ChannelState.create(cfg, jax.random.PRNGKey(0))
+    h1 = state.sample(jax.random.PRNGKey(1))
+    h2 = state.sample(jax.random.PRNGKey(2))
+    assert not np.allclose(h1, h2)
+    # same key -> reproducible
+    np.testing.assert_array_equal(h1, state.sample(jax.random.PRNGKey(1)))

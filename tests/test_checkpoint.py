@@ -1,0 +1,33 @@
+"""Checkpoint round-trip: params + optimizer state through npz."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.checkpoint import restore, save
+from repro.models import api
+from repro.optim.optimizers import adamw
+
+
+def test_roundtrip(tmp_path):
+    cfg = configs.reduced_config("qwen2-0.5b")
+    params = api.model_init(cfg, jax.random.PRNGKey(0))
+    opt = adamw(1e-3)
+    opt_state = opt.init(params)
+    # one update so state is non-trivial
+    grads = jax.tree.map(jnp.ones_like, params)
+    params, opt_state = opt.update(grads, opt_state, params)
+
+    path = str(tmp_path / "ckpt")
+    save(path, step=7, params=params, opt_state=opt_state)
+
+    p_t = jax.tree.map(jnp.zeros_like, params)
+    o_t = jax.tree.map(jnp.zeros_like, opt_state)
+    step, p2, o2 = restore(path, p_t, o_t)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(opt_state), jax.tree.leaves(o2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,31 @@
+"""Launcher: run the multi-device test modules in a subprocess with 8 host
+devices (XLA locks the device count at first jax init, so the main pytest
+process — which must see 1 device for the smoke tests — cannot host them)."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+HERE = os.path.dirname(__file__)
+MULTI_DEVICE_MODULES = ["test_distributed.py", "test_dryrun_small.py"]
+
+
+@pytest.mark.parametrize("module", MULTI_DEVICE_MODULES)
+def test_multi_device_module(module):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=8 " + env.get("XLA_FLAGS", "")
+    )
+    env["PYTHONPATH"] = os.path.join(HERE, "..", "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "pytest", os.path.join(HERE, module), "-q",
+         "-p", "no:cacheprovider"],
+        env=env, capture_output=True, text=True, timeout=2400,
+    )
+    if proc.returncode != 0:
+        sys.stdout.write(proc.stdout[-8000:])
+        sys.stderr.write(proc.stderr[-4000:])
+    assert proc.returncode == 0, f"{module} failed in 8-device subprocess"

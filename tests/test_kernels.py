@@ -1,0 +1,174 @@
+"""Per-kernel validation: Pallas (interpret=True on CPU) vs pure-jnp oracle,
+swept over shapes and dtypes (deliverable c)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.aircomp import aircomp_fused, aircomp_fused_ref
+from repro.kernels.attention import flash_attention, mha_ref
+from repro.kernels.ssd import ssd_chunked_ref, ssd_naive, ssd_pallas
+
+# --------------------------------------------------------------------------
+# aircomp fused
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,d", [(4, 512), (30, 1024), (7, 700), (1, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_aircomp_fused_matches_ref(n, d, dtype):
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 5)
+    g = jax.random.normal(ks[0], (n, d), dtype)
+    coeff = jax.random.uniform(ks[1], (n,)) * (
+        jax.random.uniform(ks[2], (n,)) > 0.3
+    )
+    z = jax.random.normal(ks[3], (d,), dtype)
+    m_g = jnp.float32(0.13)
+    v_g = jnp.float32(0.7)
+    a = jnp.float32(2.4)
+
+    got = aircomp_fused(g, coeff, m_g, v_g, a, z, interpret=True)
+    want = aircomp_fused_ref(
+        g.astype(jnp.float32), coeff, m_g, v_g, a, z.astype(jnp.float32)
+    )
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want), rtol=tol, atol=tol
+    )
+
+
+def test_aircomp_fused_zero_noise_is_weighted_sum():
+    key = jax.random.PRNGKey(1)
+    g = jax.random.normal(key, (8, 512))
+    coeff = jnp.ones((8,)) / 8
+    out = aircomp_fused(
+        g, coeff, jnp.float32(0.0), jnp.float32(1.0), jnp.float32(1.0),
+        jnp.zeros((512,)), interpret=True,
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(g.mean(0)), rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# ssd
+# --------------------------------------------------------------------------
+
+
+def _ssd_inputs(key, b, s, h, p, n, dtype):
+    ks = jax.random.split(key, 4)
+    xdt = jax.random.normal(ks[0], (b, s, h, p), dtype)
+    # realistic log decays in [-3, 0)
+    la = -jax.random.uniform(ks[1], (b, s, h), jnp.float32, 0.01, 3.0)
+    B = jax.random.normal(ks[2], (b, s, n), dtype)
+    C = jax.random.normal(ks[3], (b, s, n), dtype)
+    return xdt, la, B, C
+
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (2, 64, 4, 32, 16, 16),
+    (1, 128, 2, 64, 64, 32),
+    (3, 32, 8, 16, 8, 32),   # chunk == s
+])
+def test_ssd_chunked_ref_matches_naive(b, s, h, p, n, chunk):
+    xdt, la, B, C = _ssd_inputs(jax.random.PRNGKey(0), b, s, h, p, n, jnp.float32)
+    got = ssd_chunked_ref(xdt, la, B, C, chunk)
+    want = ssd_naive(xdt, la, B, C)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (2, 64, 4, 32, 16, 16),
+    (1, 128, 2, 64, 64, 32),
+    (2, 32, 8, 16, 8, 16),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_pallas_matches_naive(b, s, h, p, n, chunk, dtype):
+    xdt, la, B, C = _ssd_inputs(jax.random.PRNGKey(1), b, s, h, p, n, dtype)
+    got = ssd_pallas(xdt, la, B.astype(dtype), C.astype(dtype), chunk=chunk, interpret=True)
+    want = ssd_naive(
+        xdt.astype(jnp.float32), la, B.astype(jnp.float32), C.astype(jnp.float32)
+    )
+    tol = 5e-4 if dtype == jnp.float32 else 8e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want), rtol=tol, atol=tol
+    )
+
+
+def test_ssd_pallas_state_reset_across_batch():
+    """The scratch state must reset at chunk 0 of every batch row —
+    batch rows are independent."""
+    xdt, la, B, C = _ssd_inputs(jax.random.PRNGKey(2), 3, 64, 2, 16, 8, jnp.float32)
+    full = ssd_pallas(xdt, la, B, C, chunk=16, interpret=True)
+    # row 2 computed alone must equal row 2 of the batched run
+    solo = ssd_pallas(xdt[2:], la[2:], B[2:], C[2:], chunk=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(full[2:]), np.asarray(solo), rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# flash attention
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,sq,sk,h,kv,dh,bq,bk", [
+    (2, 64, 64, 4, 4, 32, 16, 16),    # MHA causal
+    (1, 128, 128, 8, 2, 64, 32, 32),  # GQA 4:1
+    (2, 64, 64, 4, 1, 32, 64, 16),    # MQA, single q block
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_causal_matches_ref(b, sq, sk, h, kv, dh, bq, bk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, sq, h, dh), dtype)
+    k = jax.random.normal(ks[1], (b, sk, kv, dh), dtype)
+    v = jax.random.normal(ks[2], (b, sk, kv, dh), dtype)
+    got = flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk, interpret=True)
+    want = mha_ref(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32), causal=True
+    )
+    tol = 2e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want), rtol=tol, atol=tol
+    )
+
+
+@pytest.mark.parametrize("window", [16, 32, 100])
+def test_flash_sliding_window_matches_ref(window):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    b, s, h, kv, dh = 1, 128, 4, 2, 32
+    q = jax.random.normal(ks[0], (b, s, h, dh))
+    k = jax.random.normal(ks[1], (b, s, kv, dh))
+    v = jax.random.normal(ks[2], (b, s, kv, dh))
+    got = flash_attention(
+        q, k, v, causal=True, sliding_window=window,
+        block_q=32, block_k=32, interpret=True,
+    )
+    want = mha_ref(q, k, v, causal=True, sliding_window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_non_causal_matches_ref():
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    b, sq, sk, h, dh = 2, 32, 64, 2, 32
+    q = jax.random.normal(ks[0], (b, sq, h, dh))
+    k = jax.random.normal(ks[1], (b, sk, h, dh))
+    v = jax.random.normal(ks[2], (b, sk, h, dh))
+    got = flash_attention(q, k, v, causal=False, block_q=32, block_k=32, interpret=True)
+    want = mha_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_q_offset_decode_tail():
+    """q_offset places the query block at the end of a longer context
+    (chunked prefill / speculative-decode pattern)."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    b, sk, h, dh = 1, 128, 2, 32
+    sq, off = 32, 96
+    k = jax.random.normal(ks[1], (b, sk, h, dh))
+    v = jax.random.normal(ks[2], (b, sk, h, dh))
+    q = jax.random.normal(ks[0], (b, sq, h, dh))
+    got = flash_attention(
+        q, k, v, causal=True, q_offset=off, block_q=32, block_k=32, interpret=True
+    )
+    want = mha_ref(q, k, v, causal=True, q_offset=off)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)

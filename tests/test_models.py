@@ -1,0 +1,231 @@
+"""Model-substrate equivalence tests: the production (chunked / scatter)
+paths must match their naive references exactly."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import configs
+from repro.models import layers as L
+from repro.models import transformer
+from repro.models.config import ModelConfig, MoEConfig
+
+
+def _attn_cfg(**kw) -> ModelConfig:
+    base = dict(
+        name="t", arch_type="dense", n_layers=1, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab_size=128,
+    )
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+# --------------------------------------------------------------------------
+# chunked attention == unchunked attention
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("window", [None, 7])
+def test_chunked_attention_matches_unchunked(window):
+    cfg = _attn_cfg(sliding_window=window)
+    key = jax.random.PRNGKey(0)
+    p = L.init_attention(key, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model))
+
+    q, k, v = L._qkv(p, x, cfg, jnp.float32)
+    pos = jnp.arange(32)[None, :]
+    q = L.apply_rope(q, pos, cfg.rope_theta).reshape(2, 32, 2, 2, 16)
+    k = L.apply_rope(k, pos, cfg.rope_theta)
+
+    full = L._attention_core(
+        q, k, v, causal=True, sliding_window=window, q_offset=0,
+        dtype=jnp.float32, q_chunk=None,
+    )
+    chunked = L._attention_core(
+        q, k, v, causal=True, sliding_window=window, q_offset=0,
+        dtype=jnp.float32, q_chunk=8,
+    )
+    np.testing.assert_allclose(
+        np.asarray(full), np.asarray(chunked), rtol=1e-5, atol=1e-6
+    )
+
+
+# --------------------------------------------------------------------------
+# chunked cross-entropy == monolithic cross-entropy
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seq", [9, 16, 33])  # exercises padding
+def test_chunked_ce_matches_monolithic(seq):
+    cfg = _attn_cfg(vocab_size=100)
+    key = jax.random.PRNGKey(0)
+    head = jax.random.normal(key, (cfg.d_model, cfg.vocab_padded)) * 0.1
+    params = {"lm_head": head}
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, seq, cfg.d_model))
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (3, seq), 0, 100)
+
+    # monolithic
+    logits = transformer.logits_from_hidden(params, cfg, x[:, :-1], jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tokens[:, 1:][..., None], axis=-1)[..., 0]
+    want = nll.mean(axis=-1)
+
+    old = transformer.CE_CHUNK
+    transformer.CE_CHUNK = 8
+    try:
+        got = transformer.chunked_ce(params, cfg, x, tokens, jnp.float32)
+    finally:
+        transformer.CE_CHUNK = old
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# scatter-dispatch MoE == dense per-token reference
+# --------------------------------------------------------------------------
+
+
+def _moe_cfg(e=4, k=2, cf=8.0):
+    return _attn_cfg(
+        arch_type="moe",
+        moe=MoEConfig(n_experts=e, top_k=k, d_ff_expert=32, capacity_factor=cf),
+    )
+
+
+def _moe_dense_ref(params, x, cfg):
+    """Reference: every expert on every token, gate-combined (no capacity)."""
+    moe = cfg.moe
+    b, s, d = x.shape
+    xt = x.reshape(-1, d)
+    logits = xt @ params["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, moe.top_k)
+    gate_vals = gate_vals / gate_vals.sum(-1, keepdims=True)
+    g = jax.nn.silu(jnp.einsum("td,edf->tef", xt, params["w_gate"]))
+    u = jnp.einsum("td,edf->tef", xt, params["w_in"])
+    ye = jnp.einsum("tef,efd->ted", g * u, params["w_out"])  # (T, E, D)
+    gates = jnp.zeros((xt.shape[0], moe.n_experts)).at[
+        jnp.arange(xt.shape[0])[:, None], gate_idx
+    ].set(gate_vals)
+    return jnp.einsum("te,ted->td", gates, ye).reshape(b, s, d)
+
+
+def test_moe_scatter_matches_dense_ref():
+    cfg = _moe_cfg(cf=8.0)  # capacity high enough that nothing is dropped
+    key = jax.random.PRNGKey(0)
+    p = L.init_moe(key, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+    got, aux = L.moe_fwd(p, x, cfg, jnp.float32)
+    want = _moe_dense_ref(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-5)
+    assert float(aux) > 0
+
+
+def test_moe_capacity_drops_tokens():
+    """With capacity_factor ≈ 1/E·k the buffer overflows: output is damped
+    but finite, and aux loss still computes."""
+    cfg = _moe_cfg(cf=0.25)
+    p = L.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+    got, aux = L.moe_fwd(p, x, cfg, jnp.float32)
+    assert bool(jnp.all(jnp.isfinite(got)))
+    dense = _moe_dense_ref(p, x, cfg)
+    assert float(jnp.linalg.norm(got)) <= float(jnp.linalg.norm(dense)) * 1.5
+
+
+def test_moe_grouping_invariance():
+    """Group size must not change results when capacity is ample."""
+    cfg = _moe_cfg(cf=8.0)
+    p = L.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model))
+    old = L.MOE_GROUP_SIZE
+    try:
+        L.MOE_GROUP_SIZE = 16
+        a, _ = L.moe_fwd(p, x, cfg, jnp.float32)
+        L.MOE_GROUP_SIZE = 64
+        b, _ = L.moe_fwd(p, x, cfg, jnp.float32)
+    finally:
+        L.MOE_GROUP_SIZE = old
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# property tests (hypothesis)
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    s=st.integers(4, 24),
+    window=st.one_of(st.none(), st.integers(1, 30)),
+    offset=st.integers(0, 8),
+)
+def test_attention_mask_properties(s, window, offset):
+    """Causality: row i allows exactly min(i+off+1, window) keys (clipped)."""
+    m = L.attention_scores_mask(s, s + offset, q_offset=offset, causal=True,
+                                sliding_window=window)
+    m = np.asarray(m)
+    for i in range(s):
+        allowed = np.flatnonzero(m[i])
+        assert allowed.size > 0
+        assert allowed.max() == i + offset  # newest visible key = self
+        if window is not None:
+            assert allowed.min() >= i + offset - window + 1
+            assert allowed.size == min(i + offset + 1, window)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 3), s=st.integers(2, 6), data=st.data(),
+)
+def test_rope_preserves_norm_and_relativity(b, s, data):
+    """RoPE is an isometry, and q·k depends only on relative positions."""
+    dh = 16
+    key = jax.random.PRNGKey(data.draw(st.integers(0, 2**30)))
+    x = jax.random.normal(key, (b, s, 2, dh))
+    pos = jnp.arange(s)[None, :]
+    y = L.apply_rope(x, pos, 10000.0)
+    np.testing.assert_allclose(
+        np.asarray(jnp.linalg.norm(y, axis=-1)),
+        np.asarray(jnp.linalg.norm(x, axis=-1)),
+        rtol=1e-4, atol=1e-5,
+    )
+    # relativity: shift all positions by a constant → dot products unchanged
+    shift = data.draw(st.integers(1, 100))
+    y2 = L.apply_rope(x, pos + shift, 10000.0)
+    dots1 = jnp.einsum("bqhd,bkhd->bhqk", y, y)
+    dots2 = jnp.einsum("bqhd,bkhd->bhqk", y2, y2)
+    np.testing.assert_allclose(np.asarray(dots1), np.asarray(dots2), rtol=1e-3, atol=1e-3)
+
+
+def test_decode_matches_prefill_logits():
+    """Teacher-forced decode reproduces prefill logits position by position."""
+    from repro.models import api
+
+    cfg = configs.reduced_config("phi4-mini-3.8b")
+    params = api.model_init(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, cfg.vocab_size)
+
+    logits_full, _ = transformer.forward(params, cfg, tokens)
+
+    prefix = {"tokens": tokens[:, :4]}
+    lp, cache = api.model_prefill(params, cfg, prefix)
+    from repro.models.cache import pad_cache
+
+    cache = pad_cache(cache, 12)
+    np.testing.assert_allclose(
+        np.asarray(lp[:, 0]), np.asarray(logits_full[:, 3]), rtol=2e-4, atol=2e-4
+    )
+    for t in range(4, 12):
+        lt, cache = api.model_decode(
+            params, cfg, tokens[:, t:t + 1], cache, jnp.asarray(t, jnp.int32)
+        )
+        np.testing.assert_allclose(
+            np.asarray(lt[:, 0]), np.asarray(logits_full[:, t]),
+            rtol=2e-4, atol=2e-4,
+        )

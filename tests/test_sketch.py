@@ -1,0 +1,49 @@
+"""JVP-sketched per-device gradient statistics vs exact values."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sketch import sketch_device_stats
+
+
+def _quadratic_setup(key, n_dev=6, dim=50):
+    """Per-device loss L_d(p) = 0.5·||p − c_d||² → g_d = p − c_d exactly."""
+    centers = jax.random.normal(key, (n_dev, dim))
+    params = {"p": jnp.zeros((dim,))}
+
+    def per_device_loss(params):
+        diff = params["p"][None, :] - centers
+        return 0.5 * jnp.sum(diff**2, axis=-1)
+
+    grads = -centers  # at p = 0
+    return per_device_loss, params, grads
+
+
+def test_mean_is_exact():
+    f, params, g = _quadratic_setup(jax.random.PRNGKey(0))
+    stats = sketch_device_stats(f, params, jax.random.PRNGKey(1), n_probes=1)
+    np.testing.assert_allclose(
+        np.asarray(stats.mean), np.asarray(g.mean(axis=-1)), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_norm_is_unbiased():
+    """E[(g·v)²] = ‖g‖²: the probe-averaged estimate converges."""
+    f, params, g = _quadratic_setup(jax.random.PRNGKey(2), dim=200)
+    true_norms = np.asarray(jnp.linalg.norm(g, axis=-1))
+    errs = []
+    for probes in (8, 128):
+        stats = sketch_device_stats(f, params, jax.random.PRNGKey(3), n_probes=probes)
+        errs.append(np.mean(np.abs(np.asarray(stats.norm) - true_norms) / true_norms))
+    assert errs[1] < errs[0], errs       # error shrinks with probes
+    assert errs[1] < 0.15, errs          # ~sqrt(2/128) ≈ 0.12
+
+
+def test_var_nonnegative_and_close():
+    f, params, g = _quadratic_setup(jax.random.PRNGKey(4), dim=300)
+    stats = sketch_device_stats(f, params, jax.random.PRNGKey(5), n_probes=128)
+    true_var = np.asarray(jnp.var(g, axis=-1))
+    assert np.all(np.asarray(stats.var) >= 0)
+    np.testing.assert_allclose(np.asarray(stats.var), true_var, rtol=0.5)
