@@ -5,6 +5,13 @@ CIFAR-like 4-conv CNN — non-convex) on seeded synthetic data with the
 paper's non-IID shard partitioning, and runs the PO-FL simulator for a set
 of scheduling policies.
 
+Since the ``repro.sim`` subsystem landed, ``run_policies`` executes the whole
+(policy × trial) grid through ``sim.lattice`` — one vmapped+scanned compile
+per policy, metrics streamed out once — instead of looping ``run_pofl`` per
+cell. ``run_policies_loop`` keeps the historical per-run loop as the perf
+baseline for benchmarks/run.py's ``BENCH_sim.json``. ``sweep_lattice`` gives
+figure modules direct access to the vmapped noise/alpha axes (fig5, table1).
+
 ``reduced=True`` (the default for ``python -m benchmarks.run``) shrinks
 datasets/rounds/trials so the whole suite runs on CPU in minutes; pass
 --full to individual figure modules for paper-scale runs.
@@ -15,7 +22,6 @@ import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.channel import ChannelConfig
@@ -23,6 +29,7 @@ from repro.core.pofl import POFLConfig, run_pofl
 from repro.data.partition import partition_noniid_shards
 from repro.data.synthetic import make_classification_dataset
 from repro.models import small
+from repro.sim import LatticeRecords, LatticeSpec, run_lattice
 
 POLICIES = ("pofl", "importance", "channel", "deterministic", "noisefree")
 
@@ -64,6 +71,57 @@ def build_task(
     return Task(kind, loss_fn, eval_fn, params0, data)
 
 
+def _default_lr0(task: Task, lr0: float | None) -> float:
+    return lr0 if lr0 is not None else (0.1 if task.name == "mnist" else 0.5)
+
+
+def sweep_lattice(
+    task: Task,
+    policies=POLICIES,
+    noise_powers=(1e-11,),
+    alphas=(0.1,),
+    n_rounds: int = 100,
+    n_trials: int = 1,
+    n_scheduled: int = 10,
+    lr0: float | None = None,
+    eval_every: int = 5,
+    seed: int = 0,
+) -> LatticeRecords:
+    """Run a full (policies × noise_powers × alphas × trials) lattice."""
+    spec = LatticeSpec(
+        policies=tuple(policies),
+        noise_powers=tuple(noise_powers),
+        alphas=tuple(alphas),
+        seeds=tuple(seed + 1000 * t for t in range(n_trials)),
+        n_rounds=n_rounds,
+        eval_every=eval_every,
+    )
+    base_cfg = POFLConfig(
+        n_devices=task.data.n_devices,
+        n_scheduled=n_scheduled,
+        lr0=_default_lr0(task, lr0),
+    )
+    return run_lattice(
+        task.loss_fn, task.data, task.params0, spec,
+        base_cfg=base_cfg,
+        eval_fn=task.eval_fn,
+        channel_cfg=ChannelConfig(n_devices=task.data.n_devices),
+    )
+
+
+def policy_summary(recs: LatticeRecords, policy: str, noise_power, alpha) -> dict:
+    c = recs.cell(policy=policy, noise_power=noise_power, alpha=alpha)
+    acc = c["acc"]  # (trials, evals)
+    return {
+        "acc": acc,
+        "final_acc": float(np.mean(acc[:, -1])),
+        "best_acc": float(np.mean(np.max(acc, axis=1))),
+        "rounds": recs.eval_rounds.tolist(),
+        "e_com": float(np.mean(c["e_com"])),
+        "e_var": float(np.mean(c["e_var"])),
+    }
+
+
 def run_policies(
     task: Task,
     policies=POLICIES,
@@ -76,8 +134,37 @@ def run_policies(
     eval_every: int = 5,
     seed: int = 0,
 ) -> dict:
-    """Returns {policy: {"acc": (trials, evals), "rounds": [...], ...}}."""
-    lr0 = lr0 if lr0 is not None else (0.1 if task.name == "mnist" else 0.5)
+    """Returns {policy: {"acc": (trials, evals), "rounds": [...], ...}} —
+    same record layout as the historical run_pofl loop, computed on the
+    sim lattice (all trials of a policy batched into one program)."""
+    recs = sweep_lattice(
+        task, policies=policies, noise_powers=(noise_power,), alphas=(alpha,),
+        n_rounds=n_rounds, n_trials=n_trials, n_scheduled=n_scheduled,
+        lr0=lr0, eval_every=eval_every, seed=seed,
+    )
+    return {
+        p: policy_summary(recs, p, noise_power, alpha) for p in policies
+    }
+
+
+def run_policies_loop(
+    task: Task,
+    policies=POLICIES,
+    n_rounds: int = 100,
+    n_trials: int = 1,
+    n_scheduled: int = 10,
+    alpha: float = 0.1,
+    noise_power: float = 1e-11,
+    lr0: float | None = None,
+    eval_every: int = 5,
+    seed: int = 0,
+) -> dict:
+    """Historical harness: one ``run_pofl`` call per (policy × trial).
+
+    Kept as the reference implementation and as the baseline the lattice's
+    speedup is measured against (benchmarks/run.py → BENCH_sim.json).
+    """
+    lr0 = _default_lr0(task, lr0)
     out = {}
     for policy in policies:
         accs, e_coms, e_vars = [], [], []

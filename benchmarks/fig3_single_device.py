@@ -3,6 +3,8 @@ MNIST-like (convex) and CIFAR-like (non-convex).
 
 Paper claim validated: proposed (pofl) converges fastest and tracks the
 noise-free upper bound; channel-aware fails to converge; deterministic lags.
+
+Runs on the sim lattice via ``run_policies`` (trials vmapped per policy).
 """
 from __future__ import annotations
 

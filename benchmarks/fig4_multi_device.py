@@ -2,6 +2,8 @@
 
 Paper claim validated: all policies improve over |S|=1; pofl matches the
 noise-free bound; deterministic (biased, unweighted) converges slower.
+
+Runs on the sim lattice via ``run_policies`` (trials vmapped per policy).
 """
 from __future__ import annotations
 

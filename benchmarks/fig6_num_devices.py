@@ -3,6 +3,9 @@
 Paper claim validated: accuracy improves from |S|=1 to ~20 then degrades at
 |S|=30 (distortion–variance tradeoff); pofl leads at every |S|, with the
 largest margins at small |S|.
+
+|S| changes the scheduling scan length (structural), so it loops in Python;
+each |S| point runs its (policy × trial) grid on the sim lattice.
 """
 from __future__ import annotations
 

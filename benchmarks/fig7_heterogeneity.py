@@ -3,6 +3,9 @@
 Paper claim validated: smaller C (more heterogeneity) slows training for
 every policy; pofl's advantage is largest at small C; near-IID (C=8,10)
 pofl approaches the noise-free bound.
+
+C changes the data partition (structural), so it loops in Python; each C
+point runs its (policy × trial) grid on the sim lattice.
 """
 from __future__ import annotations
 

@@ -1,11 +1,15 @@
 """Benchmark aggregator: one entry per paper table/figure + kernel
-micro-benchmarks + the roofline table.
+micro-benchmarks + the roofline table + the sim-lattice throughput bench.
 
 Prints ``name,us_per_call,derived`` CSV lines (reduced settings — pass
---full to the individual modules for paper-scale runs).
+--full to the individual modules for paper-scale runs), and writes
+``BENCH_sim.json`` (machine-readable lattice cells/sec + speedup vs the
+historical run_pofl loop) so future PRs have a perf trajectory.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 
@@ -58,6 +62,38 @@ def _kernel_micro():
     return f"max_abs_err={max(err_a, err_f, err_s):.2e}"
 
 
+def _bench_sim():
+    """Reduced fig4-style sweep (5 policies × 3 trials) through sim.lattice
+    vs the historical one-run_pofl-per-cell loop → BENCH_sim.json."""
+    from benchmarks.common import (
+        POLICIES, build_task, run_policies, run_policies_loop, timed,
+    )
+
+    task = build_task("mnist", n_devices=20, n_train=2000)
+    kw = dict(
+        policies=POLICIES, n_rounds=30, n_trials=3, n_scheduled=10,
+        eval_every=10,
+    )
+    _, t_lattice = timed(run_policies, task, **kw)
+    _, t_loop = timed(run_policies_loop, task, **kw)
+
+    cells = len(POLICIES) * kw["n_trials"]
+    payload = {
+        "cells": cells,
+        "n_rounds": kw["n_rounds"],
+        "n_devices": 20,
+        "lattice_seconds": round(t_lattice, 3),
+        "loop_seconds": round(t_loop, 3),
+        "speedup": round(t_loop / t_lattice, 2),
+        "cells_per_sec": round(cells / t_lattice, 3),
+        "round_cells_per_sec": round(cells * kw["n_rounds"] / t_lattice, 1),
+    }
+    out_path = os.path.join(os.path.dirname(__file__), "..", "BENCH_sim.json")
+    with open(os.path.abspath(out_path), "w") as f:
+        json.dump(payload, f, indent=2)
+    return payload
+
+
 def main() -> None:
     from benchmarks import (
         fig3_single_device,
@@ -70,6 +106,12 @@ def main() -> None:
     )
 
     _run("kernels_microbench", _kernel_micro, lambda d: d)
+    _run(
+        "sim_lattice", _bench_sim,
+        lambda d: "cells/s=%.2f speedup=%.1fx" % (
+            d["cells_per_sec"], d["speedup"],
+        ),
+    )
     _run(
         "fig3_single_device", fig3_single_device.main,
         lambda r: "pofl=%.3f noisefree=%.3f chan=%.3f" % (

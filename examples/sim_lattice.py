@@ -1,0 +1,56 @@
+"""Scenario-lattice quickstart: a whole paper-style sweep in one program.
+
+Runs (3 policies × 2 noise powers × 4 trials) = 24 cells of PO-FL training
+through ``repro.sim`` — one vmapped+scanned compile per policy, metrics
+streamed out once — under temporally-correlated Gauss–Markov fading with
+random device dropout (scenarios the per-round ``run_pofl`` loop cannot
+express).
+
+    PYTHONPATH=src python examples/sim_lattice.py
+"""
+import jax
+import numpy as np
+
+from repro.core.pofl import POFLConfig
+from repro.data.synthetic import make_classification_dataset
+from repro.models import small
+from repro.sim import LatticeSpec, make_partition, run_lattice
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    k_train, k_test, k_init = jax.random.split(key, 3)
+    x_tr, y_tr = make_classification_dataset("mnist_like", 3000, k_train)
+    x_te, y_te = make_classification_dataset("mnist_like", 1000, k_test)
+    # Dirichlet(0.3) label skew — the sim subsystem's third partition preset
+    data = make_partition("dirichlet", x_tr, y_tr, n_devices=20, beta=0.3)
+
+    params0 = small.init_logreg(k_init)
+    eval_fn = small.make_eval_fn(small.logreg_logits, small.logreg_loss, x_te, y_te)
+
+    spec = LatticeSpec(
+        policies=("pofl", "importance", "channel"),
+        noise_powers=(1e-11, 1e-9),
+        seeds=(0, 1000, 2000, 3000),
+        n_rounds=30,
+        eval_every=10,
+    )
+    records = run_lattice(
+        small.logreg_loss, data, params0, spec,
+        base_cfg=POFLConfig(n_devices=20, n_scheduled=8),
+        eval_fn=eval_fn,
+        scenario="dropout",
+        scenario_params={"base": "gauss_markov", "corr": 0.9, "p_drop": 0.1},
+    )
+
+    print(f"lattice: {spec.n_cells} cells × {spec.n_rounds} rounds "
+          f"(eval rounds {records.eval_rounds.tolist()})")
+    for policy in spec.policies:
+        for np_ in spec.noise_powers:
+            acc = records.cell(policy=policy, noise_power=np_)["acc"]
+            best = np.mean(np.max(acc, axis=-1))  # mean-over-trials best acc
+            print(f"  {policy:>11s} @ σ_z²={np_:.0e}:  best_acc={best:.3f}")
+
+
+if __name__ == "__main__":
+    main()

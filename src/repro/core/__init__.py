@@ -1,6 +1,13 @@
 """PO-FL core: channel model, AirComp signal chain, scheduling, simulator."""
 from repro.core.channel import ChannelConfig, ChannelState
-from repro.core.pofl import DeviceData, History, POFLConfig, make_round_step, run_pofl
+from repro.core.pofl import (
+    DeviceData,
+    History,
+    POFLConfig,
+    make_round_step,
+    round_algorithm,
+    run_pofl,
+)
 from repro.core.scheduling import POLICIES, Schedule, scheduling_probs
 
 __all__ = [
@@ -12,6 +19,7 @@ __all__ = [
     "POLICIES",
     "Schedule",
     "make_round_step",
+    "round_algorithm",
     "run_pofl",
     "scheduling_probs",
 ]

@@ -113,6 +113,10 @@ def aircomp_aggregate(
     if simulate_physical:
         s = normalize(g, m_g, v_g)  # (n_devices, D) symbols
         b = transmit_scalars(rho, h, a)  # (n_devices,) complex
+        # an empty scheduled set (possible under sim dropout) gives a=inf and
+        # rho=0, so b = 0·inf = NaN; zero unscheduled transmitters *before*
+        # the mask multiply — 0·NaN would stay NaN after it
+        b = jnp.where(mask > 0, b, jnp.zeros((), b.dtype))
         tx = (mask.astype(h.dtype) * b * h)[:, None] * s.astype(h.dtype)
         y_tilde = jnp.real(jnp.sum(tx, axis=0)) + z  # superposition (Eq. 7)
         y_hat = jnp.sqrt(jnp.maximum(v_g, 1e-30)) * y_tilde / a + m_g  # Eq. 8

@@ -10,8 +10,11 @@ devices). Every step of Algorithm 1 is implemented:
   5. devices normalize + transmit concurrently; server denoises (aircomp.py)
   6. w^{t+1} = w^t − η^t ŷ^t
 
-The whole round is a single jitted function; the T-round loop is Python so
-that evaluation/metrics can stream out.
+The round body lives in :func:`round_algorithm` so that both the legacy
+per-round jit (:func:`make_round_step`) and the scanned simulation engine
+(``repro.sim.engine``) execute the *same* traced computation. ``run_pofl``
+is a thin compatibility wrapper over the engine (identical trajectories for
+identical seeds — pinned by tests/test_sim.py).
 """
 from __future__ import annotations
 
@@ -84,6 +87,99 @@ def _device_gradients(loss_fn, params, feats, labels):
     return jax.vmap(one)(feats, labels)
 
 
+def round_algorithm(
+    loss_fn: Callable[[Any, jnp.ndarray, jnp.ndarray], jnp.ndarray],
+    data: DeviceData,
+    cfg: POFLConfig,
+    params,
+    h: jnp.ndarray,
+    k_batch: jax.Array,
+    k_sched: jax.Array,
+    k_noise: jax.Array,
+    t: jnp.ndarray,
+    noise_power: jnp.ndarray | float | None = None,
+    alpha: jnp.ndarray | float | None = None,
+    avail: jnp.ndarray | None = None,
+) -> tuple[Any, RoundMetrics]:
+    """Steps 2–6 of Algorithm 1 for one round, given this round's channel ``h``.
+
+    ``noise_power`` / ``alpha`` default to the (static) config values but may
+    be traced arrays — the simulation lattice vmaps over them. Everything
+    structural (policy, sampler, |S|, batch size) stays static.
+
+    ``avail`` is an optional (N,) 0/1 availability mask (sim dropout
+    scenarios): unavailable devices get zero scheduling probability this
+    round. ``None`` (the default, and the only value the legacy path ever
+    passes) skips the masking entirely, keeping the static-scenario
+    trajectory bit-identical to the seed implementation.
+    """
+    noise_power = cfg.noise_power if noise_power is None else noise_power
+    alpha = cfg.alpha if alpha is None else alpha
+
+    n = data.n_devices
+    m = data.samples_per_device
+    data_frac = jnp.full((n,), 1.0 / n)  # equal shards: m_i/M = 1/N
+
+    noise_free = cfg.policy == "noisefree"
+    agg_noise_power = 0.0 if noise_free else noise_power
+
+    # -- step 2: local mini-batch gradients ---------------------------
+    idx = jax.random.randint(k_batch, (n, cfg.batch_size), 0, m)
+    feats = jnp.take_along_axis(
+        data.features,
+        idx.reshape((n, cfg.batch_size) + (1,) * (data.features.ndim - 2)),
+        axis=1,
+    )
+    labels = jnp.take_along_axis(data.labels, idx, axis=1)
+    g = _device_gradients(loss_fn, params, feats, labels)  # (N, D)
+    dim = g.shape[-1]
+
+    # -- step 3: uploaded scalar statistics ---------------------------
+    stats = aircomp.local_stats(g)
+
+    # -- step 4: scheduling -------------------------------------------
+    h_abs = jnp.abs(h)
+    probs = scheduling.scheduling_probs(
+        cfg.policy, stats.norm, stats.var, h_abs, data_frac, dim,
+        alpha, cfg.tx_power, noise_power,
+    )
+    if avail is not None:
+        masked = probs * avail
+        probs = masked / jnp.maximum(jnp.sum(masked), 1e-30)
+    if cfg.policy == "deterministic":
+        sched = scheduling.sample_without_replacement(k_sched, probs, cfg.n_scheduled)
+        rho = scheduling.deterministic_weights(sched, data_frac)
+        mask = sched.mask
+    elif cfg.sampler == "bernoulli":
+        mask, pi = scheduling.sample_bernoulli(k_sched, probs, cfg.n_scheduled)
+        rho = scheduling.bernoulli_weights(pi, data_frac)
+    else:
+        sched = scheduling.sample_without_replacement(k_sched, probs, cfg.n_scheduled)
+        rho = scheduling.aggregation_weights(sched, probs, data_frac, cfg.n_scheduled)
+        mask = sched.mask
+
+    # -- steps 5-6: AirComp aggregation + model update ----------------
+    y_hat, e_com = aircomp.aircomp_aggregate(
+        g, rho, h, mask, k_noise, cfg.tx_power, agg_noise_power,
+        simulate_physical=cfg.simulate_physical,
+    )
+    e_var = scheduling.global_update_variance(g, rho, mask, data_frac, cfg.n_scheduled)
+
+    flat_params, unravel_p = ravel_pytree(params)
+    new_params = unravel_p(flat_params - cfg.lr(t) * y_hat)
+
+    a = aircomp.denoise_scalar(rho, h_abs, mask, cfg.tx_power)
+    metrics = RoundMetrics(
+        loss=jnp.zeros(()),  # filled by caller's eval if desired
+        e_com=e_com,
+        e_var=e_var,
+        grad_norm=jnp.linalg.norm(y_hat),
+        n_scheduled=jnp.sum(mask),
+        a_scalar=a,
+    )
+    return new_params, metrics
+
+
 def make_round_step(
     loss_fn: Callable[[Any, jnp.ndarray, jnp.ndarray], jnp.ndarray],
     data: DeviceData,
@@ -92,69 +188,12 @@ def make_round_step(
 ):
     """Build the jitted single-round step implementing Algorithm 1."""
 
-    n = data.n_devices
-    m = data.samples_per_device
-    data_frac = jnp.full((n,), 1.0 / n)  # equal shards: m_i/M = 1/N
-
-    noise_free = cfg.policy == "noisefree"
-    agg_noise_power = 0.0 if noise_free else cfg.noise_power
-
     def round_step(params, key, t):
         k_batch, k_chan, k_sched, k_noise = jax.random.split(key, 4)
-
-        # -- step 2: local mini-batch gradients ---------------------------
-        idx = jax.random.randint(k_batch, (n, cfg.batch_size), 0, m)
-        feats = jnp.take_along_axis(
-            data.features,
-            idx.reshape((n, cfg.batch_size) + (1,) * (data.features.ndim - 2)),
-            axis=1,
-        )
-        labels = jnp.take_along_axis(data.labels, idx, axis=1)
-        g = _device_gradients(loss_fn, params, feats, labels)  # (N, D)
-        dim = g.shape[-1]
-
-        # -- step 3: uploaded scalar statistics ---------------------------
-        stats = aircomp.local_stats(g)
-
-        # -- step 4: scheduling -------------------------------------------
         h = channel.sample(k_chan)
-        h_abs = jnp.abs(h)
-        probs = scheduling.scheduling_probs(
-            cfg.policy, stats.norm, stats.var, h_abs, data_frac, dim,
-            cfg.alpha, cfg.tx_power, cfg.noise_power,
+        return round_algorithm(
+            loss_fn, data, cfg, params, h, k_batch, k_sched, k_noise, t
         )
-        if cfg.policy == "deterministic":
-            sched = scheduling.sample_without_replacement(k_sched, probs, cfg.n_scheduled)
-            rho = scheduling.deterministic_weights(sched, data_frac)
-            mask = sched.mask
-        elif cfg.sampler == "bernoulli":
-            mask, pi = scheduling.sample_bernoulli(k_sched, probs, cfg.n_scheduled)
-            rho = scheduling.bernoulli_weights(pi, data_frac)
-        else:
-            sched = scheduling.sample_without_replacement(k_sched, probs, cfg.n_scheduled)
-            rho = scheduling.aggregation_weights(sched, probs, data_frac, cfg.n_scheduled)
-            mask = sched.mask
-
-        # -- steps 5-6: AirComp aggregation + model update ----------------
-        y_hat, e_com = aircomp.aircomp_aggregate(
-            g, rho, h, mask, k_noise, cfg.tx_power, agg_noise_power,
-            simulate_physical=cfg.simulate_physical,
-        )
-        e_var = scheduling.global_update_variance(g, rho, mask, data_frac, cfg.n_scheduled)
-
-        flat_params, unravel_p = ravel_pytree(params)
-        new_params = unravel_p(flat_params - cfg.lr(t) * y_hat)
-
-        a = aircomp.denoise_scalar(rho, h_abs, mask, cfg.tx_power)
-        metrics = RoundMetrics(
-            loss=jnp.zeros(()),  # filled by caller's eval if desired
-            e_com=e_com,
-            e_var=e_var,
-            grad_norm=jnp.linalg.norm(y_hat),
-            n_scheduled=jnp.sum(mask),
-            a_scalar=a,
-        )
-        return new_params, metrics
 
     return jax.jit(round_step)
 
@@ -169,27 +208,19 @@ def run_pofl(
     eval_every: int = 5,
     channel_cfg: ChannelConfig | None = None,
 ) -> tuple[Any, History]:
-    """Run Algorithm 1 for ``n_rounds`` and return (params, history)."""
-    key = jax.random.PRNGKey(cfg.seed)
-    k_chan_init, key = jax.random.split(key)
-    ch_cfg = channel_cfg or ChannelConfig(
-        n_devices=cfg.n_devices,
-        tx_power=cfg.tx_power,
-        noise_power=cfg.noise_power,
-    )
-    channel = ChannelState.create(ch_cfg, k_chan_init)
-    step = make_round_step(loss_fn, data, channel, cfg)
+    """Run Algorithm 1 for ``n_rounds`` and return (params, history).
 
-    hist = History(loss=[], e_com=[], e_var=[], test_acc=[], test_round=[])
-    params = params0
-    for t in range(n_rounds):
-        key, k_round = jax.random.split(key)
-        params, metrics = step(params, k_round, jnp.asarray(t, jnp.float32))
-        hist.e_com.append(float(metrics.e_com))
-        hist.e_var.append(float(metrics.e_var))
-        if eval_fn is not None and (t % eval_every == 0 or t == n_rounds - 1):
-            loss, acc = eval_fn(params)
-            hist.loss.append(float(loss))
-            hist.test_acc.append(float(acc))
-            hist.test_round.append(t)
-    return params, hist
+    Compatibility wrapper over ``repro.sim.engine.SimEngine``: the T-round
+    loop is a ``lax.scan`` chunked at the evaluation boundaries, so metrics
+    only sync to host once per eval interval instead of once per round. The
+    trajectory is identical (same PRNG key discipline, same round body) to
+    the historical per-round Python loop — see tests/test_sim.py.
+    """
+    from repro.sim.engine import SimEngine  # late import: sim builds on core
+
+    engine = SimEngine(
+        loss_fn=loss_fn, data=data, cfg=cfg, channel_cfg=channel_cfg
+    )
+    return engine.run_with_history(
+        params0, n_rounds, eval_fn=eval_fn, eval_every=eval_every
+    )

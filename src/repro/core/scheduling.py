@@ -82,9 +82,16 @@ def scheduling_probs(
 
 class Schedule(NamedTuple):
     """One round's draw: indices Y_{t,k}, their step-k renormalized probs q_k,
-    and the 0/1 device mask."""
+    and the 0/1 device mask.
 
-    indices: jnp.ndarray  # (S,) int32 — Y_{t,1..S}
+    When fewer than ``n_scheduled`` devices are selectable (some probs are
+    exactly 0 — e.g. sim dropout masking), the realized |S^t| is clamped to
+    the selectable count: surplus draws carry the sentinel ``indices=-1``
+    with ``step_probs=inf`` (→ zero Eq. 37 weight) and leave the mask
+    untouched.
+    """
+
+    indices: jnp.ndarray  # (S,) int32 — Y_{t,1..S}; -1 = no draw (see above)
     step_probs: jnp.ndarray  # (S,) — q^t_{Y_{t,k}} at the k-th selection (Eq. 36)
     mask: jnp.ndarray  # (N,) float — 1{i ∈ S^t}
 
@@ -96,21 +103,29 @@ def sample_without_replacement(
 
     At step k the live probabilities are q_i = p_i / (1 - Σ_{j<k} p_{Y_j})
     for unselected i (0 otherwise); we record q_{Y_k} for the Eq. 37 weights.
+
+    Devices with exactly zero probability are never drafted: once the
+    selectable mass is exhausted the remaining draws are no-ops (the
+    ``Schedule`` sentinel described above) instead of drafting a prob-0
+    device whose Eq. 37 weight 1/q would explode.
     """
     n = probs.shape[0]
 
     def step(carry, k_key):
         mask, cum_p = carry
-        alive = 1.0 - mask
-        q = jnp.where(alive > 0, probs, 0.0) / jnp.maximum(1.0 - cum_p, 1e-30)
+        selectable = ((1.0 - mask) > 0) & (probs > 0)
+        any_live = jnp.sum(jnp.where(selectable, probs, 0.0)) > 0
+        q = jnp.where(selectable, probs, 0.0) / jnp.maximum(1.0 - cum_p, 1e-30)
         # Gumbel-max draw over the renormalized distribution (scale-invariant,
         # so the shared denominator does not change the draw — but q_k does
         # enter the aggregation weights).
-        logits = jnp.where(alive > 0, jnp.log(jnp.maximum(probs, 1e-30)), -jnp.inf)
-        idx = jax.random.categorical(k_key, logits)
-        q_k = q[idx]
-        mask = mask.at[idx].set(1.0)
-        cum_p = cum_p + probs[idx]
+        logits = jnp.where(selectable, jnp.log(jnp.maximum(probs, 1e-30)), -jnp.inf)
+        drawn = jax.random.categorical(k_key, logits)  # garbage if ~any_live
+        safe = jnp.maximum(drawn, 0)
+        idx = jnp.where(any_live, drawn, -1)
+        q_k = jnp.where(any_live, q[safe], jnp.inf)
+        mask = jnp.where(any_live, mask.at[safe].set(1.0), mask)
+        cum_p = cum_p + jnp.where(any_live, probs[safe], 0.0)
         return (mask, cum_p), (idx, q_k)
 
     keys = jax.random.split(key, n_scheduled)
@@ -127,11 +142,16 @@ def aggregation_weights(
 
     Eq. 37: ŷ uses (1/|S|)·m_i/(M·q_{Y_k}) for the k-th selected device.
     For |S| = 1 this reduces to the Eq. 16 weight m_i/(M p_i).
+
+    |S| is the *realized* draw count: it equals ``n_scheduled`` except when
+    the sampler clamped (sentinel draws carry step_probs=inf → zero w_k, and
+    their -1 indices scatter that zero harmlessly onto the last device).
     """
-    del probs
+    del probs, n_scheduled
     n = data_frac.shape[0]
     w_k = data_frac[schedule.indices] / jnp.maximum(schedule.step_probs, 1e-30)
-    w_k = w_k / n_scheduled
+    n_drawn = jnp.sum((schedule.indices >= 0).astype(w_k.dtype))
+    w_k = w_k / jnp.maximum(n_drawn, 1.0)
     return jnp.zeros(n).at[schedule.indices].add(w_k)
 
 
@@ -152,7 +172,11 @@ def bernoulli_inclusion_probs(probs: jnp.ndarray, n_scheduled: int) -> jnp.ndarr
         return lo, hi
 
     n = probs.shape[0]
-    hi0 = jnp.asarray(n / jnp.maximum(jnp.min(probs), 1e-30))
+    # bracket on the smallest POSITIVE prob: zero entries (e.g. unavailable
+    # devices under sim dropout) stay at π=0 for any c and must not blow the
+    # bisection bracket up to 1/1e-30.
+    min_pos = jnp.min(jnp.where(probs > 0, probs, jnp.inf))
+    hi0 = jnp.asarray(n / jnp.maximum(min_pos, 1e-30))
     lo, hi = jax.lax.fori_loop(0, 50, body, (jnp.zeros(()), hi0))
     c = 0.5 * (lo + hi)
     return jnp.clip(c * probs, 1e-30, 1.0)

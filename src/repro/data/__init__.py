@@ -1,8 +1,14 @@
-from repro.data.partition import partition_noniid_shards
+from repro.data.partition import (
+    partition_dirichlet,
+    partition_iid,
+    partition_noniid_shards,
+)
 from repro.data.synthetic import make_classification_dataset, make_token_dataset
 
 __all__ = [
     "make_classification_dataset",
     "make_token_dataset",
+    "partition_dirichlet",
+    "partition_iid",
     "partition_noniid_shards",
 ]

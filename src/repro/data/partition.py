@@ -1,10 +1,14 @@
-"""Non-IID federated partitioning (paper Sec. V-A).
+"""Non-IID federated partitioning (paper Sec. V-A + sim scenario presets).
 
 Sort-by-label sharding: sort the M training samples by label, split into
 ``n_devices * shards_per_device`` shards, assign each device
 ``shards_per_device`` random shards — each device then holds (about)
 ``shards_per_device`` classes. ``classes_per_device`` (paper's C) equals
 ``shards_per_device`` for balanced class counts.
+
+``partition_dirichlet`` adds the Dirichlet(β) label-skew partition standard
+in the FL literature (Hsu et al. 2019), equalized to stacked per-device
+shards so it plugs into the same ``DeviceData`` interface.
 """
 from __future__ import annotations
 
@@ -55,3 +59,53 @@ def partition_iid(features, labels, n_devices: int, seed: int = 0) -> DeviceData
     rng = np.random.default_rng(seed)
     perm = rng.permutation(m_total)[: per * n_devices].reshape(n_devices, per)
     return DeviceData(features=features[perm], labels=labels[perm])
+
+
+def partition_dirichlet(
+    features,
+    labels,
+    n_devices: int,
+    beta: float = 0.5,
+    seed: int = 0,
+) -> DeviceData:
+    """Dirichlet(β) label-proportion partition, equalized to stacked shards.
+
+    Device d's label distribution is q_d ~ Dir(β·1_K); its m = M//N samples
+    are drawn class-by-class to match q_d from per-class pools, topping up
+    from the leftover pool when a class runs dry (so shards stay equal-size
+    and every sample is used at most once). β→0 gives near-single-class
+    devices; β→∞ recovers the global label distribution.
+    """
+    features = np.asarray(features)
+    labels = np.asarray(labels)
+    m_total = labels.shape[0]
+    per = m_total // n_devices
+    rng = np.random.default_rng(seed)
+
+    classes = np.unique(labels)
+    pools = {c: rng.permutation(np.flatnonzero(labels == c)).tolist() for c in classes}
+    props = rng.dirichlet(np.full(len(classes), beta), size=n_devices)
+
+    per_dev_idx = []
+    for d in range(n_devices):
+        # largest-remainder apportionment of `per` slots to classes per q_d
+        raw = props[d] * per
+        counts = np.floor(raw).astype(int)
+        short = per - counts.sum()
+        counts[np.argsort(raw - counts)[::-1][:short]] += 1
+
+        idx = []
+        for c, want in zip(classes, counts):
+            take = min(want, len(pools[c]))
+            idx.extend(pools[c][:take])
+            pools[c] = pools[c][take:]
+        # top up from whatever classes still have samples
+        while len(idx) < per:
+            c = max(pools, key=lambda c: len(pools[c]))
+            idx.append(pools[c].pop(0))
+        idx = np.asarray(idx[:per])
+        rng.shuffle(idx)
+        per_dev_idx.append(idx)
+
+    per_dev_idx = np.stack(per_dev_idx)
+    return DeviceData(features=features[per_dev_idx], labels=labels[per_dev_idx])

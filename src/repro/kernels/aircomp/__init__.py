@@ -1,7 +1,17 @@
 from repro.kernels.aircomp.ops import (
     aircomp_aggregate_fused,
+    aircomp_aggregate_fused_batch,
     aircomp_fused,
+    aircomp_fused_batch,
+    aircomp_fused_batch_ref,
     aircomp_fused_ref,
 )
 
-__all__ = ["aircomp_aggregate_fused", "aircomp_fused", "aircomp_fused_ref"]
+__all__ = [
+    "aircomp_aggregate_fused",
+    "aircomp_aggregate_fused_batch",
+    "aircomp_fused",
+    "aircomp_fused_batch",
+    "aircomp_fused_batch_ref",
+    "aircomp_fused_ref",
+]

@@ -46,6 +46,71 @@ def _aircomp_kernel(scalars_ref, coeff_ref, g_ref, z_ref, out_ref):
     out_ref[...] = (acc - w * m_g + (sqrt_vg / a) * z + m_g).astype(out_ref.dtype)
 
 
+def _aircomp_batch_kernel(scalars_ref, coeff_ref, g_ref, z_ref, out_ref):
+    b = pl.program_id(0)
+    m_g = scalars_ref[b, 0]
+    v_g = scalars_ref[b, 1]
+    a = scalars_ref[b, 2]
+    w = scalars_ref[b, 3]  # Σ_i coeff_i for this trial
+
+    g = g_ref[0].astype(jnp.float32)            # (N, T)
+    z = z_ref[0].astype(jnp.float32)            # (1, T)
+    coeff = coeff_ref[0].astype(jnp.float32)    # (N, 1)
+
+    sqrt_vg = jax.lax.sqrt(jnp.maximum(v_g, 1e-30))
+    acc = jnp.sum(coeff * g, axis=0, keepdims=True)  # (1, T)
+    out_ref[0] = (acc - w * m_g + (sqrt_vg / a) * z + m_g).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_d", "interpret"))
+def aircomp_fused_batch(
+    g: jnp.ndarray,       # (n_trials, n_devices, D)
+    coeff: jnp.ndarray,   # (n_trials, n_devices)  mask_i · ρ_i per trial
+    m_g: jnp.ndarray,     # (n_trials,)
+    v_g: jnp.ndarray,     # (n_trials,)
+    a: jnp.ndarray,       # (n_trials,)
+    z: jnp.ndarray,       # (n_trials, D)
+    *,
+    tile_d: int = DEFAULT_TILE_D,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Trial-batched fused Eq. 5→8 aggregation — one kernel launch serves a
+    whole lattice batch (e.g. every cell of a ``repro.sim`` lattice sharing a
+    policy). Returns ŷ of shape (n_trials, D).
+
+    Grid is (n_trials, D/tile_d): the trial axis rides the outer grid
+    dimension so each (N, TILE_D) gradient block is loaded from HBM exactly
+    once, same as the single-trial kernel; per-trial scalars sit in SMEM and
+    are indexed by the grid position.
+    """
+    bt, n, d = g.shape
+    d_pad = ((d + tile_d - 1) // tile_d) * tile_d
+    if d_pad != d:
+        g = jnp.pad(g, ((0, 0), (0, 0), (0, d_pad - d)))
+        z = jnp.pad(z, ((0, 0), (0, d_pad - d)))
+
+    scalars = jnp.stack(
+        [m_g.astype(jnp.float32), v_g.astype(jnp.float32),
+         a.astype(jnp.float32), jnp.sum(coeff, axis=-1).astype(jnp.float32)],
+        axis=-1,
+    )  # (n_trials, 4)
+
+    out = pl.pallas_call(
+        _aircomp_batch_kernel,
+        grid=(bt, d_pad // tile_d),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),              # scalars (B, 4)
+            pl.BlockSpec((1, n, 1), lambda b, i: (b, 0, 0)),    # coeff column
+            pl.BlockSpec((1, n, tile_d), lambda b, i: (b, 0, i)),  # grad tile
+            pl.BlockSpec((1, 1, tile_d), lambda b, i: (b, 0, i)),  # noise tile
+        ],
+        out_specs=pl.BlockSpec((1, 1, tile_d), lambda b, i: (b, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((bt, 1, d_pad), g.dtype),
+        interpret=interpret,
+    )(scalars, coeff[:, :, None], g, z[:, None, :])
+    return out[:, 0, :d]
+
+
 @functools.partial(jax.jit, static_argnames=("tile_d", "interpret"))
 def aircomp_fused(
     g: jnp.ndarray,       # (n_devices, D)

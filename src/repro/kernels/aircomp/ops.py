@@ -2,13 +2,22 @@
 
 ``use_pallas='auto'`` runs the Pallas kernel on TPU, the pure-jnp reference
 on CPU (interpret-mode execution is for tests, not production CPU use).
+
+Two entry points: :func:`aircomp_aggregate_fused` for a single round and
+:func:`aircomp_aggregate_fused_batch` for a trial-batched lattice round
+(leading ``n_trials`` axis on every argument — the shape ``repro.sim``'s
+vmapped lattice produces per policy).
 """
 from __future__ import annotations
 
 import jax
 
-from repro.kernels.aircomp.kernel import aircomp_fused
-from repro.kernels.aircomp.ref import aircomp_fused_ref
+from repro.kernels.aircomp.kernel import (
+    DEFAULT_TILE_D,
+    aircomp_fused,
+    aircomp_fused_batch,
+)
+from repro.kernels.aircomp.ref import aircomp_fused_batch_ref, aircomp_fused_ref
 
 
 def _on_tpu() -> bool:
@@ -16,7 +25,7 @@ def _on_tpu() -> bool:
 
 
 def aircomp_aggregate_fused(
-    g, coeff, m_g, v_g, a, z, *, use_pallas: str | bool = "auto", tile_d: int = 512
+    g, coeff, m_g, v_g, a, z, *, use_pallas: str | bool = "auto", tile_d: int = DEFAULT_TILE_D
 ):
     """Fused Eq. 5→8: ŷ = Σ_i coeff_i·(g_i − M_g) + sqrt(V_g)/a·z + M_g."""
     if use_pallas == "auto":
@@ -26,4 +35,22 @@ def aircomp_aggregate_fused(
     return aircomp_fused_ref(g, coeff, m_g, v_g, a, z)
 
 
-__all__ = ["aircomp_aggregate_fused", "aircomp_fused", "aircomp_fused_ref"]
+def aircomp_aggregate_fused_batch(
+    g, coeff, m_g, v_g, a, z, *, use_pallas: str | bool = "auto", tile_d: int = DEFAULT_TILE_D
+):
+    """Trial-batched fused Eq. 5→8 over (n_trials, n_devices, D) gradients."""
+    if use_pallas == "auto":
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return aircomp_fused_batch(g, coeff, m_g, v_g, a, z, tile_d=tile_d)
+    return aircomp_fused_batch_ref(g, coeff, m_g, v_g, a, z)
+
+
+__all__ = [
+    "aircomp_aggregate_fused",
+    "aircomp_aggregate_fused_batch",
+    "aircomp_fused",
+    "aircomp_fused_batch",
+    "aircomp_fused_batch_ref",
+    "aircomp_fused_ref",
+]

@@ -13,7 +13,17 @@ with real-valued effective channel after Lemma-1 inversion):
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
+
+
+def aircomp_fused_batch_ref(g, coeff, m_g, v_g, a, z):
+    """Trial-batched oracle: leading (n_trials,) axis on every argument.
+
+    vmap of :func:`aircomp_fused_ref` — the reference for the batched Pallas
+    kernel serving whole lattice batches.
+    """
+    return jax.vmap(aircomp_fused_ref)(g, coeff, m_g, v_g, a, z)
 
 
 def aircomp_fused_ref(g, coeff, m_g, v_g, a, z):

@@ -193,6 +193,14 @@ def parse_collective_bytes(hlo_text: str) -> dict:
     return out
 
 
+def cost_analysis_dict(cost) -> dict:
+    """jax version compat: ``cost_analysis()`` returns a dict on newer jax
+    but a (possibly empty) one-element list of dicts on older releases."""
+    if isinstance(cost, (list, tuple)):
+        return cost[0] if cost else {}
+    return cost or {}
+
+
 class _UnrolledScans:
     """Monkeypatch jax.lax.scan to fully unroll — XLA cost analysis counts a
     while-loop body ONCE, so the scanned-layer build under-reports FLOPs by a
@@ -235,10 +243,12 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True):
             "reason": "pure full-attention arch — no long_500k variant (DESIGN §4)",
         }
 
+    from repro.launch.mesh import activate_mesh
+
     cfg = configs.get_config(arch, shape)
     mesh = make_production_mesh(multi_pod=multi_pod)
     t0 = time.time()
-    with mesh:
+    with activate_mesh(mesh):
         bundle = build_step(cfg, shape, mesh)
         lowered = bundle.fn.lower(*bundle.arg_structs.values())
         t_lower = time.time() - t0
@@ -249,11 +259,13 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True):
         t1 = time.time()
         with _UnrolledScans():
             bundle_u = build_step(cfg, shape, mesh)
-            cost_u = bundle_u.fn.lower(*bundle_u.arg_structs.values()).cost_analysis()
+            cost_u = cost_analysis_dict(
+                bundle_u.fn.lower(*bundle_u.arg_structs.values()).cost_analysis()
+            )
         t_unroll = time.time() - t1
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled.cost_analysis())
     coll = parse_collective_bytes(compiled.as_text())
 
     rec = {

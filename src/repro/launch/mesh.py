@@ -7,10 +7,32 @@ pure data parallelism (its collectives cross the inter-pod DCI links).
 Functions, not module-level constants — importing this module never touches
 jax device state (the dry-run must set XLA_FLAGS *before* the first jax
 device query).
+
+``activate_mesh`` is the version-compat shim for entering a mesh context:
+the canonical spelling has moved across jax releases (``jax.set_mesh`` →
+``jax.sharding.use_mesh`` → the ``Mesh`` object's own context manager), and
+naming one of the newer APIs on an older jax raises AttributeError at call
+time. Use the shim everywhere a mesh is activated.
 """
 from __future__ import annotations
 
 import jax
+
+
+def activate_mesh(mesh):
+    """Return a context manager that makes ``mesh`` the ambient mesh.
+
+    Tries ``jax.set_mesh`` (newest), then ``jax.sharding.use_mesh``, then
+    falls back to the ``Mesh`` context-manager protocol (``with mesh:``),
+    which every supported jax version implements.
+    """
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    use_mesh = getattr(jax.sharding, "use_mesh", None)
+    if use_mesh is not None:
+        return use_mesh(mesh)
+    return mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -1,0 +1,33 @@
+"""repro.sim — vectorized scenario-lattice simulation engine for PO-FL.
+
+Three layers (see ROADMAP.md "sim" section):
+
+  * :mod:`repro.sim.scenario` — stateful channel processes (static Rayleigh,
+    Gauss–Markov fading, mobility, dropout) and data-heterogeneity presets
+    (iid / shards / dirichlet) behind string registries.
+  * :mod:`repro.sim.engine`   — the ``lax.scan``-over-rounds round engine
+    with a donated carry; ``core.pofl.run_pofl`` is a wrapper over it.
+  * :mod:`repro.sim.lattice`  — experiment-lattice specs
+    (policies × noise_powers × alphas × seeds [× n_devices]) compiled into
+    one vmapped+scanned program per (policy, shape) group.
+"""
+from repro.sim.engine import SimEngine, SimState
+from repro.sim.lattice import LatticeRecords, LatticeSpec, run_lattice
+from repro.sim.scenario import (
+    CHANNEL_SCENARIOS,
+    PARTITIONS,
+    make_channel_process,
+    make_partition,
+)
+
+__all__ = [
+    "CHANNEL_SCENARIOS",
+    "LatticeRecords",
+    "LatticeSpec",
+    "PARTITIONS",
+    "SimEngine",
+    "SimState",
+    "make_channel_process",
+    "make_partition",
+    "run_lattice",
+]

@@ -1,0 +1,179 @@
+"""Experiment lattices: whole paper sweeps as one vmapped+scanned program.
+
+A :class:`LatticeSpec` names the sweep axes
+
+    policies × noise_powers × alphas × seeds        (× n_rounds scanned)
+
+and :func:`run_lattice` compiles each policy's sub-lattice into a SINGLE
+jitted program: ``vmap`` over the flattened (noise, alpha, seed) grid of the
+engine's ``lax.scan`` over rounds. Policies (and anything shape-changing,
+e.g. n_devices or |S|) are structural, so they loop in Python — one compile
+per policy, reused across every cell. Per-cell metrics stay on device for
+the whole run and stream out exactly once at the end as structured numpy
+records.
+
+Compared to looping ``run_pofl`` over (policy × trial × sweep-point) — the
+seed repo's benchmark harness — this removes the per-round host sync and the
+per-(trial, sweep-point) recompiles; see benchmarks/run.py's ``BENCH_sim``
+entry for the measured cells/sec.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.channel import ChannelConfig
+from repro.core.pofl import DeviceData, POFLConfig
+from repro.sim.engine import SimEngine
+
+
+@dataclasses.dataclass(frozen=True)
+class LatticeSpec:
+    """Sweep axes + schedule for one experiment lattice.
+
+    ``noise_powers``, ``alphas`` and ``seeds`` are *vmapped* (batched into
+    one program); ``policies`` is a Python loop (structural). Everything not
+    named here comes from ``run_lattice``'s ``base_cfg``.
+    """
+
+    policies: tuple[str, ...] = ("pofl",)
+    noise_powers: tuple[float, ...] = (1e-11,)
+    alphas: tuple[float, ...] = (0.1,)
+    seeds: tuple[int, ...] = (0,)
+    n_rounds: int = 100
+    eval_every: int = 5
+
+    @property
+    def n_cells(self) -> int:
+        return (
+            len(self.policies)
+            * len(self.noise_powers)
+            * len(self.alphas)
+            * len(self.seeds)
+        )
+
+
+class LatticeRecords(NamedTuple):
+    """Structured per-cell records, axes (policy, noise, alpha, seed, ...).
+
+    ``loss``/``acc`` are sub-sampled at ``eval_rounds`` (empty E axis when
+    the lattice ran without an eval_fn).
+    """
+
+    axes: dict            # axis name -> coordinate list
+    e_com: np.ndarray     # (P, Nn, Na, Ns, T)
+    e_var: np.ndarray     # (P, Nn, Na, Ns, T)
+    grad_norm: np.ndarray # (P, Nn, Na, Ns, T)
+    n_scheduled: np.ndarray  # (P, Nn, Na, Ns, T)
+    loss: np.ndarray      # (P, Nn, Na, Ns, E)
+    acc: np.ndarray       # (P, Nn, Na, Ns, E)
+    eval_rounds: np.ndarray  # (E,)
+
+    def cell(self, **coords) -> dict:
+        """Select one sub-array per field by axis coordinates, e.g.
+        ``records.cell(policy="pofl", seed=0)``."""
+        idx: list[Any] = []
+        for name in ("policy", "noise_power", "alpha", "seed"):
+            if name in coords:
+                idx.append(self.axes[name].index(coords.pop(name)))
+            else:
+                idx.append(slice(None))
+        if coords:
+            raise ValueError(f"unknown axes {sorted(coords)}")
+        sel = tuple(idx)
+        return {
+            f: getattr(self, f)[sel]
+            for f in ("e_com", "e_var", "grad_norm", "n_scheduled", "loss", "acc")
+        }
+
+
+def run_lattice(
+    loss_fn: Callable,
+    data: DeviceData,
+    params0,
+    spec: LatticeSpec,
+    base_cfg: POFLConfig | None = None,
+    eval_fn: Callable | None = None,
+    channel_cfg: ChannelConfig | None = None,
+    scenario: str = "static_rayleigh",
+    scenario_params: dict | None = None,
+) -> LatticeRecords:
+    """Run the full lattice; one jitted (vmap ∘ scan) program per policy.
+
+    Args:
+      eval_fn: traceable ``params -> (loss, acc)`` — evaluated inside the
+        scan every ``spec.eval_every`` rounds (and on the last round).
+      base_cfg: defaults for everything the spec doesn't sweep; its
+        ``policy``/``noise_power``/``alpha``/``seed`` fields are overridden
+        per cell.
+    """
+    base_cfg = base_cfg or POFLConfig(n_devices=data.n_devices)
+
+    t_ints = np.arange(spec.n_rounds, dtype=np.int32)
+    if eval_fn is not None and spec.n_rounds:
+        do_eval = (t_ints % spec.eval_every == 0) | (t_ints == spec.n_rounds - 1)
+    else:
+        do_eval = np.zeros(spec.n_rounds, bool)
+    eval_rounds = t_ints[do_eval]
+
+    # flattened vmap grid over (noise, alpha, seed)
+    grid_n, grid_a, grid_s = np.meshgrid(
+        np.asarray(spec.noise_powers, np.float32),
+        np.asarray(spec.alphas, np.float32),
+        np.asarray(spec.seeds, np.int32),
+        indexing="ij",
+    )
+    noise_b = jnp.asarray(grid_n.ravel())
+    alpha_b = jnp.asarray(grid_a.ravel())
+    seed_b = jnp.asarray(grid_s.ravel())
+
+    per_policy = []
+    for policy in spec.policies:
+        cfg = dataclasses.replace(base_cfg, policy=policy, n_devices=data.n_devices)
+        engine = SimEngine(
+            loss_fn, data, cfg,
+            channel_cfg=channel_cfg,
+            scenario=scenario,
+            scenario_params=scenario_params,
+            eval_fn=eval_fn,
+        )
+
+        def cell(noise_power, alpha, seed, _engine=engine):
+            state = _engine.init(params0, seed)
+            _, recs = _engine.scan_rounds(
+                state, jnp.asarray(t_ints), jnp.asarray(do_eval),
+                noise_power=noise_power, alpha=alpha,
+            )
+            return recs
+
+        recs = jax.jit(jax.vmap(cell))(noise_b, alpha_b, seed_b)
+        per_policy.append(recs)  # stays on device until the final stream-out
+
+    # single stream-out: device → host exactly once for the whole lattice
+    per_policy = jax.device_get(per_policy)
+    grid_shape = (len(spec.noise_powers), len(spec.alphas), len(spec.seeds))
+
+    def gather(field: str, eval_only: bool) -> np.ndarray:
+        stacked = np.stack([getattr(r, field) for r in per_policy])  # (P, B, T)
+        stacked = stacked.reshape((len(spec.policies),) + grid_shape + (spec.n_rounds,))
+        return stacked[..., do_eval] if eval_only else stacked
+
+    return LatticeRecords(
+        axes={
+            "policy": list(spec.policies),
+            "noise_power": list(spec.noise_powers),
+            "alpha": list(spec.alphas),
+            "seed": list(spec.seeds),
+        },
+        e_com=gather("e_com", False),
+        e_var=gather("e_var", False),
+        grad_norm=gather("grad_norm", False),
+        n_scheduled=gather("n_scheduled", False),
+        loss=gather("loss", True),
+        acc=gather("acc", True),
+        eval_rounds=eval_rounds,
+    )

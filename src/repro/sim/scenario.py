@@ -1,0 +1,214 @@
+"""Scenario registry: channel processes + data-heterogeneity presets.
+
+A *channel process* generalizes ``core.channel.ChannelState`` into a stateful
+per-round process with the pure-functional interface
+
+    proc.init(key)        -> state                  (pytree of arrays)
+    proc.step(state, key) -> (state', h, avail)
+
+where ``h`` is complex64 ``(n_devices,)`` fading and ``avail`` is a float 0/1
+``(n_devices,)`` availability mask (all-ones except for dropout scenarios),
+so it can live inside the engine's ``lax.scan`` carry and be vmapped across
+lattice cells. All processes are frozen dataclasses (static config hashes
+into the jit cache); all state is arrays. Processes with ``can_drop=False``
+always return all-ones availability, and the engine skips the scheduling
+masking entirely for them — keeping the static path bit-identical to the
+seed ``run_pofl``.
+
+Registered channel scenarios (``make_channel_process(name, cfg, **params)``):
+
+  * ``static_rayleigh`` — the paper's Sec. V-A model and the seed repo's only
+    scenario: path-loss gains drawn once from uniform distances, i.i.d.
+    CN(0, g_i) block fading every round. Bit-identical to
+    ``ChannelState.create(cfg, key)`` + ``.sample(key_t)``.
+  * ``gauss_markov``    — first-order Gauss–Markov (Jakes-style) temporally
+    correlated fading:  h_t = ρ·h_{t-1} + sqrt(1-ρ²)·CN(0, g).  Parameter
+    ``corr`` = ρ ∈ [0, 1); stationary distribution CN(0, g) for any ρ
+    (checked by tests/test_sim.py). ρ=0 recovers block fading in law.
+  * ``mobility``        — time-varying path loss from a per-round Gaussian
+    random walk on device distances, reflected into [d_min, d_max].
+    Parameter ``speed`` = walk std in meters/round. Fading stays i.i.d.
+    Rayleigh on top of the moving gains.
+  * ``dropout``         — random device dropout/stragglers layered on any
+    base scenario (default static_rayleigh): each round each device is
+    independently unavailable with probability ``p_drop`` (crashed,
+    straggling past the deadline, or out of coverage). Unavailable devices
+    are excluded from scheduling for the round — the paper's Q-rule would
+    otherwise chase them (Q_i ∝ 1/|h_i|), which is an artifact of its
+    always-reachable assumption, not a meaningful policy comparison.
+    Control-channel stats are still assumed known (idealization).
+    Parameters: ``p_drop``, ``base`` (+ base-scenario params).
+
+Data-heterogeneity presets (``make_partition(name, x, y, n_devices, ...)``):
+
+  * ``iid``       — uniform random equal split (``partition_iid``).
+  * ``shards``    — the paper's sort-by-label sharding
+    (``partition_noniid_shards``; ``shards_per_device`` ≈ classes/device).
+  * ``dirichlet`` — Dirichlet(β) label-proportion skew per device
+    (``partition_dirichlet``; small β → near-single-class devices).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.channel import (
+    ChannelConfig,
+    device_distances,
+    path_loss,
+    sample_channels,
+)
+from repro.data.partition import (
+    partition_dirichlet,
+    partition_iid,
+    partition_noniid_shards,
+)
+
+# --------------------------------------------------------------------------
+# channel processes
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StaticRayleigh:
+    """Paper Sec. V-A: static path loss, i.i.d. Rayleigh block fading.
+
+    Matches the seed ``ChannelState`` exactly: ``init`` consumes the key the
+    way ``ChannelState.create`` does and ``step`` is ``ChannelState.sample``.
+    """
+
+    cfg: ChannelConfig
+    can_drop = False
+
+    def init(self, key: jax.Array):
+        gains = path_loss(self.cfg, device_distances(self.cfg, key))
+        return (gains,)
+
+    def step(self, state, key: jax.Array):
+        (gains,) = state
+        h = sample_channels(self.cfg, gains, key)
+        return state, h, jnp.ones_like(gains)
+
+
+@dataclasses.dataclass(frozen=True)
+class GaussMarkov:
+    """First-order Gauss–Markov fading: h_t = ρ h_{t-1} + sqrt(1-ρ²) CN(0,g)."""
+
+    cfg: ChannelConfig
+    corr: float = 0.9  # ρ — per-round temporal correlation
+    can_drop = False
+
+    def init(self, key: jax.Array):
+        k_dist, k_h0 = jax.random.split(key)
+        gains = path_loss(self.cfg, device_distances(self.cfg, k_dist))
+        h0 = sample_channels(self.cfg, gains, k_h0)  # stationary start
+        return (gains, h0)
+
+    def step(self, state, key: jax.Array):
+        gains, h_prev = state
+        innov = sample_channels(self.cfg, gains, key)
+        h = self.corr * h_prev + jnp.sqrt(1.0 - self.corr**2) * innov
+        return (gains, h), h, jnp.ones_like(gains)
+
+
+@dataclasses.dataclass(frozen=True)
+class Mobility:
+    """Mobility-driven time-varying path loss (reflected random-walk distances)."""
+
+    cfg: ChannelConfig
+    speed: float = 1.0  # distance random-walk std [m/round]
+    can_drop = False
+
+    def init(self, key: jax.Array):
+        return (device_distances(self.cfg, key),)
+
+    def step(self, state, key: jax.Array):
+        (dist,) = state
+        k_walk, k_fade = jax.random.split(key)
+        dist = dist + self.speed * jax.random.normal(k_walk, dist.shape)
+        # reflect into [d_min, d_max] so devices never escape the cell
+        lo, hi = self.cfg.d_min, self.cfg.d_max
+        span = hi - lo
+        dist = lo + jnp.abs(jnp.mod(dist - lo, 2.0 * span) - span)
+        gains = path_loss(self.cfg, dist)
+        h = sample_channels(self.cfg, gains, k_fade)
+        return (dist,), h, jnp.ones_like(dist)
+
+
+@dataclasses.dataclass(frozen=True)
+class Dropout:
+    """Random device dropout/stragglers on top of a base channel process.
+
+    Each round each device is independently unavailable with probability
+    ``p_drop``; the engine zeroes its scheduling probability for the round
+    (the device can neither upload nor transmit). The base process keeps
+    evolving underneath — a device that drops this round fades from the
+    same trajectory next round.
+
+    Rounds with fewer available devices than ``n_scheduled`` clamp the
+    realized |S^t| to the available count (see
+    ``scheduling.sample_without_replacement``); a round with *no* available
+    device performs no update at all.
+    """
+
+    base: Any  # any channel process
+    p_drop: float = 0.1
+    can_drop = True
+
+    def init(self, key: jax.Array):
+        return self.base.init(key)
+
+    def step(self, state, key: jax.Array):
+        k_base, k_drop = jax.random.split(key)
+        state, h, avail = self.base.step(state, k_base)
+        up = 1.0 - jax.random.bernoulli(k_drop, self.p_drop, h.shape).astype(
+            jnp.float32
+        )
+        return state, h, avail * up
+
+
+CHANNEL_SCENARIOS = ("static_rayleigh", "gauss_markov", "mobility", "dropout")
+
+
+def make_channel_process(name: str, cfg: ChannelConfig, **params):
+    """Instantiate a registered channel process over ``cfg``.
+
+    ``dropout`` accepts ``base="..."`` plus the base scenario's params, e.g.
+    ``make_channel_process("dropout", cfg, p_drop=0.2, base="gauss_markov",
+    corr=0.95)``.
+    """
+    if name == "static_rayleigh":
+        return StaticRayleigh(cfg, **params)
+    if name == "gauss_markov":
+        return GaussMarkov(cfg, **params)
+    if name == "mobility":
+        return Mobility(cfg, **params)
+    if name == "dropout":
+        base_name = params.pop("base", "static_rayleigh")
+        p_drop = params.pop("p_drop", 0.1)
+        base = make_channel_process(base_name, cfg, **params)
+        return Dropout(base=base, p_drop=p_drop)
+    raise ValueError(
+        f"unknown channel scenario {name!r}; known: {CHANNEL_SCENARIOS}"
+    )
+
+
+# --------------------------------------------------------------------------
+# data-heterogeneity presets
+# --------------------------------------------------------------------------
+
+PARTITIONS = ("iid", "shards", "dirichlet")
+
+
+def make_partition(name: str, features, labels, n_devices: int, seed: int = 0, **kw):
+    """Partition (features, labels) into stacked per-device shards."""
+    if name == "iid":
+        return partition_iid(features, labels, n_devices, seed=seed)
+    if name == "shards":
+        return partition_noniid_shards(features, labels, n_devices, seed=seed, **kw)
+    if name == "dirichlet":
+        return partition_dirichlet(features, labels, n_devices, seed=seed, **kw)
+    raise ValueError(f"unknown partition {name!r}; known: {PARTITIONS}")

@@ -30,6 +30,7 @@ _SUBPROC = textwrap.dedent(
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import PartitionSpec as P
     from repro.core import aircomp, collective
+    from repro.launch.mesh import activate_mesh
 
     mesh = jax.make_mesh((8,), ("data",))
     n, dim = 8, 64
@@ -51,7 +52,7 @@ _SUBPROC = textwrap.dedent(
     a = aircomp.denoise_scalar(rho, jnp.abs(h), mask, 1.0)
     amp = jnp.sqrt(v_g)/a
 
-    with jax.set_mesh(mesh):
+    with activate_mesh(mesh):
         agg = collective.make_sharded_aggregator(mesh, "data")
         y_dist = agg(g, mask*rho, jnp.asarray(0.0), jax.random.PRNGKey(5))
     # zero-noise comparison isolates the weighted psum

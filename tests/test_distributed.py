@@ -143,20 +143,38 @@ def test_prefill_step_sharded(mesh):
 
 
 def test_stats_step_sketch_close_to_exact(mesh):
-    """JVP-sketched stats: M_i exact; ‖g_i‖ unbiased (loose tolerance)."""
+    """JVP-sketched stats: the sharded M_i matches the single-host JVP
+    tightly (the sharding/remat machinery adds no error); vs the reverse-mode
+    gradient mean only a scale-anchored bound holds (forward- and
+    reverse-mode float32 rounding diverge at the mean's cancellation-
+    dominated ~1e-5 scale); ‖g_i‖ unbiased (loose tolerance)."""
     cfg = _cfg()
     bundle = build_stats_step(
         cfg, SMALL_TRAIN, mesh, dtype=jnp.float32, n_probes=48
     )
     n_fl = mesh.shape["data"]
-    params = api.model_init(cfg, jax.random.PRNGKey(0))
-    params = jax.device_put(params, bundle.in_shardings["params"])
+    params_host = api.model_init(cfg, jax.random.PRNGKey(0))
+    params = jax.device_put(params_host, bundle.in_shardings["params"])
     batch = _batch(cfg, SMALL_TRAIN, jax.random.PRNGKey(1))
     mean, var, norm = bundle.fn(params, batch, jax.random.PRNGKey(3))
 
-    # exact per-device gradients
+    # single-host reference for the SAME forward-mode statistic — sharp:
+    # catches any sharding-induced scaling (e.g. a stray psum-mean)
     b = SMALL_TRAIN.global_batch
     per_dev = b // n_fl
+
+    def per_device_loss(p):
+        pe, _ = api.model_loss(p, cfg, batch, dtype=jnp.float32, reduce=False)
+        return pe.reshape(n_fl, per_dev).mean(axis=1)
+
+    ones = jax.tree.map(jnp.ones_like, params_host)
+    _, dots = jax.jvp(per_device_loss, (params_host,), (ones,))
+    dim = sum(int(jnp.size(l)) for l in jax.tree.leaves(params_host))
+    np.testing.assert_allclose(
+        np.asarray(mean), np.asarray(dots / dim), rtol=1e-3, atol=1e-9
+    )
+
+    # exact (reverse-mode) per-device gradients
     for d in range(n_fl):
         sl = {k: v[d * per_dev:(d + 1) * per_dev] for k, v in batch.items()}
 
@@ -166,7 +184,10 @@ def test_stats_step_sketch_close_to_exact(mesh):
 
         g = jax.grad(dl)(params)
         flat = jnp.concatenate([l.ravel() for l in jax.tree.leaves(g)])
-        np.testing.assert_allclose(float(mean[d]), float(flat.mean()), rtol=2e-3, atol=1e-8)
+        # forward vs reverse mode agree only to the float32 noise floor of
+        # the gradient-entry RMS scale, which the ~1e-5 mean sits below
+        rms = float(jnp.linalg.norm(flat)) / np.sqrt(flat.size)
+        assert abs(float(mean[d]) - float(flat.mean())) < 5e-3 * rms + 1e-9
         # Hutchinson: relative error ~ sqrt(2/k) ≈ 0.2 at k=48
         assert abs(float(norm[d]) - float(jnp.linalg.norm(flat))) \
             < 0.5 * float(jnp.linalg.norm(flat)) + 1e-9

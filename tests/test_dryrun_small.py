@@ -7,8 +7,8 @@ import jax
 import pytest
 
 from repro import configs
-from repro.launch.dryrun import parse_collective_bytes
-from repro.launch.mesh import make_host_mesh
+from repro.launch.dryrun import cost_analysis_dict, parse_collective_bytes
+from repro.launch.mesh import activate_mesh, make_host_mesh
 from repro.launch.steps import build_step
 from repro.models.config import InputShape
 
@@ -34,13 +34,13 @@ SHAPES = {
 def test_lower_compile_small(mesh, arch_id, kind):
     cfg = configs.reduced_config(arch_id)
     shape = SHAPES[kind]
-    with mesh:
+    with activate_mesh(mesh):
         bundle = build_step(cfg, shape, mesh)
         lowered = bundle.fn.lower(*bundle.arg_structs.values())
         compiled = lowered.compile()
     mem = compiled.memory_analysis()
     assert mem.temp_size_in_bytes >= 0
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled.cost_analysis())
     assert cost.get("flops", 0) > 0
     coll = parse_collective_bytes(compiled.as_text())
     # a sharded train/prefill step must communicate *something*

@@ -1,0 +1,377 @@
+"""repro.sim subsystem tests: engine↔run_pofl trajectory equivalence,
+channel-scenario statistics, Dirichlet partition, lattice records, and the
+trial-batched fused kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import POFLConfig, make_round_step
+from repro.core.channel import ChannelConfig, ChannelState
+from repro.data import (
+    make_classification_dataset,
+    partition_dirichlet,
+    partition_noniid_shards,
+)
+from repro.kernels.aircomp import aircomp_fused_batch, aircomp_fused_batch_ref
+from repro.sim import LatticeSpec, SimEngine, make_channel_process, run_lattice
+
+
+def _loss_fn(params, x, y):
+    logits = x @ params["w"] + params["b"]
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    key = jax.random.PRNGKey(0)
+    x, y = make_classification_dataset("mnist_like", 1200, key)
+    data = partition_noniid_shards(x, y, n_devices=12)
+    params0 = {"w": jnp.zeros((784, 10)), "b": jnp.zeros((10,))}
+
+    def ev(p):
+        logits = x[:400] @ p["w"] + p["b"]
+        return _loss_fn(p, x[:400], y[:400]), jnp.mean(jnp.argmax(logits, -1) == y[:400])
+
+    return data, params0, ev
+
+
+# --------------------------------------------------------------------------
+# engine ↔ run_pofl equivalence (acceptance criterion: ≤1e-5 on static fading)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ["pofl", "deterministic"])
+def test_engine_matches_legacy_round_loop(setup, policy):
+    """The scanned engine must reproduce the historical per-round-jit Python
+    loop (the seed repo's run_pofl) for identical seeds on static fading."""
+    data, params0, ev = setup
+    cfg = POFLConfig(n_devices=12, n_scheduled=4, policy=policy, seed=3)
+    n_rounds = 8
+
+    # legacy loop: per-round jit, key chain advanced in Python
+    key = jax.random.PRNGKey(cfg.seed)
+    k_chan_init, key = jax.random.split(key)
+    channel = ChannelState.create(
+        ChannelConfig(
+            n_devices=12, tx_power=cfg.tx_power, noise_power=cfg.noise_power
+        ),
+        k_chan_init,
+    )
+    step = make_round_step(_loss_fn, data, channel, cfg)
+    params = params0
+    e_coms = []
+    for t in range(n_rounds):
+        key, k_round = jax.random.split(key)
+        params, m = step(params, k_round, jnp.asarray(t, jnp.float32))
+        e_coms.append(float(m.e_com))
+
+    # scanned engine (via the run_pofl wrapper)
+    engine = SimEngine(_loss_fn, data, cfg)
+    params_sim, hist = engine.run_with_history(params0, n_rounds, eval_fn=ev)
+    np.testing.assert_allclose(
+        np.asarray(params_sim["w"]), np.asarray(params["w"]), rtol=1e-5, atol=1e-5
+    )
+    np.testing.assert_allclose(np.asarray(hist.e_com), e_coms, rtol=1e-5)
+    assert hist.test_round[-1] == n_rounds - 1
+
+
+def test_run_with_history_matches_plain_chunks(setup):
+    """Eval chunking must not perturb the trajectory: same params with and
+    without an eval_fn."""
+    data, params0, ev = setup
+    cfg = POFLConfig(n_devices=12, n_scheduled=4, seed=11)
+    engine = SimEngine(_loss_fn, data, cfg)
+    p_eval, _ = engine.run_with_history(params0, 7, eval_fn=ev, eval_every=3)
+    p_plain, hist = engine.run_with_history(params0, 7, eval_fn=None)
+    np.testing.assert_array_equal(np.asarray(p_eval["w"]), np.asarray(p_plain["w"]))
+    assert len(hist.e_com) == 7 and hist.test_round == []
+
+
+# --------------------------------------------------------------------------
+# channel scenarios
+# --------------------------------------------------------------------------
+
+
+def _rollout(proc, key, n_rounds):
+    state = proc.init(jax.random.PRNGKey(0))
+
+    def body(st, k):
+        st, h, avail = proc.step(st, k)
+        return st, (h, avail)
+
+    _, (hs, avails) = jax.lax.scan(body, state, jax.random.split(key, n_rounds))
+    return hs, avails  # each (n_rounds, n_devices)
+
+
+def test_gauss_markov_stationary_moments():
+    """h_t must stay CN(0, g_i): E[h]≈0, E[|h|²]≈g_i, and lag-1 autocorr≈ρ."""
+    cfg = ChannelConfig(n_devices=6)
+    proc = make_channel_process("gauss_markov", cfg, corr=0.8)
+    gains = proc.init(jax.random.PRNGKey(0))[0]
+    hs, avails = _rollout(proc, jax.random.PRNGKey(1), 4000)
+    assert np.asarray(avails).all()  # gauss_markov never drops devices
+
+    emp_power = jnp.mean(jnp.abs(hs) ** 2, axis=0)
+    np.testing.assert_allclose(np.asarray(emp_power), np.asarray(gains), rtol=0.15)
+    emp_mean = np.abs(np.asarray(jnp.mean(hs, axis=0)))
+    assert emp_mean.max() < 0.15 * float(jnp.sqrt(gains.max()))
+
+    lag1 = jnp.mean(hs[1:] * jnp.conj(hs[:-1]), axis=0)
+    rho_hat = np.asarray(jnp.real(lag1) / emp_power)
+    np.testing.assert_allclose(rho_hat, 0.8, atol=0.1)
+
+
+def test_static_rayleigh_matches_channelstate():
+    """The registry's static scenario is bit-identical to core ChannelState."""
+    cfg = ChannelConfig(n_devices=8)
+    proc = make_channel_process("static_rayleigh", cfg)
+    state = proc.init(jax.random.PRNGKey(5))
+    legacy = ChannelState.create(cfg, jax.random.PRNGKey(5))
+    np.testing.assert_array_equal(np.asarray(state[0]), np.asarray(legacy.gains))
+    _, h, avail = proc.step(state, jax.random.PRNGKey(9))
+    np.testing.assert_array_equal(
+        np.asarray(h), np.asarray(legacy.sample(jax.random.PRNGKey(9)))
+    )
+    np.testing.assert_array_equal(np.asarray(avail), 1.0)
+
+
+def test_mobility_distances_stay_in_cell():
+    cfg = ChannelConfig(n_devices=5, d_min=10.0, d_max=50.0)
+    proc = make_channel_process("mobility", cfg, speed=30.0)
+    state = proc.init(jax.random.PRNGKey(0))
+    for i in range(50):
+        state, _, _ = proc.step(state, jax.random.fold_in(jax.random.PRNGKey(1), i))
+        d = np.asarray(state[0])
+        assert (d >= cfg.d_min - 1e-4).all() and (d <= cfg.d_max + 1e-4).all()
+
+
+def test_dropout_marks_devices_unavailable():
+    cfg = ChannelConfig(n_devices=32)
+    proc = make_channel_process("dropout", cfg, p_drop=0.3)
+    base = make_channel_process("static_rayleigh", cfg)
+    st_d = proc.init(jax.random.PRNGKey(0))
+    st_b = base.init(jax.random.PRNGKey(0))
+    k = jax.random.PRNGKey(7)
+    _, h_d, avail = proc.step(st_d, k)
+    # the base fading trajectory is untouched (k_base = split(k)[0])
+    k_base, _ = jax.random.split(k)
+    _, h_b, _ = base.step(st_b, k_base)
+    np.testing.assert_array_equal(np.asarray(h_d), np.asarray(h_b))
+    avail = np.asarray(avail)
+    assert set(np.unique(avail)) <= {0.0, 1.0}
+    assert 0 < (avail == 0).sum() < 32  # some but not all dropped at p=0.3
+
+    _, avails = _rollout(proc, jax.random.PRNGKey(3), 2000)
+    drop_rate = 1.0 - float(np.mean(np.asarray(avails)))
+    np.testing.assert_allclose(drop_rate, 0.3, atol=0.03)
+
+
+def test_sampler_clamps_when_fewer_selectable_than_s():
+    """Zero-prob (unavailable) devices are never drafted and never weighted:
+    with 3 selectable devices and |S|=4 the realized schedule is exactly the
+    3 selectable ones, surplus draws are -1 sentinels, and the Eq. 37
+    weights stay finite and zero off the selectable set."""
+    from repro.core import scheduling
+
+    probs = jnp.array([0.5, 0.3, 0.2] + [0.0] * 9)
+    data_frac = jnp.full((12,), 1.0 / 12)
+    for seed in range(5):
+        sched = scheduling.sample_without_replacement(
+            jax.random.PRNGKey(seed), probs, 4
+        )
+        mask = np.asarray(sched.mask)
+        np.testing.assert_array_equal(mask[:3], 1.0)
+        np.testing.assert_array_equal(mask[3:], 0.0)
+        assert (np.asarray(sched.indices) == -1).sum() == 1
+        rho = np.asarray(
+            scheduling.aggregation_weights(sched, probs, data_frac, 4)
+        )
+        assert np.isfinite(rho).all()
+        np.testing.assert_array_equal(rho[3:], 0.0)
+        assert (rho[:3] > 0).all()
+
+
+def test_dropout_empty_rounds_finite_on_physical_path(setup):
+    """Rounds where every device drops must not NaN the Eq. 5→8 physical
+    chain (a=inf, rho=0 would give 0·inf transmit scalars without the
+    mask-before-multiply guard in aircomp_aggregate)."""
+    data, params0, _ = setup
+    cfg = POFLConfig(
+        n_devices=12, n_scheduled=3, policy="pofl", seed=0,
+        simulate_physical=True,
+    )
+    engine = SimEngine(
+        _loss_fn, data, cfg, scenario="dropout",
+        scenario_params={"p_drop": 0.85},
+    )
+    state = engine.init(params0, 0)
+    final, recs = jax.jit(
+        lambda s: engine.scan_rounds(
+            s, jnp.arange(50, dtype=jnp.int32), jnp.zeros(50, bool)
+        )
+    )(state)
+    assert (np.asarray(recs.n_scheduled) == 0).any()  # empty rounds occurred
+    assert np.isfinite(np.asarray(final.params["w"])).all()
+    assert np.isfinite(np.asarray(recs.grad_norm)).all()
+
+
+def test_dropout_rounds_stay_finite(setup):
+    """Even in rounds where dropout leaves fewer than |S| devices available,
+    the engine's trajectory and metrics stay finite (|S| clamps)."""
+    data, params0, _ = setup
+    cfg = POFLConfig(n_devices=12, n_scheduled=4, policy="pofl", seed=0)
+    engine = SimEngine(
+        _loss_fn, data, cfg, scenario="dropout",
+        # p_drop=0.75: P(<4 of 12 available) ≈ 0.65 per round, so the
+        # clamping path definitely fires within 40 rounds
+        scenario_params={"p_drop": 0.75},
+    )
+    state = engine.init(params0, 0)
+    final, recs = jax.jit(
+        lambda s: engine.scan_rounds(
+            s, jnp.arange(40, dtype=jnp.int32), jnp.zeros(40, bool)
+        )
+    )(state)
+    n_sched = np.asarray(recs.n_scheduled)
+    assert np.isfinite(np.asarray(recs.e_com)).all()
+    assert np.isfinite(np.asarray(recs.e_var)).all()
+    assert np.isfinite(np.asarray(jax.tree.leaves(final.params)[0])).all()
+    assert (n_sched <= 4).all() and n_sched.min() < 4  # clamping observed
+
+
+# --------------------------------------------------------------------------
+# dirichlet partition
+# --------------------------------------------------------------------------
+
+
+def test_dirichlet_partition_shapes_and_skew():
+    key = jax.random.PRNGKey(0)
+    x, y = make_classification_dataset("mnist_like", 2000, key)
+    n_dev = 10
+    skewed = partition_dirichlet(x, y, n_dev, beta=0.1, seed=0)
+    near_iid = partition_dirichlet(x, y, n_dev, beta=1000.0, seed=0)
+
+    per = 2000 // n_dev
+    assert skewed.features.shape == (n_dev, per, 784)
+    assert skewed.labels.shape == (n_dev, per)
+
+    def mean_top_class_frac(dd):
+        fracs = []
+        for d in range(n_dev):
+            _, counts = np.unique(np.asarray(dd.labels[d]), return_counts=True)
+            fracs.append(counts.max() / counts.sum())
+        return float(np.mean(fracs))
+
+    # β→0 concentrates mass on few classes; β→∞ recovers ~uniform (10
+    # classes → top frac ≈ 0.1–0.2). The equal-size constraint dilutes the
+    # skew for late devices (class pools run dry), so ~0.4 is the realistic
+    # concentrated value, still far from uniform.
+    assert mean_top_class_frac(skewed) > 0.35
+    assert mean_top_class_frac(near_iid) < 0.25
+    assert mean_top_class_frac(skewed) > mean_top_class_frac(near_iid) + 0.15
+    # no sample is duplicated across devices: the per-class totals over all
+    # shards can then never exceed the global per-class counts (and with
+    # M divisible by N they must match exactly)
+    global_classes, global_counts = np.unique(np.asarray(y), return_counts=True)
+    part_classes, part_counts = np.unique(
+        np.asarray(skewed.labels).ravel(), return_counts=True
+    )
+    np.testing.assert_array_equal(part_classes, global_classes)
+    np.testing.assert_array_equal(part_counts, global_counts)
+    # ...and the feature rows themselves are all distinct (continuous
+    # features are unique w.p. 1, so any duplicate row = a reused sample)
+    flat = np.asarray(skewed.features).reshape(n_dev * per, -1)
+    assert np.unique(flat, axis=0).shape[0] == n_dev * per
+
+
+# --------------------------------------------------------------------------
+# lattice records
+# --------------------------------------------------------------------------
+
+
+def test_lattice_record_shapes_and_axes(setup):
+    data, params0, ev = setup
+    spec = LatticeSpec(
+        policies=("pofl", "channel"),
+        noise_powers=(1e-11, 1e-9),
+        alphas=(0.1, 1.0),
+        seeds=(0, 1000, 2000),
+        n_rounds=6,
+        eval_every=2,
+    )
+    recs = run_lattice(
+        _loss_fn, data, params0, spec,
+        base_cfg=POFLConfig(n_devices=12, n_scheduled=4),
+        eval_fn=ev,
+    )
+    assert recs.e_com.shape == (2, 2, 2, 3, 6)
+    np.testing.assert_array_equal(recs.eval_rounds, [0, 2, 4, 5])
+    assert recs.acc.shape == (2, 2, 2, 3, 4)
+    assert np.isfinite(recs.e_com).all() and np.isfinite(recs.acc).all()
+    assert (recs.n_scheduled >= 1).all()
+
+    c = recs.cell(policy="pofl", noise_power=1e-9, alpha=1.0)
+    assert c["acc"].shape == (3, 4)
+    with pytest.raises(ValueError):
+        recs.cell(nonsense=3)
+
+
+def test_lattice_single_cell_matches_run_pofl(setup):
+    """A 1-cell lattice is the engine run end-to-end: accuracies must match
+    run_pofl (which shares the engine) exactly in eval rounds and closely in
+    values (eval inside scan vs on host)."""
+    from repro.core import run_pofl
+
+    data, params0, ev = setup
+    cfg = POFLConfig(n_devices=12, n_scheduled=4, policy="pofl", seed=0)
+    spec = LatticeSpec(policies=("pofl",), seeds=(0,), n_rounds=6, eval_every=2)
+    recs = run_lattice(
+        _loss_fn, data, params0, spec, base_cfg=cfg, eval_fn=jax.jit(ev)
+    )
+    _, hist = run_pofl(_loss_fn, params0, data, cfg, 6, eval_fn=jax.jit(ev), eval_every=2)
+    np.testing.assert_array_equal(recs.eval_rounds, hist.test_round)
+    np.testing.assert_allclose(
+        recs.acc[0, 0, 0, 0], hist.test_acc, rtol=1e-5, atol=1e-6
+    )
+    np.testing.assert_allclose(
+        recs.e_com[0, 0, 0, 0], hist.e_com, rtol=1e-5
+    )
+
+
+def test_lattice_gauss_markov_runs(setup):
+    data, params0, _ = setup
+    spec = LatticeSpec(policies=("pofl",), seeds=(0, 1000), n_rounds=4)
+    recs = run_lattice(
+        _loss_fn, data, params0, spec,
+        base_cfg=POFLConfig(n_devices=12, n_scheduled=4),
+        scenario="gauss_markov", scenario_params={"corr": 0.95},
+    )
+    assert recs.e_com.shape == (1, 1, 1, 2, 4)
+    assert np.isfinite(recs.e_com).all()
+    assert recs.acc.shape[-1] == 0  # no eval_fn → empty eval axis
+
+
+# --------------------------------------------------------------------------
+# trial-batched fused kernel
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bt,n,d", [(1, 4, 512), (3, 12, 700), (5, 30, 1024)])
+def test_aircomp_fused_batch_matches_ref(bt, n, d):
+    ks = jax.random.split(jax.random.PRNGKey(0), 6)
+    g = jax.random.normal(ks[0], (bt, n, d))
+    coeff = jax.random.uniform(ks[1], (bt, n)) * (
+        jax.random.uniform(ks[2], (bt, n)) > 0.3
+    )
+    z = jax.random.normal(ks[3], (bt, d))
+    m_g = 0.1 * jax.random.normal(ks[4], (bt,))
+    v_g = jax.random.uniform(ks[5], (bt,)) + 0.2
+    a = jnp.linspace(1.0, 3.0, bt)
+
+    got = aircomp_fused_batch(g, coeff, m_g, v_g, a, z, interpret=True)
+    want = aircomp_fused_batch_ref(g, coeff, m_g, v_g, a, z)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
