@@ -86,6 +86,7 @@ def sweep_lattice(
     lr0: float | None = None,
     eval_every: int = 5,
     seed: int = 0,
+    backend: str = "jnp",
 ) -> LatticeRecords:
     """Run a full (policies × noise_powers × alphas × trials) lattice."""
     spec = LatticeSpec(
@@ -100,6 +101,7 @@ def sweep_lattice(
         n_devices=task.data.n_devices,
         n_scheduled=n_scheduled,
         lr0=_default_lr0(task, lr0),
+        backend=backend,
     )
     return run_lattice(
         task.loss_fn, task.data, task.params0, spec,
@@ -133,6 +135,7 @@ def run_policies(
     lr0: float | None = None,
     eval_every: int = 5,
     seed: int = 0,
+    backend: str = "jnp",
 ) -> dict:
     """Returns {policy: {"acc": (trials, evals), "rounds": [...], ...}} —
     same record layout as the historical run_pofl loop, computed on the
@@ -140,7 +143,7 @@ def run_policies(
     recs = sweep_lattice(
         task, policies=policies, noise_powers=(noise_power,), alphas=(alpha,),
         n_rounds=n_rounds, n_trials=n_trials, n_scheduled=n_scheduled,
-        lr0=lr0, eval_every=eval_every, seed=seed,
+        lr0=lr0, eval_every=eval_every, seed=seed, backend=backend,
     )
     return {
         p: policy_summary(recs, p, noise_power, alpha) for p in policies
@@ -158,11 +161,14 @@ def run_policies_loop(
     lr0: float | None = None,
     eval_every: int = 5,
     seed: int = 0,
+    backend: str = "jnp",
 ) -> dict:
     """Historical harness: one ``run_pofl`` call per (policy × trial).
 
     Kept as the reference implementation and as the baseline the lattice's
-    speedup is measured against (benchmarks/run.py → BENCH_sim.json).
+    speedup is measured against (benchmarks/run.py → BENCH_sim.json). Since
+    PR 2 this baseline itself benefits from the cross-call engine cache —
+    trials of a policy differ only by seed, so only the first traces.
     """
     lr0 = _default_lr0(task, lr0)
     out = {}
@@ -178,6 +184,7 @@ def run_policies_loop(
                 noise_power=noise_power,
                 lr0=lr0,
                 seed=seed + 1000 * trial,
+                backend=backend,
             )
             _, hist = run_pofl(
                 task.loss_fn, task.params0, task.data, cfg, n_rounds,

@@ -4,10 +4,15 @@ micro-benchmarks + the roofline table + the sim-lattice throughput bench.
 Prints ``name,us_per_call,derived`` CSV lines (reduced settings — pass
 --full to the individual modules for paper-scale runs), and writes
 ``BENCH_sim.json`` (machine-readable lattice cells/sec + speedup vs the
-historical run_pofl loop) so future PRs have a perf trajectory.
+cached-engine run_pofl loop, plus the aggregation backend used and the
+engine-cache hit counts) so future PRs have a perf trajectory.
+
+``--backend {jnp,pallas_fused}`` selects the aggregation backend for the
+sim-lattice bench (threaded through benchmarks/common.py).
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import time
@@ -62,31 +67,42 @@ def _kernel_micro():
     return f"max_abs_err={max(err_a, err_f, err_s):.2e}"
 
 
-def _bench_sim():
+def _bench_sim(backend: str = "jnp"):
     """Reduced fig4-style sweep (5 policies × 3 trials) through sim.lattice
-    vs the historical one-run_pofl-per-cell loop → BENCH_sim.json."""
+    vs the cached-engine one-run_pofl-per-cell loop → BENCH_sim.json.
+
+    ``loop_seconds`` is measured against the PR-2 optimized wrapper (engine
+    cache + single-static-length active-mask scan), so the speedup is the
+    honest lattice-vs-loop number, not lattice-vs-cold-recompiles.
+    """
     from benchmarks.common import (
         POLICIES, build_task, run_policies, run_policies_loop, timed,
     )
+    from repro.sim import engine_cache_stats, reset_engine_cache
 
     task = build_task("mnist", n_devices=20, n_train=2000)
     kw = dict(
         policies=POLICIES, n_rounds=30, n_trials=3, n_scheduled=10,
-        eval_every=10,
+        eval_every=10, backend=backend,
     )
     _, t_lattice = timed(run_policies, task, **kw)
+    reset_engine_cache()
     _, t_loop = timed(run_policies_loop, task, **kw)
+    cache = engine_cache_stats()
 
     cells = len(POLICIES) * kw["n_trials"]
     payload = {
         "cells": cells,
         "n_rounds": kw["n_rounds"],
         "n_devices": 20,
+        "backend": backend,
         "lattice_seconds": round(t_lattice, 3),
         "loop_seconds": round(t_loop, 3),
         "speedup": round(t_loop / t_lattice, 2),
         "cells_per_sec": round(cells / t_lattice, 3),
         "round_cells_per_sec": round(cells * kw["n_rounds"] / t_lattice, 1),
+        "engine_cache_hits": cache["hits"],
+        "engine_cache_misses": cache["misses"],
     }
     out_path = os.path.join(os.path.dirname(__file__), "..", "BENCH_sim.json")
     with open(os.path.abspath(out_path), "w") as f:
@@ -94,7 +110,16 @@ def _bench_sim():
     return payload
 
 
-def main() -> None:
+def main(argv: list[str] | None = None) -> None:
+    from repro.core import BACKENDS
+
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--backend", default="jnp", choices=BACKENDS,
+        help="aggregation backend for the sim-lattice bench",
+    )
+    args = parser.parse_args(argv)
+
     from benchmarks import (
         fig3_single_device,
         fig4_multi_device,
@@ -107,9 +132,9 @@ def main() -> None:
 
     _run("kernels_microbench", _kernel_micro, lambda d: d)
     _run(
-        "sim_lattice", _bench_sim,
-        lambda d: "cells/s=%.2f speedup=%.1fx" % (
-            d["cells_per_sec"], d["speedup"],
+        "sim_lattice", lambda: _bench_sim(backend=args.backend),
+        lambda d: "cells/s=%.2f speedup=%.1fx backend=%s" % (
+            d["cells_per_sec"], d["speedup"], d["backend"],
         ),
     )
     _run(

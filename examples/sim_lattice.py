@@ -6,18 +6,28 @@ streamed out once — under temporally-correlated Gauss–Markov fading with
 random device dropout (scenarios the per-round ``run_pofl`` loop cannot
 express).
 
-    PYTHONPATH=src python examples/sim_lattice.py
+    PYTHONPATH=src python examples/sim_lattice.py [--backend pallas_fused]
 """
+import argparse
+
 import jax
 import numpy as np
 
-from repro.core.pofl import POFLConfig
+from repro.core.pofl import BACKENDS, POFLConfig
 from repro.data.synthetic import make_classification_dataset
 from repro.models import small
 from repro.sim import LatticeSpec, make_partition, run_lattice
 
 
-def main():
+def main(argv=None):
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--backend", default="jnp", choices=BACKENDS,
+        help="aggregation backend (pallas_fused = fused kernel on TPU, "
+        "its jnp oracle on CPU)",
+    )
+    args = parser.parse_args(argv)
+
     key = jax.random.PRNGKey(0)
     k_train, k_test, k_init = jax.random.split(key, 3)
     x_tr, y_tr = make_classification_dataset("mnist_like", 3000, k_train)
@@ -37,7 +47,7 @@ def main():
     )
     records = run_lattice(
         small.logreg_loss, data, params0, spec,
-        base_cfg=POFLConfig(n_devices=20, n_scheduled=8),
+        base_cfg=POFLConfig(n_devices=20, n_scheduled=8, backend=args.backend),
         eval_fn=eval_fn,
         scenario="dropout",
         scenario_params={"base": "gauss_markov", "corr": 0.9, "p_drop": 0.1},

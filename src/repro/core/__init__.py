@@ -1,25 +1,41 @@
 """PO-FL core: channel model, AirComp signal chain, scheduling, simulator."""
 from repro.core.channel import ChannelConfig, ChannelState
+from repro.core.numerics import EPS, eps_guard, safe_div
 from repro.core.pofl import (
+    BACKENDS,
+    AggregationBackend,
     DeviceData,
     History,
     POFLConfig,
+    aggregation_stage,
+    apply_update_stage,
+    local_gradient_stage,
     make_round_step,
     round_algorithm,
     run_pofl,
+    scheduling_stage,
 )
 from repro.core.scheduling import POLICIES, Schedule, scheduling_probs
 
 __all__ = [
+    "AggregationBackend",
+    "BACKENDS",
     "ChannelConfig",
     "ChannelState",
     "DeviceData",
+    "EPS",
     "History",
     "POFLConfig",
     "POLICIES",
     "Schedule",
+    "aggregation_stage",
+    "apply_update_stage",
+    "eps_guard",
+    "local_gradient_stage",
     "make_round_step",
     "round_algorithm",
     "run_pofl",
+    "safe_div",
     "scheduling_probs",
+    "scheduling_stage",
 ]

@@ -18,6 +18,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.numerics import eps_guard, safe_div
+
 
 class GradStats(NamedTuple):
     """Per-device first/second moments of the local gradient (Sec. II-B)."""
@@ -45,14 +47,14 @@ def global_stats(stats: GradStats, rho: jnp.ndarray, mask: jnp.ndarray):
 
 def normalize(g: jnp.ndarray, m_g: jnp.ndarray, v_g: jnp.ndarray) -> jnp.ndarray:
     """Eq. 5: s_i = (g_i - M_g 1) / sqrt(V_g)."""
-    return (g - m_g) / jnp.sqrt(jnp.maximum(v_g, 1e-30))
+    return (g - m_g) / jnp.sqrt(eps_guard(v_g))
 
 
 def denoise_scalar(
     rho: jnp.ndarray, h_abs: jnp.ndarray, mask: jnp.ndarray, tx_power: float
 ) -> jnp.ndarray:
     """Lemma 1, Eq. 13: a = min_{i∈S} sqrt(P) |h_i| / ρ_i (over the scheduled set)."""
-    ratio = jnp.sqrt(tx_power) * h_abs / jnp.maximum(rho, 1e-30)
+    ratio = safe_div(jnp.sqrt(tx_power) * h_abs, rho)
     return jnp.min(jnp.where(mask > 0, ratio, jnp.inf))
 
 
@@ -73,7 +75,7 @@ def distortion_closed_form(
     noise_power: float,
 ) -> jnp.ndarray:
     """Eq. 15: e_com = D σ_z² V_g / P · max_{i∈S} ρ_i² / |h_i|²."""
-    ratio = jnp.where(mask > 0, (rho / jnp.maximum(h_abs, 1e-30)) ** 2, 0.0)
+    ratio = jnp.where(mask > 0, safe_div(rho, h_abs) ** 2, 0.0)
     return dim * noise_power * v_g / tx_power * jnp.max(ratio)
 
 
@@ -119,9 +121,9 @@ def aircomp_aggregate(
         b = jnp.where(mask > 0, b, jnp.zeros((), b.dtype))
         tx = (mask.astype(h.dtype) * b * h)[:, None] * s.astype(h.dtype)
         y_tilde = jnp.real(jnp.sum(tx, axis=0)) + z  # superposition (Eq. 7)
-        y_hat = jnp.sqrt(jnp.maximum(v_g, 1e-30)) * y_tilde / a + m_g  # Eq. 8
+        y_hat = jnp.sqrt(eps_guard(v_g)) * y_tilde / a + m_g  # Eq. 8
     else:
-        noise = jnp.sqrt(jnp.maximum(v_g, 1e-30)) / a * z
+        noise = jnp.sqrt(eps_guard(v_g)) / a * z
         y_hat = jnp.sum((mask * rho)[:, None] * g, axis=0) + noise  # Eq. 16
 
     e_com = distortion_closed_form(

@@ -1,0 +1,26 @@
+"""Shared numerical-safety helpers for the PO-FL math.
+
+The scheduling/AirComp equations divide by quantities that can underflow to
+exactly zero (|h_i| of a deep fade, renormalized probabilities of an
+all-dropped round, π_i of a never-included device). Every such site guards
+with the same floor so the guarded value — and therefore the seed-pinned
+trajectories — is identical everywhere: ``EPS = 1e-30``, far below any
+physically meaningful channel gain or probability, merely keeping IEEE
+division finite.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# The one epsilon. Changing it changes pinned trajectories — don't.
+EPS = 1e-30
+
+
+def eps_guard(x, eps: float = EPS):
+    """Clamp ``x`` away from zero: ``max(x, eps)`` elementwise."""
+    return jnp.maximum(x, eps)
+
+
+def safe_div(num, den, eps: float = EPS):
+    """``num / max(den, eps)`` — finite even when ``den`` underflows to 0."""
+    return num / jnp.maximum(den, eps)

@@ -10,24 +10,56 @@ devices). Every step of Algorithm 1 is implemented:
   5. devices normalize + transmit concurrently; server denoises (aircomp.py)
   6. w^{t+1} = w^t − η^t ŷ^t
 
-The round body lives in :func:`round_algorithm` so that both the legacy
-per-round jit (:func:`make_round_step`) and the scanned simulation engine
-(``repro.sim.engine``) execute the *same* traced computation. ``run_pofl``
-is a thin compatibility wrapper over the engine (identical trajectories for
-identical seeds — pinned by tests/test_sim.py).
+The round body is an explicit **pipeline of composable stages**
+
+    local_gradient_stage → scheduling_stage → aggregation_stage → apply_update_stage
+
+composed by :func:`round_algorithm` so that the legacy per-round jit
+(:func:`make_round_step`), the scanned simulation engine
+(``repro.sim.engine``) and the lattice all execute the *same* traced
+computation. The transmit/aggregate stage is parameterized by an
+:class:`AggregationBackend`:
+
+  * ``jnp``           — the exact reference path (Eq. 16 / full Eq. 5→8,
+    per ``cfg.simulate_physical``); the default, bit-identical to the seed.
+  * ``pallas_fused``  — the one-HBM-pass fused Eq. 5→8 kernel
+    (``kernels/aircomp``): the Pallas TPU kernel on TPU, its pure-jnp oracle
+    on CPU, interpret mode via ``REPRO_PALLAS_INTERPRET=1`` (parity path).
+    Semantics are the *physical* chain (algebraically equal to
+    ``simulate_physical=True``; differs from Eq. 16 by ``(1−Σρ)·M_g``).
+
+Data may be heterogeneous: :class:`DeviceData` optionally carries per-device
+sample counts ``n_samples`` (shards padded to a common length), and the
+m_i/M weights of Eq. 34/35/37 follow the true fractions. ``run_pofl`` is a
+thin compatibility wrapper over the engine (identical trajectories for
+identical seeds — pinned by tests/test_sim.py) with engine/jit caching
+across calls keyed by (task, cfg-minus-seed, backend).
 """
 from __future__ import annotations
 
 import dataclasses
+import enum
 from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.flatten_util import ravel_pytree
 
 from repro.core import aircomp, scheduling
 from repro.core.channel import ChannelConfig, ChannelState
 from repro.core.metrics import RoundMetrics
+from repro.core.numerics import safe_div
+
+
+class AggregationBackend(str, enum.Enum):
+    """How the transmit/aggregate stage realizes the Eq. 5→8 signal chain."""
+
+    JNP = "jnp"                    # exact reference (Eq. 16 or full Eq. 5→8)
+    PALLAS_FUSED = "pallas_fused"  # fused one-pass kernel (physical semantics)
+
+
+BACKENDS = tuple(b.value for b in AggregationBackend)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,6 +78,7 @@ class POFLConfig:
     lr_decay: float = 0.95
     lr_min: float = 1e-5
     simulate_physical: bool = False  # full Eq.5→8 path vs Eq.16 (same in law)
+    backend: str = "jnp"  # AggregationBackend of the aggregation stage
     seed: int = 0
 
     def lr(self, t: jnp.ndarray) -> jnp.ndarray:
@@ -54,10 +87,19 @@ class POFLConfig:
 
 
 class DeviceData(NamedTuple):
-    """Stacked per-device datasets (equal shard sizes, as in the paper)."""
+    """Stacked per-device datasets.
 
-    features: jnp.ndarray  # (N, m, ...)
-    labels: jnp.ndarray    # (N, m)
+    Equal shards (the paper's setting): ``features`` is ``(N, m, ...)`` and
+    ``n_samples`` is None. Heterogeneous shards (e.g. Dirichlet-sized
+    partitions): every shard is padded to a common ``m_max`` and
+    ``n_samples[i] ≤ m_max`` marks device i's valid prefix — padded rows are
+    never sampled, and the m_i/M fractions in the scheduling/weight math
+    follow the true counts.
+    """
+
+    features: jnp.ndarray  # (N, m_max, ...)
+    labels: jnp.ndarray    # (N, m_max)
+    n_samples: Any = None  # (N,) int valid-prefix lengths, or None (equal)
 
     @property
     def n_devices(self) -> int:
@@ -65,7 +107,17 @@ class DeviceData(NamedTuple):
 
     @property
     def samples_per_device(self) -> int:
+        """Padded (maximum) shard length m_max."""
         return self.features.shape[1]
+
+    @property
+    def data_frac(self) -> jnp.ndarray:
+        """m_i / M — uniform for equal shards, true fractions otherwise."""
+        n = self.features.shape[0]
+        if self.n_samples is None:
+            return jnp.full((n,), 1.0 / n)
+        ns = jnp.asarray(self.n_samples, jnp.float32)
+        return ns / jnp.sum(ns)
 
 
 class History(NamedTuple):
@@ -87,6 +139,143 @@ def _device_gradients(loss_fn, params, feats, labels):
     return jax.vmap(one)(feats, labels)
 
 
+# --------------------------------------------------------------------------
+# the round pipeline stages
+# --------------------------------------------------------------------------
+
+
+def local_gradient_stage(
+    loss_fn: Callable,
+    data: DeviceData,
+    cfg: POFLConfig,
+    params,
+    k_batch: jax.Array,
+) -> jnp.ndarray:
+    """Step 2: per-device mini-batch draw + vmapped grads → (N, D).
+
+    Equal shards keep the seed's exact ``randint`` draw (bit-identical
+    trajectories); heterogeneous shards draw uniformly over each device's
+    valid prefix so padded rows are never touched.
+    """
+    n = data.n_devices
+    m = data.samples_per_device
+    if data.n_samples is None:
+        idx = jax.random.randint(k_batch, (n, cfg.batch_size), 0, m)
+    else:
+        # n_samples is static partition metadata — reject empty devices at
+        # trace time (idx = min(·, -1) would wrap to the last PADDED row)
+        if (np.asarray(data.n_samples) < 1).any():
+            raise ValueError(
+                "every device needs n_samples >= 1; drop empty devices from "
+                "the partition instead"
+            )
+        ns = jnp.asarray(data.n_samples, jnp.int32)
+        u = jax.random.uniform(k_batch, (n, cfg.batch_size))
+        idx = jnp.minimum(
+            (u * ns[:, None].astype(u.dtype)).astype(jnp.int32), ns[:, None] - 1
+        )
+    feats = jnp.take_along_axis(
+        data.features,
+        idx.reshape((n, cfg.batch_size) + (1,) * (data.features.ndim - 2)),
+        axis=1,
+    )
+    labels = jnp.take_along_axis(data.labels, idx, axis=1)
+    return _device_gradients(loss_fn, params, feats, labels)
+
+
+def scheduling_stage(
+    cfg: POFLConfig,
+    stats: aircomp.GradStats,
+    h_abs: jnp.ndarray,
+    data_frac: jnp.ndarray,
+    dim: int,
+    alpha,
+    noise_power,
+    k_sched: jax.Array,
+    avail: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Step 4: p_i^t (Eq. 34/Remark 2) → draw S^t → weights ρ (Eq. 37/HT).
+
+    Returns ``(rho, mask)`` — per-device aggregation weights and the 0/1
+    scheduled indicator. ``avail`` (sim dropout/churn) zeroes unavailable
+    devices' probabilities before the draw.
+    """
+    probs = scheduling.scheduling_probs(
+        cfg.policy, stats.norm, stats.var, h_abs, data_frac, dim,
+        alpha, cfg.tx_power, noise_power,
+    )
+    if avail is not None:
+        masked = probs * avail
+        probs = safe_div(masked, jnp.sum(masked))
+    if cfg.policy == "deterministic":
+        sched = scheduling.sample_without_replacement(k_sched, probs, cfg.n_scheduled)
+        rho = scheduling.deterministic_weights(sched, data_frac)
+        mask = sched.mask
+    elif cfg.sampler == "bernoulli":
+        mask, pi = scheduling.sample_bernoulli(k_sched, probs, cfg.n_scheduled)
+        rho = scheduling.bernoulli_weights(pi, data_frac)
+    else:
+        sched = scheduling.sample_without_replacement(k_sched, probs, cfg.n_scheduled)
+        rho = scheduling.aggregation_weights(sched, probs, data_frac, cfg.n_scheduled)
+        mask = sched.mask
+    return rho, mask
+
+
+def aggregation_stage(
+    cfg: POFLConfig,
+    g: jnp.ndarray,
+    rho: jnp.ndarray,
+    h: jnp.ndarray,
+    mask: jnp.ndarray,
+    k_noise: jax.Array,
+    noise_power,
+    use_pallas: str | bool = "auto",
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Steps 5: transmit + AirComp aggregate per ``cfg.backend`` → (ŷ, e_com).
+
+    ``jnp`` runs the exact reference chain; ``pallas_fused`` collapses the
+    Eq. 5 normalize → Lemma-1 transmit scale → Eq. 7 superpose → Eq. 8
+    denoise/denormalize into one pass over the gradient matrix
+    (``kernels/aircomp``). Under the lattice's cell vmap the fused
+    ``pallas_call`` batches into the trial-batched grid — the
+    ``aircomp_fused_batch`` layout — without host-side dispatch.
+    """
+    backend = AggregationBackend(cfg.backend)
+    if backend is AggregationBackend.JNP:
+        return aircomp.aircomp_aggregate(
+            g, rho, h, mask, k_noise, cfg.tx_power, noise_power,
+            simulate_physical=cfg.simulate_physical,
+        )
+
+    from repro.kernels.aircomp import aircomp_aggregate_fused  # late: kernels↔core
+
+    stats = aircomp.local_stats(g)
+    m_g, v_g = aircomp.global_stats(stats, rho, mask)
+    h_abs = jnp.abs(h)
+    a = aircomp.denoise_scalar(rho, h_abs, mask, cfg.tx_power)
+    dim = g.shape[-1]
+    z = jax.random.normal(k_noise, (dim,)) * jnp.sqrt(noise_power)
+    coeff = mask * rho  # b_i h_i = ρ_i a exactly (Lemma-1 channel inversion)
+    y_hat = aircomp_aggregate_fused(
+        g, coeff, m_g, v_g, a, z, use_pallas=use_pallas
+    )
+    e_com = aircomp.distortion_closed_form(
+        v_g, rho, h_abs, mask, dim, cfg.tx_power, noise_power
+    )
+    return y_hat, e_com
+
+
+def apply_update_stage(cfg: POFLConfig, params, y_hat: jnp.ndarray, t):
+    """Step 6: w^{t+1} = w^t − η^t ŷ^t (flat update, re-raveled)."""
+    flat_params, unravel_p = ravel_pytree(params)
+    return unravel_p(flat_params - cfg.lr(t) * y_hat)
+
+
+# --------------------------------------------------------------------------
+# the composed round
+# --------------------------------------------------------------------------
+
+
 def round_algorithm(
     loss_fn: Callable[[Any, jnp.ndarray, jnp.ndarray], jnp.ndarray],
     data: DeviceData,
@@ -103,11 +292,12 @@ def round_algorithm(
 ) -> tuple[Any, RoundMetrics]:
     """Steps 2–6 of Algorithm 1 for one round, given this round's channel ``h``.
 
-    ``noise_power`` / ``alpha`` default to the (static) config values but may
-    be traced arrays — the simulation lattice vmaps over them. Everything
-    structural (policy, sampler, |S|, batch size) stays static.
+    Composes the four pipeline stages. ``noise_power`` / ``alpha`` default to
+    the (static) config values but may be traced arrays — the simulation
+    lattice vmaps over them. Everything structural (policy, sampler, |S|,
+    batch size, backend) stays static.
 
-    ``avail`` is an optional (N,) 0/1 availability mask (sim dropout
+    ``avail`` is an optional (N,) 0/1 availability mask (sim dropout/churn
     scenarios): unavailable devices get zero scheduling probability this
     round. ``None`` (the default, and the only value the legacy path ever
     passes) skips the masking entirely, keeping the static-scenario
@@ -116,22 +306,13 @@ def round_algorithm(
     noise_power = cfg.noise_power if noise_power is None else noise_power
     alpha = cfg.alpha if alpha is None else alpha
 
-    n = data.n_devices
-    m = data.samples_per_device
-    data_frac = jnp.full((n,), 1.0 / n)  # equal shards: m_i/M = 1/N
+    data_frac = data.data_frac
 
     noise_free = cfg.policy == "noisefree"
     agg_noise_power = 0.0 if noise_free else noise_power
 
     # -- step 2: local mini-batch gradients ---------------------------
-    idx = jax.random.randint(k_batch, (n, cfg.batch_size), 0, m)
-    feats = jnp.take_along_axis(
-        data.features,
-        idx.reshape((n, cfg.batch_size) + (1,) * (data.features.ndim - 2)),
-        axis=1,
-    )
-    labels = jnp.take_along_axis(data.labels, idx, axis=1)
-    g = _device_gradients(loss_fn, params, feats, labels)  # (N, D)
+    g = local_gradient_stage(loss_fn, data, cfg, params, k_batch)  # (N, D)
     dim = g.shape[-1]
 
     # -- step 3: uploaded scalar statistics ---------------------------
@@ -139,34 +320,18 @@ def round_algorithm(
 
     # -- step 4: scheduling -------------------------------------------
     h_abs = jnp.abs(h)
-    probs = scheduling.scheduling_probs(
-        cfg.policy, stats.norm, stats.var, h_abs, data_frac, dim,
-        alpha, cfg.tx_power, noise_power,
+    rho, mask = scheduling_stage(
+        cfg, stats, h_abs, data_frac, dim, alpha, noise_power, k_sched,
+        avail=avail,
     )
-    if avail is not None:
-        masked = probs * avail
-        probs = masked / jnp.maximum(jnp.sum(masked), 1e-30)
-    if cfg.policy == "deterministic":
-        sched = scheduling.sample_without_replacement(k_sched, probs, cfg.n_scheduled)
-        rho = scheduling.deterministic_weights(sched, data_frac)
-        mask = sched.mask
-    elif cfg.sampler == "bernoulli":
-        mask, pi = scheduling.sample_bernoulli(k_sched, probs, cfg.n_scheduled)
-        rho = scheduling.bernoulli_weights(pi, data_frac)
-    else:
-        sched = scheduling.sample_without_replacement(k_sched, probs, cfg.n_scheduled)
-        rho = scheduling.aggregation_weights(sched, probs, data_frac, cfg.n_scheduled)
-        mask = sched.mask
 
     # -- steps 5-6: AirComp aggregation + model update ----------------
-    y_hat, e_com = aircomp.aircomp_aggregate(
-        g, rho, h, mask, k_noise, cfg.tx_power, agg_noise_power,
-        simulate_physical=cfg.simulate_physical,
+    y_hat, e_com = aggregation_stage(
+        cfg, g, rho, h, mask, k_noise, agg_noise_power
     )
     e_var = scheduling.global_update_variance(g, rho, mask, data_frac, cfg.n_scheduled)
 
-    flat_params, unravel_p = ravel_pytree(params)
-    new_params = unravel_p(flat_params - cfg.lr(t) * y_hat)
+    new_params = apply_update_stage(cfg, params, y_hat, t)
 
     a = aircomp.denoise_scalar(rho, h_abs, mask, cfg.tx_power)
     metrics = RoundMetrics(
@@ -211,16 +376,21 @@ def run_pofl(
     """Run Algorithm 1 for ``n_rounds`` and return (params, history).
 
     Compatibility wrapper over ``repro.sim.engine.SimEngine``: the T-round
-    loop is a ``lax.scan`` chunked at the evaluation boundaries, so metrics
-    only sync to host once per eval interval instead of once per round. The
-    trajectory is identical (same PRNG key discipline, same round body) to
-    the historical per-round Python loop — see tests/test_sim.py.
-    """
-    from repro.sim.engine import SimEngine  # late import: sim builds on core
+    loop is a single-static-length active-mask ``lax.scan`` chunked at the
+    evaluation boundaries, so metrics only sync to host once per eval
+    interval instead of once per round. The trajectory is identical (same
+    PRNG key discipline, same round body) to the historical per-round Python
+    loop — see tests/test_sim.py.
 
-    engine = SimEngine(
-        loss_fn=loss_fn, data=data, cfg=cfg, channel_cfg=channel_cfg
-    )
+    Engines (and their jitted scans) are cached across calls keyed by
+    ``(task, cfg-minus-seed, backend)`` — a repeat call with the same config
+    (any seed) reuses the compiled program with zero new traces
+    (``repro.sim.engine.engine_cache_stats``).
+    """
+    from repro.sim.engine import cached_engine  # late import: sim builds on core
+
+    engine = cached_engine(loss_fn, data, cfg, channel_cfg=channel_cfg)
     return engine.run_with_history(
-        params0, n_rounds, eval_fn=eval_fn, eval_every=eval_every
+        params0, n_rounds, eval_fn=eval_fn, eval_every=eval_every,
+        seed=cfg.seed,
     )

@@ -18,6 +18,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.numerics import EPS, eps_guard, safe_div
+
 POLICIES = ("pofl", "importance", "channel", "noisefree", "deterministic")
 
 
@@ -46,7 +48,7 @@ def pofl_q(
         * dim
         * noise_power
         * data_frac**2
-        / (tx_power * jnp.maximum(h_abs, 1e-30) ** 2)
+        / (tx_power * eps_guard(h_abs) ** 2)
     )
     var_term = (1.0 + 1.0 / alpha) * data_frac**2 * grad_norms**2
     return jnp.sqrt(com_term + var_term)
@@ -76,7 +78,7 @@ def scheduling_probs(
         q = jnp.ones_like(h_abs)
     else:  # pragma: no cover - guarded by POLICIES
         raise ValueError(f"unknown policy {policy!r}")
-    q = jnp.maximum(q, 1e-30)
+    q = eps_guard(q)
     return q / jnp.sum(q)
 
 
@@ -115,11 +117,11 @@ def sample_without_replacement(
         mask, cum_p = carry
         selectable = ((1.0 - mask) > 0) & (probs > 0)
         any_live = jnp.sum(jnp.where(selectable, probs, 0.0)) > 0
-        q = jnp.where(selectable, probs, 0.0) / jnp.maximum(1.0 - cum_p, 1e-30)
+        q = safe_div(jnp.where(selectable, probs, 0.0), 1.0 - cum_p)
         # Gumbel-max draw over the renormalized distribution (scale-invariant,
         # so the shared denominator does not change the draw — but q_k does
         # enter the aggregation weights).
-        logits = jnp.where(selectable, jnp.log(jnp.maximum(probs, 1e-30)), -jnp.inf)
+        logits = jnp.where(selectable, jnp.log(eps_guard(probs)), -jnp.inf)
         drawn = jax.random.categorical(k_key, logits)  # garbage if ~any_live
         safe = jnp.maximum(drawn, 0)
         idx = jnp.where(any_live, drawn, -1)
@@ -149,7 +151,11 @@ def aggregation_weights(
     """
     del probs, n_scheduled
     n = data_frac.shape[0]
-    w_k = data_frac[schedule.indices] / jnp.maximum(schedule.step_probs, 1e-30)
+    w_k = safe_div(data_frac[schedule.indices], schedule.step_probs)
+    # Explicitly zero the sentinel draws: with heterogeneous data_frac the
+    # gathered data_frac[-1] can itself be anything, and an all-dropped round
+    # (every index -1) must scatter exactly zero weight everywhere.
+    w_k = jnp.where(schedule.indices >= 0, w_k, 0.0)
     n_drawn = jnp.sum((schedule.indices >= 0).astype(w_k.dtype))
     w_k = w_k / jnp.maximum(n_drawn, 1.0)
     return jnp.zeros(n).at[schedule.indices].add(w_k)
@@ -176,10 +182,10 @@ def bernoulli_inclusion_probs(probs: jnp.ndarray, n_scheduled: int) -> jnp.ndarr
     # devices under sim dropout) stay at π=0 for any c and must not blow the
     # bisection bracket up to 1/1e-30.
     min_pos = jnp.min(jnp.where(probs > 0, probs, jnp.inf))
-    hi0 = jnp.asarray(n / jnp.maximum(min_pos, 1e-30))
+    hi0 = jnp.asarray(safe_div(n, min_pos))
     lo, hi = jax.lax.fori_loop(0, 50, body, (jnp.zeros(()), hi0))
     c = 0.5 * (lo + hi)
-    return jnp.clip(c * probs, 1e-30, 1.0)
+    return jnp.clip(c * probs, EPS, 1.0)
 
 
 def sample_bernoulli(
@@ -201,13 +207,17 @@ def sample_bernoulli(
 
 def bernoulli_weights(pi: jnp.ndarray, data_frac: jnp.ndarray) -> jnp.ndarray:
     """Horvitz–Thompson weights ρ_i = m_i/(M π_i) (applied with the mask)."""
-    return data_frac / jnp.maximum(pi, 1e-30)
+    return safe_div(data_frac, pi)
 
 
 def deterministic_weights(schedule: Schedule, data_frac: jnp.ndarray) -> jnp.ndarray:
-    """Baseline direct aggregation: m_i / Σ_{j∈S} m_j on the selected set (biased)."""
+    """Baseline direct aggregation: m_i / Σ_{j∈S} m_j on the selected set (biased).
+
+    An all-dropped round (empty mask) yields all-zero weights — the eps floor
+    keeps the 0/0 finite for any data_frac, uniform or not.
+    """
     sel = schedule.mask * data_frac
-    return sel / jnp.maximum(jnp.sum(sel), 1e-30)
+    return safe_div(sel, jnp.sum(sel))
 
 
 def global_update_variance(

@@ -1,14 +1,18 @@
 from repro.data.partition import (
+    dirichlet_sizes,
     partition_dirichlet,
+    partition_dirichlet_sized,
     partition_iid,
     partition_noniid_shards,
 )
 from repro.data.synthetic import make_classification_dataset, make_token_dataset
 
 __all__ = [
+    "dirichlet_sizes",
     "make_classification_dataset",
     "make_token_dataset",
     "partition_dirichlet",
+    "partition_dirichlet_sized",
     "partition_iid",
     "partition_noniid_shards",
 ]

@@ -9,6 +9,12 @@ Sort-by-label sharding: sort the M training samples by label, split into
 ``partition_dirichlet`` adds the Dirichlet(β) label-skew partition standard
 in the FL literature (Hsu et al. 2019), equalized to stacked per-device
 shards so it plugs into the same ``DeviceData`` interface.
+
+``partition_dirichlet_sized`` instead skews the *shard sizes*: m_i ~
+Dir(β)·M (unequal data volumes, the regime the Eq. 34/35/37 m_i/M weights
+are written for). Shards are padded to a common length and the true counts
+ride in ``DeviceData.n_samples`` — padded rows are never sampled by the
+round pipeline.
 """
 from __future__ import annotations
 
@@ -109,3 +115,72 @@ def partition_dirichlet(
 
     per_dev_idx = np.stack(per_dev_idx)
     return DeviceData(features=features[per_dev_idx], labels=labels[per_dev_idx])
+
+
+def dirichlet_sizes(
+    m_total: int,
+    n_devices: int,
+    beta: float = 0.5,
+    min_per_device: int = 1,
+    seed: int = 0,
+) -> np.ndarray:
+    """Draw unequal shard sizes m_i ~ Dir(β·1_N)·M with Σm_i = M.
+
+    Largest-remainder apportionment of the M slots to the Dirichlet
+    proportions, then a repair pass lifting devices below ``min_per_device``
+    by taking from the largest shards. β→0 concentrates the data on few
+    devices; β→∞ recovers equal shards.
+    """
+    if n_devices * min_per_device > m_total:
+        raise ValueError(
+            f"cannot give {n_devices} devices ≥{min_per_device} of {m_total} samples"
+        )
+    rng = np.random.default_rng(seed)
+    props = rng.dirichlet(np.full(n_devices, beta))
+    raw = props * m_total
+    sizes = np.floor(raw).astype(int)
+    short = m_total - sizes.sum()
+    sizes[np.argsort(raw - sizes)[::-1][:short]] += 1
+    while (sizes < min_per_device).any():
+        sizes[np.argmax(sizes)] -= 1
+        sizes[np.argmin(sizes)] += 1
+    return sizes
+
+
+def partition_dirichlet_sized(
+    features,
+    labels,
+    n_devices: int,
+    beta: float = 0.5,
+    min_per_device: int = 1,
+    seed: int = 0,
+) -> DeviceData:
+    """Dirichlet(β) *shard-size* partition: unequal m_i, random content.
+
+    Sizes come from :func:`dirichlet_sizes`; samples are assigned by a global
+    random permutation (IID content — compose with label skew by shuffling
+    labels upstream if both are wanted). Shards are padded to m_max by
+    wrapping each device's own valid samples, and the true counts are
+    recorded in ``DeviceData.n_samples`` — the round pipeline only ever
+    samples indices below n_samples[i], so padding content is inert.
+    """
+    features = np.asarray(features)
+    labels = np.asarray(labels)
+    m_total = labels.shape[0]
+    sizes = dirichlet_sizes(
+        m_total, n_devices, beta=beta, min_per_device=min_per_device, seed=seed
+    )
+    rng = np.random.default_rng(seed + 1)
+    perm = rng.permutation(m_total)
+
+    m_max = int(sizes.max())
+    bounds = np.concatenate([[0], np.cumsum(sizes)])
+    idx_pad = np.stack([
+        np.resize(perm[bounds[d] : bounds[d + 1]], m_max)  # wrap-pad
+        for d in range(n_devices)
+    ])
+    return DeviceData(
+        features=features[idx_pad],
+        labels=labels[idx_pad],
+        n_samples=sizes.astype(np.int32),
+    )

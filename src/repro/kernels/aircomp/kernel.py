@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.numerics import eps_guard
+
 DEFAULT_TILE_D = 512
 
 
@@ -41,7 +43,7 @@ def _aircomp_kernel(scalars_ref, coeff_ref, g_ref, z_ref, out_ref):
     z = z_ref[...].astype(jnp.float32)          # (1, T)
     coeff = coeff_ref[...].astype(jnp.float32)  # (N, 1)
 
-    sqrt_vg = jax.lax.sqrt(jnp.maximum(v_g, 1e-30))
+    sqrt_vg = jax.lax.sqrt(eps_guard(v_g))
     acc = jnp.sum(coeff * g, axis=0, keepdims=True)  # (1, T)
     out_ref[...] = (acc - w * m_g + (sqrt_vg / a) * z + m_g).astype(out_ref.dtype)
 
@@ -57,7 +59,7 @@ def _aircomp_batch_kernel(scalars_ref, coeff_ref, g_ref, z_ref, out_ref):
     z = z_ref[0].astype(jnp.float32)            # (1, T)
     coeff = coeff_ref[0].astype(jnp.float32)    # (N, 1)
 
-    sqrt_vg = jax.lax.sqrt(jnp.maximum(v_g, 1e-30))
+    sqrt_vg = jax.lax.sqrt(eps_guard(v_g))
     acc = jnp.sum(coeff * g, axis=0, keepdims=True)  # (1, T)
     out_ref[0] = (acc - w * m_g + (sqrt_vg / a) * z + m_g).astype(out_ref.dtype)
 

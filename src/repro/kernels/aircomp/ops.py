@@ -1,7 +1,18 @@
 """Public op: fused AirComp aggregation with automatic backend dispatch.
 
-``use_pallas='auto'`` runs the Pallas kernel on TPU, the pure-jnp reference
-on CPU (interpret-mode execution is for tests, not production CPU use).
+``use_pallas`` values:
+
+  * ``'auto'``      — the Pallas kernel on TPU, the pure-jnp reference on
+    CPU; setting the ``REPRO_PALLAS_INTERPRET=1`` env var forces interpret
+    mode instead (the CPU parity path for the engine's ``pallas_fused``
+    aggregation backend). The var is read at TRACE time: set it before
+    building engines/jits — already-compiled traces keep their mode
+    (``sim.engine.cached_engine`` keys on it, so cached engines are safe;
+    hand-built ``SimEngine``/lattice jits are not).
+  * ``True``        — the Pallas kernel (compiled).
+  * ``'interpret'`` — the Pallas kernel in interpret mode (runs anywhere;
+    slow — tests/parity only).
+  * ``False``       — the pure-jnp reference.
 
 Two entry points: :func:`aircomp_aggregate_fused` for a single round and
 :func:`aircomp_aggregate_fused_batch` for a trial-batched lattice round
@@ -9,6 +20,8 @@ Two entry points: :func:`aircomp_aggregate_fused` for a single round and
 vmapped lattice produces per policy).
 """
 from __future__ import annotations
+
+import os
 
 import jax
 
@@ -24,13 +37,23 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _resolve(use_pallas: str | bool) -> str | bool:
+    """Normalize a ``use_pallas`` argument to True / False / 'interpret'."""
+    if use_pallas == "auto":
+        if os.environ.get("REPRO_PALLAS_INTERPRET"):
+            return "interpret"
+        return _on_tpu()
+    return use_pallas
+
+
 def aircomp_aggregate_fused(
     g, coeff, m_g, v_g, a, z, *, use_pallas: str | bool = "auto", tile_d: int = DEFAULT_TILE_D
 ):
     """Fused Eq. 5→8: ŷ = Σ_i coeff_i·(g_i − M_g) + sqrt(V_g)/a·z + M_g."""
-    if use_pallas == "auto":
-        use_pallas = _on_tpu()
-    if use_pallas:
+    mode = _resolve(use_pallas)
+    if mode == "interpret":
+        return aircomp_fused(g, coeff, m_g, v_g, a, z, tile_d=tile_d, interpret=True)
+    if mode:
         return aircomp_fused(g, coeff, m_g, v_g, a, z, tile_d=tile_d)
     return aircomp_fused_ref(g, coeff, m_g, v_g, a, z)
 
@@ -39,9 +62,10 @@ def aircomp_aggregate_fused_batch(
     g, coeff, m_g, v_g, a, z, *, use_pallas: str | bool = "auto", tile_d: int = DEFAULT_TILE_D
 ):
     """Trial-batched fused Eq. 5→8 over (n_trials, n_devices, D) gradients."""
-    if use_pallas == "auto":
-        use_pallas = _on_tpu()
-    if use_pallas:
+    mode = _resolve(use_pallas)
+    if mode == "interpret":
+        return aircomp_fused_batch(g, coeff, m_g, v_g, a, z, tile_d=tile_d, interpret=True)
+    if mode:
         return aircomp_fused_batch(g, coeff, m_g, v_g, a, z, tile_d=tile_d)
     return aircomp_fused_batch_ref(g, coeff, m_g, v_g, a, z)
 

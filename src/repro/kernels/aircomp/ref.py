@@ -16,6 +16,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.numerics import eps_guard
+
 
 def aircomp_fused_batch_ref(g, coeff, m_g, v_g, a, z):
     """Trial-batched oracle: leading (n_trials,) axis on every argument.
@@ -33,8 +35,13 @@ def aircomp_fused_ref(g, coeff, m_g, v_g, a, z):
       m_g, v_g, a: scalars  (global mean/variance, denoise scalar)
       z:     (D,)           receiver noise ~ N(0, σ_z²)
     Returns ŷ: (D,)
+
+    ``a`` is cancelled algebraically in the signal term — exactly as the
+    Pallas kernel does — so an empty scheduled set (a=inf from the min over
+    nothing, coeff all zero) stays finite: the naive a·s → (…)/a composition
+    would produce 0·inf = NaN there.
     """
-    sqrt_vg = jnp.sqrt(jnp.maximum(v_g, 1e-30))
-    s = (g - m_g) / sqrt_vg                      # Eq. 5
-    y_tilde = jnp.sum(coeff[:, None] * a * s, axis=0) + z  # Eq. 7
-    return sqrt_vg / a * y_tilde + m_g           # Eq. 8
+    sqrt_vg = jnp.sqrt(eps_guard(v_g))
+    acc = jnp.sum(coeff[:, None] * g, axis=0)    # Eq. 7 signal, a cancelled
+    w = jnp.sum(coeff)
+    return acc - w * m_g + sqrt_vg / a * z + m_g  # Eq. 8

@@ -11,7 +11,13 @@ Three layers (see ROADMAP.md "sim" section):
     (policies × noise_powers × alphas × seeds [× n_devices]) compiled into
     one vmapped+scanned program per (policy, shape) group.
 """
-from repro.sim.engine import SimEngine, SimState
+from repro.sim.engine import (
+    SimEngine,
+    SimState,
+    cached_engine,
+    engine_cache_stats,
+    reset_engine_cache,
+)
 from repro.sim.lattice import LatticeRecords, LatticeSpec, run_lattice
 from repro.sim.scenario import (
     CHANNEL_SCENARIOS,
@@ -27,7 +33,10 @@ __all__ = [
     "PARTITIONS",
     "SimEngine",
     "SimState",
+    "cached_engine",
+    "engine_cache_stats",
     "make_channel_process",
     "make_partition",
+    "reset_engine_cache",
     "run_lattice",
 ]

@@ -23,11 +23,23 @@ Three entry points:
     ``repro.sim.lattice`` vmaps this across cells. ``noise_power``/``alpha``
     may be traced (lattice axes); anything structural is static.
   * :meth:`SimEngine.run_with_history` — the ``run_pofl``-compatible driver:
-    scan in chunks between eval rounds, evaluate with an arbitrary Python
-    ``eval_fn`` on the host, return ``(params, History)``.
+    a single-STATIC-length active-mask scan per segment between eval rounds
+    (inactive tail rounds are ``lax.cond`` no-ops that touch neither the
+    PRNG chain nor the carry), evaluate with an arbitrary Python ``eval_fn``
+    on the host, return ``(params, History)``. One trace per (engine,
+    segment length) — not per distinct chunk length.
+
+Engines themselves are cached across ``run_pofl`` calls by
+:func:`cached_engine`, keyed by (task identity, cfg-minus-seed — which
+includes the aggregation backend — channel config, scenario): a repeat call
+with the same config reuses both the engine object and every jit trace it
+has accumulated (:func:`engine_cache_stats` exposes hit/miss counters).
 """
 from __future__ import annotations
 
+import dataclasses
+import os
+from collections import OrderedDict
 from typing import Any, Callable, NamedTuple
 
 import jax
@@ -58,6 +70,10 @@ class RoundRecord(NamedTuple):
     acc: jnp.ndarray          # eval accuracy (0 where not evaluated)
 
 
+def _zero_record() -> RoundRecord:
+    return RoundRecord(*(jnp.zeros((), jnp.float32) for _ in RoundRecord._fields))
+
+
 def _default_channel_cfg(cfg: POFLConfig) -> ChannelConfig:
     return ChannelConfig(
         n_devices=cfg.n_devices,
@@ -71,8 +87,10 @@ class SimEngine:
 
     Args:
       loss_fn: per-device loss ``f(params, x, y)`` (jax-traceable).
-      data:    stacked per-device :class:`DeviceData`.
-      cfg:     :class:`POFLConfig` (policy/sampler/|S|/batch are static).
+      data:    stacked per-device :class:`DeviceData` (equal shards or
+        padded heterogeneous shards with ``n_samples``).
+      cfg:     :class:`POFLConfig` (policy/sampler/|S|/batch/backend are
+        static).
       channel_cfg: physical-layer constants; defaults to the config the
         historical ``run_pofl`` built from ``cfg``.
       scenario: channel-process name from ``sim.scenario.CHANNEL_SCENARIOS``.
@@ -81,6 +99,10 @@ class SimEngine:
         inside the scan on rounds flagged by ``do_eval`` (used by the
         lattice; ``run_with_history`` instead takes an arbitrary Python
         callable and evaluates between chunks).
+
+    ``n_traces`` counts how many times the chunked scan has been (re)traced —
+    the CI retrace guard asserts it stays flat across repeat ``run_pofl``
+    calls with the same config.
     """
 
     def __init__(
@@ -101,6 +123,7 @@ class SimEngine:
             scenario, self.channel_cfg, **(scenario_params or {})
         )
         self.eval_fn = eval_fn
+        self.n_traces = 0  # chunk-scan trace counter (see class docstring)
         # Donating the carry on CPU only triggers "donation not implemented"
         # warnings; donate on accelerators where it buys in-place reuse.
         donate = (0,) if jax.default_backend() != "cpu" else ()
@@ -127,12 +150,20 @@ class SimEngine:
         do_eval: jnp.ndarray,      # (T,) bool — run eval_fn this round
         noise_power=None,          # traced scalar or None → cfg.noise_power
         alpha=None,                # traced scalar or None → cfg.alpha
+        active: jnp.ndarray | None = None,  # (T,) bool — mask padded rounds
     ) -> tuple[SimState, RoundRecord]:
         """Pure scan over rounds; vmap-safe (xs stay unbatched, so the eval
-        ``lax.cond`` remains a genuine branch, not a select)."""
+        ``lax.cond`` remains a genuine branch, not a select).
 
-        def body(st: SimState, x):
-            t_int, ev = x
+        ``active=None`` (the lattice path) scans every round unconditionally.
+        With an ``active`` mask (the ``run_with_history`` static-length
+        path), inactive rounds are genuine ``lax.cond`` no-ops: the carry —
+        params, PRNG chain, channel state — passes through untouched, so a
+        padded scan of the same active prefix is bit-identical to an unpadded
+        one.
+        """
+
+        def round_body(st: SimState, t_int, ev):
             t = t_int.astype(jnp.float32)
             key, k_round = jax.random.split(st.key)
             k_batch, k_chan, k_sched, k_noise = jax.random.split(k_round, 4)
@@ -162,12 +193,36 @@ class SimEngine:
             )
             return SimState(params=params, key=key, chan=chan), rec
 
-        return jax.lax.scan(body, state, (t_ints, do_eval))
+        if active is None:
 
-    def _chunk(self, state: SimState, t0, n_steps: int):
-        t_ints = t0 + jnp.arange(n_steps, dtype=jnp.int32)
+            def body(st, x):
+                t_int, ev = x
+                return round_body(st, t_int, ev)
+
+            xs: tuple = (t_ints, do_eval)
+        else:
+
+            def body(st, x):
+                t_int, ev, act = x
+                return jax.lax.cond(
+                    act,
+                    lambda s: round_body(s, t_int, ev),
+                    lambda s: (s, _zero_record()),
+                    st,
+                )
+
+            xs = (t_ints, do_eval, active)
+
+        return jax.lax.scan(body, state, xs)
+
+    def _chunk(self, state: SimState, t0, n_active, n_steps: int):
+        self.n_traces += 1  # Python body runs only when (re)tracing
+        steps = jnp.arange(n_steps, dtype=jnp.int32)
+        t_ints = t0 + steps
         do_eval = jnp.zeros((n_steps,), bool)
-        return self.scan_rounds(state, t_ints, do_eval)
+        return self.scan_rounds(
+            state, t_ints, do_eval, active=steps < n_active
+        )
 
     # -- run_pofl-compatible driver -----------------------------------------
 
@@ -177,25 +232,26 @@ class SimEngine:
         n_rounds: int,
         eval_fn: Callable | None = None,
         eval_every: int = 5,
+        seed: int | None = None,
     ) -> tuple[Any, History]:
         """Chunked scan with host-side eval between chunks → (params, History).
 
         ``eval_fn`` may be any Python callable (it never enters the trace);
         metrics sync to host once per chunk instead of once per round.
+        ``seed`` defaults to ``cfg.seed`` (cached engines are shared across
+        seeds, so ``run_pofl`` passes the current call's seed explicitly).
 
-        Compile-cost note: distinct chunk lengths (up to three — the t=0
-        eval chunk, the ``eval_every`` body, and the tail) each trace the
-        scan once, so a cold single call pays ~3 scan compiles where the
-        historical per-round loop paid one round-body compile; the scan wins
-        at larger ``n_rounds`` (no per-round dispatch/sync) and sweeps
-        should use ``sim.lattice`` (one compile per policy for ALL cells).
-        Engine-level jit caching across ``run_pofl`` calls is a ROADMAP
-        item.
+        Compile-cost note: every segment between eval boundaries runs as ONE
+        static-length scan (length = the longest segment) with an active-mask
+        prefix, so a cold call traces the scan exactly once — and repeat
+        calls through :func:`cached_engine` trace zero times. Sweeps should
+        still use ``sim.lattice`` (one compile per policy for ALL cells).
         """
         params0 = jax.tree.map(jnp.asarray, params0)
         if self._donating:
             params0 = jax.tree.map(lambda x: jnp.array(x, copy=True), params0)
-        state = self.init(params0, self.cfg.seed)
+        seed = self.cfg.seed if seed is None else seed
+        state = self.init(params0, seed)
 
         hist = History(loss=[], e_com=[], e_var=[], test_acc=[], test_round=[])
         if eval_fn is None:
@@ -206,16 +262,122 @@ class SimEngine:
                 | ({n_rounds - 1} if n_rounds else set())
             )
 
+        # segment boundaries: one host sync after each eval round + the tail
+        segments: list[tuple[int, int]] = []  # (t0, n_active)
         t = 0
         for stop in [et + 1 for et in eval_ts] + [n_rounds]:
             if stop > t:
-                state, recs = self._chunk_jit(state, t, n_steps=stop - t)
-                hist.e_com.extend(np.asarray(recs.e_com).tolist())
-                hist.e_var.extend(np.asarray(recs.e_var).tolist())
+                segments.append((t, stop - t))
                 t = stop
+        n_steps = max((n for _, n in segments), default=0)
+
+        t = 0
+        for t0, n_active in segments:
+            state, recs = self._chunk_jit(
+                state,
+                jnp.asarray(t0, jnp.int32),
+                jnp.asarray(n_active, jnp.int32),
+                n_steps=n_steps,
+            )
+            hist.e_com.extend(np.asarray(recs.e_com)[:n_active].tolist())
+            hist.e_var.extend(np.asarray(recs.e_var)[:n_active].tolist())
+            t = t0 + n_active
             if eval_fn is not None and t - 1 in eval_ts and t - 1 not in hist.test_round:
                 loss, acc = eval_fn(state.params)
                 hist.loss.append(float(loss))
                 hist.test_acc.append(float(acc))
                 hist.test_round.append(t - 1)
         return state.params, hist
+
+
+# --------------------------------------------------------------------------
+# cross-call engine cache
+# --------------------------------------------------------------------------
+
+_ENGINE_CACHE: OrderedDict[tuple, SimEngine] = OrderedDict()
+_ENGINE_CACHE_MAX = 64
+_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def _data_key(data: DeviceData) -> tuple:
+    """Identity key for a stacked dataset (object identity + shape guard)."""
+    ns = data.n_samples
+    return (
+        id(data.features),
+        id(data.labels),
+        None if ns is None else id(ns),
+        tuple(np.shape(data.features)),
+        tuple(np.shape(data.labels)),
+    )
+
+
+def _freeze(obj):
+    """Recursively hashable view of a scenario-params value: dicts become
+    sorted item tuples, lists/tuples become tuples, arrays (numpy or jax)
+    become (tag, dtype, shape, values) tuples — so any params SimEngine
+    accepts also key the cache instead of raising TypeError."""
+    if isinstance(obj, dict):
+        return tuple(sorted((k, _freeze(v)) for k, v in obj.items()))
+    if isinstance(obj, (list, tuple)):
+        return tuple(_freeze(v) for v in obj)
+    if isinstance(obj, (np.ndarray, np.generic, jax.Array)):
+        arr = np.asarray(obj)
+        return ("arr", str(arr.dtype), arr.shape, tuple(arr.ravel().tolist()))
+    return obj
+
+
+def cached_engine(
+    loss_fn: Callable,
+    data: DeviceData,
+    cfg: POFLConfig,
+    channel_cfg: ChannelConfig | None = None,
+    scenario: str = "static_rayleigh",
+    scenario_params: dict | None = None,
+) -> SimEngine:
+    """Return a (possibly shared) :class:`SimEngine` for this task + config.
+
+    The key is ``(loss_fn, data identity, cfg with seed zeroed — including
+    the aggregation backend — channel_cfg, scenario)``: calls that differ
+    only by seed share one engine and therefore every jit trace it has
+    already paid for. The cache is a bounded LRU (evicts least recently
+    used); entries pin their ``data`` arrays alive, which is the point —
+    eviction releases them.
+    """
+    key = (
+        loss_fn,
+        _data_key(data),
+        dataclasses.replace(cfg, seed=0),
+        channel_cfg,
+        scenario,
+        _freeze(scenario_params),
+        # the fused backend's dispatch reads this env var at trace time, so
+        # toggling it must not replay a stale trace (parity tests flip it)
+        os.environ.get("REPRO_PALLAS_INTERPRET", ""),
+    )
+    engine = _ENGINE_CACHE.get(key)
+    if engine is not None:
+        _CACHE_STATS["hits"] += 1
+        _ENGINE_CACHE.move_to_end(key)
+        return engine
+    _CACHE_STATS["misses"] += 1
+    engine = SimEngine(
+        loss_fn, data, cfg,
+        channel_cfg=channel_cfg,
+        scenario=scenario,
+        scenario_params=scenario_params,
+    )
+    _ENGINE_CACHE[key] = engine
+    while len(_ENGINE_CACHE) > _ENGINE_CACHE_MAX:
+        _ENGINE_CACHE.popitem(last=False)
+    return engine
+
+
+def engine_cache_stats() -> dict:
+    """Snapshot of the cross-call engine cache: hits/misses/size."""
+    return {**_CACHE_STATS, "size": len(_ENGINE_CACHE)}
+
+
+def reset_engine_cache() -> None:
+    """Drop every cached engine and zero the hit/miss counters."""
+    _ENGINE_CACHE.clear()
+    _CACHE_STATS.update(hits=0, misses=0)

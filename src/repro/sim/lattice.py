@@ -109,7 +109,11 @@ def run_lattice(
         scan every ``spec.eval_every`` rounds (and on the last round).
       base_cfg: defaults for everything the spec doesn't sweep; its
         ``policy``/``noise_power``/``alpha``/``seed`` fields are overridden
-        per cell.
+        per cell. ``base_cfg.backend`` selects the aggregation backend for
+        every cell (under the cell vmap the ``pallas_fused`` kernel batches
+        into the trial-batched grid), and ``data`` may carry heterogeneous
+        shards (``DeviceData.n_samples``) — the Eq. 34/35/37 weights follow
+        the true m_i/M in every cell.
     """
     base_cfg = base_cfg or POFLConfig(n_devices=data.n_devices)
 

@@ -38,6 +38,15 @@ Registered channel scenarios (``make_channel_process(name, cfg, **params)``):
     always-reachable assumption, not a meaningful policy comparison.
     Control-channel stats are still assumed known (idealization).
     Parameters: ``p_drop``, ``base`` (+ base-scenario params).
+  * ``churn``           — arrival/departure population churn: availability
+    is a per-device two-state Markov chain (present devices depart with
+    prob ``p_depart``, absent ones (re)arrive with prob ``p_arrive``), so
+    the online population *trends* over rounds — multi-round outages and
+    re-joins — instead of flickering i.i.d. like ``dropout``. Stationary
+    availability ``p_arrive/(p_arrive+p_depart)``; expected sojourns
+    ``1/p_depart`` rounds online, ``1/p_arrive`` offline. Layered on any
+    base scenario. Parameters: ``p_depart``, ``p_arrive``, ``init_online``
+    (initial P(online); default = stationary), ``base`` (+ base params).
 
 Data-heterogeneity presets (``make_partition(name, x, y, n_devices, ...)``):
 
@@ -46,6 +55,10 @@ Data-heterogeneity presets (``make_partition(name, x, y, n_devices, ...)``):
     (``partition_noniid_shards``; ``shards_per_device`` ≈ classes/device).
   * ``dirichlet`` — Dirichlet(β) label-proportion skew per device
     (``partition_dirichlet``; small β → near-single-class devices).
+  * ``dirichlet_sized`` — Dirichlet(β) *shard-size* skew: unequal m_i drawn
+    from Dir(β)·M, padded to a common length with ``DeviceData.n_samples``
+    marking the valid prefixes (``partition_dirichlet_sized``) — the
+    unbalanced-data regime of the Eq. 34/35/37 m_i/M weights.
 """
 from __future__ import annotations
 
@@ -63,6 +76,7 @@ from repro.core.channel import (
 )
 from repro.data.partition import (
     partition_dirichlet,
+    partition_dirichlet_sized,
     partition_iid,
     partition_noniid_shards,
 )
@@ -170,7 +184,56 @@ class Dropout:
         return state, h, avail * up
 
 
-CHANNEL_SCENARIOS = ("static_rayleigh", "gauss_markov", "mobility", "dropout")
+@dataclasses.dataclass(frozen=True)
+class Churn:
+    """Arrival/departure population churn on top of a base channel process.
+
+    Availability is a sticky per-device two-state Markov chain carried in the
+    scan state: an online device goes offline (departs) with probability
+    ``p_depart`` each round, an offline one (re)arrives with probability
+    ``p_arrive`` — so availability *trends* (multi-round outages, gradual
+    population drift) rather than flickering i.i.d. per round like
+    :class:`Dropout`. The stationary online fraction is
+    ``p_arrive / (p_arrive + p_depart)`` and the lag-1 autocorrelation of the
+    availability indicator is ``1 - p_arrive - p_depart`` (checked by
+    tests/test_sim.py). The base channel process keeps evolving underneath —
+    a device that departs re-joins on its same fading trajectory.
+    """
+
+    cfg: ChannelConfig
+    base: Any  # any channel process
+    p_depart: float = 0.05
+    p_arrive: float = 0.2
+    init_online: float | None = None  # initial P(online); default stationary
+    can_drop = True
+
+    @property
+    def _p0(self) -> float:
+        if self.init_online is not None:
+            return self.init_online
+        return self.p_arrive / max(self.p_arrive + self.p_depart, 1e-12)
+
+    def init(self, key: jax.Array):
+        k_base, k_online = jax.random.split(key)
+        online0 = jax.random.bernoulli(
+            k_online, self._p0, (self.cfg.n_devices,)
+        ).astype(jnp.float32)
+        return (self.base.init(k_base), online0)
+
+    def step(self, state, key: jax.Array):
+        base_state, online = state
+        k_base, k_flip = jax.random.split(key)
+        base_state, h, base_avail = self.base.step(base_state, k_base)
+        u = jax.random.uniform(k_flip, online.shape)
+        stay = online * (u >= self.p_depart).astype(jnp.float32)
+        arrive = (1.0 - online) * (u < self.p_arrive).astype(jnp.float32)
+        online = stay + arrive
+        return (base_state, online), h, base_avail * online
+
+
+CHANNEL_SCENARIOS = (
+    "static_rayleigh", "gauss_markov", "mobility", "dropout", "churn",
+)
 
 
 def make_channel_process(name: str, cfg: ChannelConfig, **params):
@@ -191,6 +254,15 @@ def make_channel_process(name: str, cfg: ChannelConfig, **params):
         p_drop = params.pop("p_drop", 0.1)
         base = make_channel_process(base_name, cfg, **params)
         return Dropout(base=base, p_drop=p_drop)
+    if name == "churn":
+        base_name = params.pop("base", "static_rayleigh")
+        churn_kw = {
+            k: params.pop(k)
+            for k in ("p_depart", "p_arrive", "init_online")
+            if k in params
+        }
+        base = make_channel_process(base_name, cfg, **params)
+        return Churn(cfg=cfg, base=base, **churn_kw)
     raise ValueError(
         f"unknown channel scenario {name!r}; known: {CHANNEL_SCENARIOS}"
     )
@@ -200,7 +272,7 @@ def make_channel_process(name: str, cfg: ChannelConfig, **params):
 # data-heterogeneity presets
 # --------------------------------------------------------------------------
 
-PARTITIONS = ("iid", "shards", "dirichlet")
+PARTITIONS = ("iid", "shards", "dirichlet", "dirichlet_sized")
 
 
 def make_partition(name: str, features, labels, n_devices: int, seed: int = 0, **kw):
@@ -211,4 +283,6 @@ def make_partition(name: str, features, labels, n_devices: int, seed: int = 0, *
         return partition_noniid_shards(features, labels, n_devices, seed=seed, **kw)
     if name == "dirichlet":
         return partition_dirichlet(features, labels, n_devices, seed=seed, **kw)
+    if name == "dirichlet_sized":
+        return partition_dirichlet_sized(features, labels, n_devices, seed=seed, **kw)
     raise ValueError(f"unknown partition {name!r}; known: {PARTITIONS}")

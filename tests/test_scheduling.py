@@ -168,6 +168,48 @@ def test_property_probs_valid_and_sampler_consistent(n, s, seed, alpha):
     assert bool(jnp.all(pi > 0)) and bool(jnp.all(pi <= 1.0))
 
 
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(3, 10), s=st.integers(1, 4))
+def test_property_aggregation_unbiased_nonuniform_frac(seed, n, s):
+    """Heterogeneous-shard acceptance: aggregation stays unbiased when
+    m_i/M is non-uniform. Exact expectations, no Monte Carlo:
+
+      * Eq. 37, |S|=1 — enumerate the drawn device: Σ_i p_i·(m_i/(M p_i))·g_i
+        must equal Σ_i (m_i/M)·g_i for ANY positive data_frac.
+      * Horvitz–Thompson (PO-FL-B), any |S| — E[mask_i] = π_i, so the
+        analytic mean Σ_i π_i·ρ_i·g_i must equal the same target.
+    """
+    s = min(s, n)
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    probs = jax.random.dirichlet(k1, jnp.full((n,), 1.5))
+    probs = probs / probs.sum()
+    frac = jax.random.dirichlet(k2, jnp.full((n,), 0.7))  # non-uniform m_i/M
+    frac = frac / frac.sum()
+    g = jax.random.normal(k3, (n, 5))
+    target = np.asarray(jnp.sum(frac[:, None] * g, axis=0))
+
+    # Eq. 37 with |S| = 1: exact enumeration over the single draw
+    est = np.zeros(5)
+    for i in range(n):
+        sched = scheduling.Schedule(
+            indices=jnp.array([i], jnp.int32),
+            step_probs=probs[i][None],
+            mask=jnp.zeros(n).at[i].set(1.0),
+        )
+        rho = scheduling.aggregation_weights(sched, probs, frac, 1)
+        est += float(probs[i]) * np.asarray(
+            jnp.sum((rho * sched.mask)[:, None] * g, axis=0)
+        )
+    np.testing.assert_allclose(est, target, rtol=1e-4, atol=1e-5)
+
+    # Horvitz–Thompson: analytically exact for any |S|
+    pi = scheduling.bernoulli_inclusion_probs(probs, s)
+    rho = scheduling.bernoulli_weights(pi, frac)
+    est_ht = np.asarray(jnp.sum((pi * rho)[:, None] * g, axis=0))
+    np.testing.assert_allclose(est_ht, target, rtol=1e-3, atol=1e-5)
+
+
 @settings(max_examples=15, deadline=None)
 @given(seed=st.integers(0, 2**31 - 1))
 def test_property_eq37_weights_reduce_to_eq16_for_single(seed):

@@ -1,22 +1,34 @@
 """repro.sim subsystem tests: engine↔run_pofl trajectory equivalence,
-channel-scenario statistics, Dirichlet partition, lattice records, and the
-trial-batched fused kernel."""
+engine caching / retrace guards, aggregation-backend parity, heterogeneous
+(Dirichlet-sized) shards, channel-scenario statistics, Dirichlet partition,
+lattice records, and the trial-batched fused kernel."""
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import POFLConfig, make_round_step
+from repro.core import DeviceData, POFLConfig, make_round_step, run_pofl
 from repro.core.channel import ChannelConfig, ChannelState
 from repro.data import (
+    dirichlet_sizes,
     make_classification_dataset,
     partition_dirichlet,
+    partition_dirichlet_sized,
     partition_noniid_shards,
 )
 from repro.kernels.aircomp import aircomp_fused_batch, aircomp_fused_batch_ref
-from repro.sim import LatticeSpec, SimEngine, make_channel_process, run_lattice
+from repro.sim import (
+    LatticeSpec,
+    SimEngine,
+    cached_engine,
+    engine_cache_stats,
+    make_channel_process,
+    run_lattice,
+)
 
 
 def _loss_fn(params, x, y):
@@ -353,6 +365,337 @@ def test_lattice_gauss_markov_runs(setup):
     assert recs.e_com.shape == (1, 1, 1, 2, 4)
     assert np.isfinite(recs.e_com).all()
     assert recs.acc.shape[-1] == 0  # no eval_fn → empty eval axis
+
+
+# --------------------------------------------------------------------------
+# engine cache + retrace guard
+# --------------------------------------------------------------------------
+
+
+def test_engine_cache_no_retrace_on_repeat_call(setup):
+    """A repeat ``run_pofl`` with the same config (any seed) must reuse the
+    cached engine with ZERO new scan traces — the PR-2 cold-call fix and the
+    CI retrace guard (``-k no_retrace``)."""
+    data, params0, _ = setup
+    cfg = POFLConfig(n_devices=12, n_scheduled=4, policy="pofl", seed=7)
+    p1, _ = run_pofl(_loss_fn, params0, data, cfg, 6)
+
+    engine = cached_engine(_loss_fn, data, cfg)  # must be a hit, not a build
+    traces_after_first = engine.n_traces
+    assert traces_after_first >= 1
+
+    stats0 = engine_cache_stats()
+    p2, _ = run_pofl(_loss_fn, params0, data, cfg, 6)
+    # same engine object, zero new traces, pure cache hit
+    assert cached_engine(_loss_fn, data, cfg) is engine
+    assert engine.n_traces == traces_after_first
+    assert engine_cache_stats()["hits"] > stats0["hits"]
+    assert engine_cache_stats()["misses"] == stats0["misses"]
+    np.testing.assert_array_equal(np.asarray(p1["w"]), np.asarray(p2["w"]))
+
+    # a different seed shares the engine (cfg-minus-seed keying)…
+    run_pofl(_loss_fn, params0, data, dataclasses.replace(cfg, seed=123), 6)
+    assert engine.n_traces == traces_after_first
+    # …a different backend does not
+    other = cached_engine(
+        _loss_fn, data, dataclasses.replace(cfg, backend="pallas_fused")
+    )
+    assert other is not engine
+
+
+def test_static_length_scan_pads_without_perturbing(setup):
+    """n_rounds that don't divide evenly into eval segments exercise the
+    active-mask padding: history lengths and trajectories must match an
+    unpadded single-segment run of the same rounds."""
+    data, params0, ev = setup
+    cfg = POFLConfig(n_devices=12, n_scheduled=4, seed=5)
+    engine = SimEngine(_loss_fn, data, cfg)
+    # segments [1, 3, 3] (L=3, first padded) vs one unpadded 7-round segment
+    p_eval, hist = engine.run_with_history(params0, 7, eval_fn=ev, eval_every=3)
+    p_plain, hist_plain = engine.run_with_history(params0, 7, eval_fn=None)
+    np.testing.assert_array_equal(np.asarray(p_eval["w"]), np.asarray(p_plain["w"]))
+    assert len(hist.e_com) == 7 == len(hist_plain.e_com)
+    np.testing.assert_allclose(hist.e_com, hist_plain.e_com, rtol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# aggregation backends
+# --------------------------------------------------------------------------
+
+
+def test_backend_parity_on_small_lattice(setup):
+    """pallas_fused (fused Eq. 5→8, jnp oracle on CPU) must track the exact
+    jnp physical path round-for-round on a small lattice."""
+    data, params0, ev = setup
+    spec = LatticeSpec(policies=("pofl",), seeds=(0, 1000), n_rounds=5)
+    base = POFLConfig(
+        n_devices=12, n_scheduled=4, simulate_physical=True, backend="jnp"
+    )
+    recs_jnp = run_lattice(
+        _loss_fn, data, params0, spec, base_cfg=base, eval_fn=ev
+    )
+    recs_fused = run_lattice(
+        _loss_fn, data, params0, spec,
+        base_cfg=dataclasses.replace(base, backend="pallas_fused"), eval_fn=ev,
+    )
+    np.testing.assert_allclose(
+        recs_fused.grad_norm, recs_jnp.grad_norm, rtol=1e-4, atol=1e-6
+    )
+    np.testing.assert_allclose(recs_fused.e_com, recs_jnp.e_com, rtol=1e-5)
+    np.testing.assert_allclose(recs_fused.acc, recs_jnp.acc, rtol=1e-4, atol=1e-4)
+
+
+def test_backend_interpret_mode_parity():
+    """The CPU interpreter-mode path of the fused backend (the round body's
+    actual Pallas kernel, interpreted) matches the jnp reference stage."""
+    from repro.core import aggregation_stage
+
+    cfg = POFLConfig(
+        n_devices=6, n_scheduled=3, backend="pallas_fused",
+        simulate_physical=True,
+    )
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    g = jax.random.normal(ks[0], (6, 700))
+    h = (jax.random.normal(ks[1], (6,)) + 1j * jax.random.normal(ks[2], (6,))).astype(
+        jnp.complex64
+    )
+    rho = jnp.array([0.3, 0.5, 0.2, 0.0, 0.0, 0.0])
+    mask = jnp.array([1.0, 1.0, 1.0, 0.0, 0.0, 0.0])
+    y_interp, e_interp = aggregation_stage(
+        cfg, g, rho, h, mask, ks[3], 1e-8, use_pallas="interpret"
+    )
+    y_ref, e_ref = aggregation_stage(
+        cfg, g, rho, h, mask, ks[3], 1e-8, use_pallas=False
+    )
+    cfg_jnp = dataclasses.replace(cfg, backend="jnp")
+    y_jnp, e_jnp = aggregation_stage(cfg_jnp, g, rho, h, mask, ks[3], 1e-8)
+    np.testing.assert_allclose(np.asarray(y_interp), np.asarray(y_ref), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y_interp), np.asarray(y_jnp), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(float(e_interp), float(e_jnp), rtol=1e-5)
+    np.testing.assert_allclose(float(e_ref), float(e_jnp), rtol=1e-5)
+
+
+def test_unknown_backend_rejected(setup):
+    data, params0, _ = setup
+    cfg = POFLConfig(n_devices=12, n_scheduled=4, backend="nonsense")
+    with pytest.raises(ValueError):
+        run_pofl(_loss_fn, params0, data, cfg, 1)
+
+
+def test_interpret_env_var_dispatch_and_cache_keying(setup, monkeypatch):
+    """REPRO_PALLAS_INTERPRET flips the 'auto' dispatch to interpret mode at
+    trace time, and cached_engine keys on it so a flipped var can never
+    replay a stale-mode trace."""
+    from repro.kernels.aircomp.ops import _resolve
+
+    monkeypatch.delenv("REPRO_PALLAS_INTERPRET", raising=False)
+    assert _resolve("auto") in (True, False)  # plain hardware dispatch
+    assert _resolve(False) is False and _resolve("interpret") == "interpret"
+    data, _, _ = setup
+    cfg = POFLConfig(n_devices=12, n_scheduled=4, backend="pallas_fused")
+    eng_plain = cached_engine(_loss_fn, data, cfg)
+
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    assert _resolve("auto") == "interpret"
+    assert cached_engine(_loss_fn, data, cfg) is not eng_plain
+
+
+def test_cached_engine_accepts_array_scenario_params(setup):
+    """Anything SimEngine accepts as a scenario param must also key the
+    cache (arrays/lists freeze to tuples instead of raising TypeError)."""
+    data, _, _ = setup
+    cfg = POFLConfig(n_devices=12, n_scheduled=4)
+    params = {"corr": jnp.float32(0.9)}
+    e1 = cached_engine(_loss_fn, data, cfg, scenario="gauss_markov",
+                       scenario_params=params)
+    e2 = cached_engine(_loss_fn, data, cfg, scenario="gauss_markov",
+                       scenario_params={"corr": jnp.float32(0.9)})
+    assert e2 is e1
+    e3 = cached_engine(_loss_fn, data, cfg, scenario="gauss_markov",
+                       scenario_params={"corr": jnp.float32(0.5)})
+    assert e3 is not e1
+
+
+def test_fused_backend_empty_rounds_finite(setup):
+    """All-dropped rounds must not NaN the fused backend: its jnp oracle
+    cancels the a=inf denoise scalar algebraically like the kernel does
+    (the naive a·s → (…)/a composition produced 0·inf)."""
+    data, params0, _ = setup
+    cfg = POFLConfig(
+        n_devices=12, n_scheduled=3, policy="pofl", seed=0,
+        backend="pallas_fused",
+    )
+    engine = SimEngine(
+        _loss_fn, data, cfg, scenario="dropout",
+        scenario_params={"p_drop": 0.85},
+    )
+    state = engine.init(params0, 0)
+    final, recs = jax.jit(
+        lambda s: engine.scan_rounds(
+            s, jnp.arange(50, dtype=jnp.int32), jnp.zeros(50, bool)
+        )
+    )(state)
+    assert (np.asarray(recs.n_scheduled) == 0).any()  # empty rounds occurred
+    assert np.isfinite(np.asarray(final.params["w"])).all()
+    assert np.isfinite(np.asarray(recs.grad_norm)).all()
+
+
+# --------------------------------------------------------------------------
+# heterogeneous (Dirichlet-sized) shards
+# --------------------------------------------------------------------------
+
+
+def test_dirichlet_sizes_apportionment():
+    sizes = dirichlet_sizes(1000, 8, beta=0.3, min_per_device=2, seed=0)
+    assert sizes.sum() == 1000 and (sizes >= 2).all()
+    near_equal = dirichlet_sizes(1000, 8, beta=1e6, seed=0)
+    assert near_equal.max() - near_equal.min() <= 2  # β→∞ ⇒ ~equal shards
+    with pytest.raises(ValueError):
+        dirichlet_sizes(10, 8, min_per_device=2)
+
+
+def test_hetero_lattice_end_to_end(setup):
+    """Acceptance: a lattice sweep with Dirichlet-sized (unequal) shards runs
+    end to end through engine + lattice, weights following the true m_i/M."""
+    _, params0, ev = setup
+    key = jax.random.PRNGKey(0)
+    x, y = make_classification_dataset("mnist_like", 1200, key)
+    data = partition_dirichlet_sized(x, y, n_devices=12, beta=0.4, seed=0)
+    frac = np.asarray(data.data_frac)
+    assert frac.sum() == pytest.approx(1.0, rel=1e-6)
+    assert frac.std() > 0.01  # genuinely non-uniform
+
+    spec = LatticeSpec(
+        policies=("pofl", "importance"), seeds=(0, 1000), n_rounds=6,
+        eval_every=3,
+    )
+    recs = run_lattice(
+        _loss_fn, data, params0, spec,
+        base_cfg=POFLConfig(n_devices=12, n_scheduled=4), eval_fn=ev,
+    )
+    assert recs.e_com.shape == (2, 1, 1, 2, 6)
+    assert np.isfinite(recs.e_com).all() and np.isfinite(recs.acc).all()
+    assert (recs.n_scheduled >= 1).all()
+
+    # and through the run_pofl wrapper (engine path) as well
+    cfg = POFLConfig(n_devices=12, n_scheduled=4, seed=0)
+    params, hist = run_pofl(_loss_fn, params0, data, cfg, 5, eval_fn=ev, eval_every=2)
+    assert np.isfinite(np.asarray(params["w"])).all()
+    assert hist.test_acc[-1] > 0.2  # it actually learns a bit in 5 rounds
+
+
+def test_hetero_padding_never_sampled():
+    """Padded rows carry NaN features here: any draw past a device's valid
+    prefix would poison the gradients, so finiteness proves the sampler
+    respects n_samples."""
+    from repro.core import local_gradient_stage
+
+    n_dev, m_max, d = 4, 10, 8
+    feats = np.random.default_rng(0).normal(size=(n_dev, m_max, d)).astype(np.float32)
+    labels = np.random.default_rng(1).integers(0, 3, size=(n_dev, m_max))
+    n_samples = np.array([10, 3, 7, 1], np.int32)
+    for i, ns in enumerate(n_samples):
+        feats[i, ns:] = np.nan  # poison the padding
+    data = DeviceData(
+        features=jnp.asarray(feats), labels=jnp.asarray(labels),
+        n_samples=n_samples,
+    )
+
+    def loss(params, x, y):
+        logits = x @ params["w"]
+        return -jnp.mean(
+            jnp.take_along_axis(jax.nn.log_softmax(logits), y[:, None], axis=1)
+        )
+
+    cfg = POFLConfig(n_devices=n_dev, batch_size=6)
+    for seed in range(5):
+        g = local_gradient_stage(
+            loss, data, cfg, {"w": jnp.zeros((d, 3))}, jax.random.PRNGKey(seed)
+        )
+        assert np.isfinite(np.asarray(g)).all()
+    np.testing.assert_allclose(
+        np.asarray(data.data_frac), n_samples / n_samples.sum(), rtol=1e-6
+    )
+
+    # empty devices are rejected at trace time, not silently wrapped onto
+    # the last padded row
+    empty = DeviceData(
+        features=jnp.asarray(feats), labels=jnp.asarray(labels),
+        n_samples=np.array([10, 0, 7, 1], np.int32),
+    )
+    with pytest.raises(ValueError, match="n_samples"):
+        local_gradient_stage(
+            loss, empty, cfg, {"w": jnp.zeros((d, 3))}, jax.random.PRNGKey(0)
+        )
+
+
+# --------------------------------------------------------------------------
+# churn scenario
+# --------------------------------------------------------------------------
+
+
+def test_churn_availability_trends_not_flickers():
+    """Churn availability is a sticky Markov chain: stationary rate
+    p_arrive/(p_arrive+p_depart) and lag-1 autocorr ≈ 1-p_arrive-p_depart
+    (≫ 0, unlike dropout's i.i.d. flicker at autocorr 0)."""
+    cfg = ChannelConfig(n_devices=24)
+    p_dep, p_arr = 0.1, 0.3
+    proc = make_channel_process("churn", cfg, p_depart=p_dep, p_arrive=p_arr)
+    _, avails = _rollout(proc, jax.random.PRNGKey(2), 3000)
+    av = np.asarray(avails)  # (T, N)
+    assert set(np.unique(av)) <= {0.0, 1.0}
+
+    stationary = p_arr / (p_arr + p_dep)
+    np.testing.assert_allclose(av.mean(), stationary, atol=0.04)
+
+    centered = av - av.mean(axis=0)
+    autocorr = float(
+        (centered[1:] * centered[:-1]).mean() / (centered**2).mean()
+    )
+    np.testing.assert_allclose(autocorr, 1.0 - p_arr - p_dep, atol=0.08)
+    # devices genuinely stay offline for multi-round stretches
+    run_lengths = []
+    for dev in range(av.shape[1]):
+        off = av[:, dev] == 0
+        if off.any():
+            edges = np.flatnonzero(np.diff(np.concatenate([[0], off, [0]])))
+            run_lengths.extend((edges[1::2] - edges[::2]).tolist())
+    assert np.mean(run_lengths) > 2.0  # E[offline sojourn] = 1/p_arrive ≈ 3.3
+
+
+def test_churn_base_channel_untouched():
+    """The fading trajectory under churn matches the base process exactly
+    (churn only gates availability)."""
+    cfg = ChannelConfig(n_devices=8)
+    proc = make_channel_process("churn", cfg, base="gauss_markov", corr=0.9)
+    base = make_channel_process("gauss_markov", cfg, corr=0.9)
+    st_c = proc.init(jax.random.PRNGKey(4))
+    # churn splits its init key: base state comes from split(key)[0]
+    k_base, _ = jax.random.split(jax.random.PRNGKey(4))
+    st_b = base.init(k_base)
+    k = jax.random.PRNGKey(9)
+    _, h_c, _ = proc.step(st_c, k)
+    _, h_b, _ = base.step(st_b, jax.random.split(k)[0])
+    np.testing.assert_array_equal(np.asarray(h_c), np.asarray(h_b))
+
+
+def test_churn_engine_runs_finite(setup):
+    data, params0, _ = setup
+    cfg = POFLConfig(n_devices=12, n_scheduled=4, policy="pofl", seed=0)
+    engine = SimEngine(
+        _loss_fn, data, cfg, scenario="churn",
+        scenario_params={"p_depart": 0.3, "p_arrive": 0.2},
+    )
+    state = engine.init(params0, 0)
+    final, recs = jax.jit(
+        lambda s: engine.scan_rounds(
+            s, jnp.arange(30, dtype=jnp.int32), jnp.zeros(30, bool)
+        )
+    )(state)
+    assert np.isfinite(np.asarray(final.params["w"])).all()
+    assert np.isfinite(np.asarray(recs.e_com)).all()
+    n_sched = np.asarray(recs.n_scheduled)
+    assert (n_sched <= 4).all() and n_sched.min() < 4  # clamping fired
 
 
 # --------------------------------------------------------------------------
