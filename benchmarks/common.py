@@ -87,8 +87,14 @@ def sweep_lattice(
     eval_every: int = 5,
     seed: int = 0,
     backend: str = "jnp",
+    mesh=None,
 ) -> LatticeRecords:
-    """Run a full (policies × noise_powers × alphas × trials) lattice."""
+    """Run a full (policies × noise_powers × alphas × trials) lattice.
+
+    ``mesh`` (a ``jax.sharding.Mesh``, a device count, or None) shards the
+    flattened cell axis — see ``repro.sim.lattice.run_lattice``. Results are
+    identical to the unsharded run; only placement changes.
+    """
     spec = LatticeSpec(
         policies=tuple(policies),
         noise_powers=tuple(noise_powers),
@@ -108,6 +114,7 @@ def sweep_lattice(
         base_cfg=base_cfg,
         eval_fn=task.eval_fn,
         channel_cfg=ChannelConfig(n_devices=task.data.n_devices),
+        mesh=mesh,
     )
 
 
@@ -136,14 +143,16 @@ def run_policies(
     eval_every: int = 5,
     seed: int = 0,
     backend: str = "jnp",
+    mesh=None,
 ) -> dict:
     """Returns {policy: {"acc": (trials, evals), "rounds": [...], ...}} —
     same record layout as the historical run_pofl loop, computed on the
-    sim lattice (all trials of a policy batched into one program)."""
+    sim lattice (all trials of a policy batched into one program, cells
+    optionally sharded over ``mesh``)."""
     recs = sweep_lattice(
         task, policies=policies, noise_powers=(noise_power,), alphas=(alpha,),
         n_rounds=n_rounds, n_trials=n_trials, n_scheduled=n_scheduled,
-        lr0=lr0, eval_every=eval_every, seed=seed, backend=backend,
+        lr0=lr0, eval_every=eval_every, seed=seed, backend=backend, mesh=mesh,
     )
     return {
         p: policy_summary(recs, p, noise_power, alpha) for p in policies

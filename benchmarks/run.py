@@ -3,12 +3,24 @@ micro-benchmarks + the roofline table + the sim-lattice throughput bench.
 
 Prints ``name,us_per_call,derived`` CSV lines (reduced settings — pass
 --full to the individual modules for paper-scale runs), and writes
-``BENCH_sim.json`` (machine-readable lattice cells/sec + speedup vs the
-cached-engine run_pofl loop, plus the aggregation backend used and the
-engine-cache hit counts) so future PRs have a perf trajectory.
+``BENCH_sim.json`` so future PRs have a perf trajectory.
 
-``--backend {jnp,pallas_fused}`` selects the aggregation backend for the
-sim-lattice bench (threaded through benchmarks/common.py).
+``BENCH_sim.json`` schema (one flat object):
+  cells, n_rounds, n_devices       — sweep size (cells = policies × trials)
+  backend                          — aggregation backend ("jnp"/"pallas_fused")
+  mesh_devices                     — devices the cell axis was sharded over
+                                     (1 = unsharded run)
+  lattice_seconds / loop_seconds   — lattice vs cached-engine run_pofl loop
+  speedup                          — loop_seconds / lattice_seconds
+  cells_per_sec, round_cells_per_sec
+  per_device_cells_per_sec         — cells_per_sec / mesh_devices (the
+                                     sharding-efficiency trajectory number)
+  engine_cache_hits / _misses      — cross-call engine cache counters
+
+``--backend {jnp,pallas_fused}`` selects the aggregation backend and
+``--mesh N`` shards the lattice's cell axis over the first N local devices
+(on CPU, export ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+first), both threaded through benchmarks/common.py.
 """
 from __future__ import annotations
 
@@ -67,25 +79,29 @@ def _kernel_micro():
     return f"max_abs_err={max(err_a, err_f, err_s):.2e}"
 
 
-def _bench_sim(backend: str = "jnp"):
+def _bench_sim(backend: str = "jnp", mesh_devices: int = 0):
     """Reduced fig4-style sweep (5 policies × 3 trials) through sim.lattice
     vs the cached-engine one-run_pofl-per-cell loop → BENCH_sim.json.
 
     ``loop_seconds`` is measured against the PR-2 optimized wrapper (engine
     cache + single-static-length active-mask scan), so the speedup is the
     honest lattice-vs-loop number, not lattice-vs-cold-recompiles.
+    ``mesh_devices > 0`` shards the lattice's cell axis over that many local
+    devices; the loop baseline always runs unsharded.
     """
     from benchmarks.common import (
         POLICIES, build_task, run_policies, run_policies_loop, timed,
     )
-    from repro.sim import engine_cache_stats, reset_engine_cache
+    from repro.sim import engine_cache_stats, make_cell_mesh, reset_engine_cache
 
+    mesh = make_cell_mesh(mesh_devices) if mesh_devices else None
+    n_mesh = 1 if mesh is None else mesh_devices
     task = build_task("mnist", n_devices=20, n_train=2000)
     kw = dict(
         policies=POLICIES, n_rounds=30, n_trials=3, n_scheduled=10,
         eval_every=10, backend=backend,
     )
-    _, t_lattice = timed(run_policies, task, **kw)
+    _, t_lattice = timed(run_policies, task, mesh=mesh, **kw)
     reset_engine_cache()
     _, t_loop = timed(run_policies_loop, task, **kw)
     cache = engine_cache_stats()
@@ -96,11 +112,13 @@ def _bench_sim(backend: str = "jnp"):
         "n_rounds": kw["n_rounds"],
         "n_devices": 20,
         "backend": backend,
+        "mesh_devices": n_mesh,
         "lattice_seconds": round(t_lattice, 3),
         "loop_seconds": round(t_loop, 3),
         "speedup": round(t_loop / t_lattice, 2),
         "cells_per_sec": round(cells / t_lattice, 3),
         "round_cells_per_sec": round(cells * kw["n_rounds"] / t_lattice, 1),
+        "per_device_cells_per_sec": round(cells / t_lattice / n_mesh, 3),
         "engine_cache_hits": cache["hits"],
         "engine_cache_misses": cache["misses"],
     }
@@ -118,6 +136,12 @@ def main(argv: list[str] | None = None) -> None:
         "--backend", default="jnp", choices=BACKENDS,
         help="aggregation backend for the sim-lattice bench",
     )
+    parser.add_argument(
+        "--mesh", type=int, default=0, metavar="N",
+        help="shard the sim-lattice bench's cell axis over the first N local "
+        "devices (0 = unsharded; on CPU set "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=N first)",
+    )
     args = parser.parse_args(argv)
 
     from benchmarks import (
@@ -132,9 +156,10 @@ def main(argv: list[str] | None = None) -> None:
 
     _run("kernels_microbench", _kernel_micro, lambda d: d)
     _run(
-        "sim_lattice", lambda: _bench_sim(backend=args.backend),
-        lambda d: "cells/s=%.2f speedup=%.1fx backend=%s" % (
-            d["cells_per_sec"], d["speedup"], d["backend"],
+        "sim_lattice",
+        lambda: _bench_sim(backend=args.backend, mesh_devices=args.mesh),
+        lambda d: "cells/s=%.2f speedup=%.1fx backend=%s mesh=%d" % (
+            d["cells_per_sec"], d["speedup"], d["backend"], d["mesh_devices"],
         ),
     )
     _run(

@@ -4,9 +4,12 @@ Runs (3 policies × 2 noise powers × 4 trials) = 24 cells of PO-FL training
 through ``repro.sim`` — one vmapped+scanned compile per policy, metrics
 streamed out once — under temporally-correlated Gauss–Markov fading with
 random device dropout (scenarios the per-round ``run_pofl`` loop cannot
-express).
+express). ``--mesh N`` shards the 8-cell-per-policy axis over N devices
+(results are identical — only placement changes):
 
     PYTHONPATH=src python examples/sim_lattice.py [--backend pallas_fused]
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/sim_lattice.py --mesh 8
 """
 import argparse
 
@@ -16,7 +19,7 @@ import numpy as np
 from repro.core.pofl import BACKENDS, POFLConfig
 from repro.data.synthetic import make_classification_dataset
 from repro.models import small
-from repro.sim import LatticeSpec, make_partition, run_lattice
+from repro.sim import LatticeSpec, make_cell_mesh, make_partition, run_lattice
 
 
 def main(argv=None):
@@ -26,7 +29,14 @@ def main(argv=None):
         help="aggregation backend (pallas_fused = fused kernel on TPU, "
         "its jnp oracle on CPU)",
     )
+    parser.add_argument(
+        "--mesh", type=int, default=0, metavar="N",
+        help="shard the cell axis over the first N local devices "
+        "(0 = unsharded; on CPU set "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=N first)",
+    )
     args = parser.parse_args(argv)
+    mesh = make_cell_mesh(args.mesh) if args.mesh else None
 
     key = jax.random.PRNGKey(0)
     k_train, k_test, k_init = jax.random.split(key, 3)
@@ -51,10 +61,12 @@ def main(argv=None):
         eval_fn=eval_fn,
         scenario="dropout",
         scenario_params={"base": "gauss_markov", "corr": 0.9, "p_drop": 0.1},
+        mesh=mesh,
     )
 
+    shard_note = f", cells sharded over {args.mesh} devices" if mesh else ""
     print(f"lattice: {spec.n_cells} cells × {spec.n_rounds} rounds "
-          f"(eval rounds {records.eval_rounds.tolist()})")
+          f"(eval rounds {records.eval_rounds.tolist()}){shard_note}")
     for policy in spec.policies:
         for np_ in spec.noise_powers:
             acc = records.cell(policy=policy, noise_power=np_)["acc"]

@@ -1,6 +1,7 @@
 from repro.data.partition import (
     dirichlet_sizes,
     partition_dirichlet,
+    partition_dirichlet_mixed,
     partition_dirichlet_sized,
     partition_iid,
     partition_noniid_shards,
@@ -12,6 +13,7 @@ __all__ = [
     "make_classification_dataset",
     "make_token_dataset",
     "partition_dirichlet",
+    "partition_dirichlet_mixed",
     "partition_dirichlet_sized",
     "partition_iid",
     "partition_noniid_shards",

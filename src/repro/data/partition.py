@@ -15,6 +15,11 @@ Dir(β)·M (unequal data volumes, the regime the Eq. 34/35/37 m_i/M weights
 are written for). Shards are padded to a common length and the true counts
 ride in ``DeviceData.n_samples`` — padded rows are never sampled by the
 round pipeline.
+
+``partition_dirichlet_mixed`` composes both skews in one preset: unequal
+m_i ~ Dir(β_size)·M shard sizes AND per-device Dirichlet(β) label
+proportions — the fully-heterogeneous regime (devices differ in both how
+much data they hold and which classes it covers).
 """
 from __future__ import annotations
 
@@ -67,34 +72,23 @@ def partition_iid(features, labels, n_devices: int, seed: int = 0) -> DeviceData
     return DeviceData(features=features[perm], labels=labels[perm])
 
 
-def partition_dirichlet(
-    features,
-    labels,
-    n_devices: int,
-    beta: float = 0.5,
-    seed: int = 0,
-) -> DeviceData:
-    """Dirichlet(β) label-proportion partition, equalized to stacked shards.
+def _apportion_by_label(labels, sizes, beta: float, rng) -> list[np.ndarray]:
+    """Dirichlet(β) label apportionment shared by ``partition_dirichlet``
+    (equal sizes) and ``partition_dirichlet_mixed`` (Dirichlet sizes).
 
-    Device d's label distribution is q_d ~ Dir(β·1_K); its m = M//N samples
-    are drawn class-by-class to match q_d from per-class pools, topping up
-    from the leftover pool when a class runs dry (so shards stay equal-size
-    and every sample is used at most once). β→0 gives near-single-class
-    devices; β→∞ recovers the global label distribution.
+    Device d gets ``sizes[d]`` samples whose labels follow q_d ~ Dir(β·1_K):
+    largest-remainder apportionment of its slots to classes, drawn from
+    per-class pools, topping up from the fullest remaining pool when a class
+    runs dry — every sample is used at most once (exactly once when
+    Σ sizes = M).
     """
-    features = np.asarray(features)
-    labels = np.asarray(labels)
-    m_total = labels.shape[0]
-    per = m_total // n_devices
-    rng = np.random.default_rng(seed)
-
     classes = np.unique(labels)
     pools = {c: rng.permutation(np.flatnonzero(labels == c)).tolist() for c in classes}
-    props = rng.dirichlet(np.full(len(classes), beta), size=n_devices)
+    props = rng.dirichlet(np.full(len(classes), beta), size=len(sizes))
 
     per_dev_idx = []
-    for d in range(n_devices):
-        # largest-remainder apportionment of `per` slots to classes per q_d
+    for d, per in enumerate(sizes):
+        per = int(per)
         raw = props[d] * per
         counts = np.floor(raw).astype(int)
         short = per - counts.sum()
@@ -112,8 +106,31 @@ def partition_dirichlet(
         idx = np.asarray(idx[:per])
         rng.shuffle(idx)
         per_dev_idx.append(idx)
+    return per_dev_idx
 
-    per_dev_idx = np.stack(per_dev_idx)
+
+def partition_dirichlet(
+    features,
+    labels,
+    n_devices: int,
+    beta: float = 0.5,
+    seed: int = 0,
+) -> DeviceData:
+    """Dirichlet(β) label-proportion partition, equalized to stacked shards.
+
+    Device d's label distribution is q_d ~ Dir(β·1_K); its m = M//N samples
+    are drawn class-by-class to match q_d from per-class pools, topping up
+    from the leftover pool when a class runs dry (so shards stay equal-size
+    and every sample is used at most once). β→0 gives near-single-class
+    devices; β→∞ recovers the global label distribution.
+    """
+    features = np.asarray(features)
+    labels = np.asarray(labels)
+    per = labels.shape[0] // n_devices
+    rng = np.random.default_rng(seed)
+    per_dev_idx = np.stack(
+        _apportion_by_label(labels, [per] * n_devices, beta, rng)
+    )
     return DeviceData(features=features[per_dev_idx], labels=labels[per_dev_idx])
 
 
@@ -145,6 +162,45 @@ def dirichlet_sizes(
         sizes[np.argmax(sizes)] -= 1
         sizes[np.argmin(sizes)] += 1
     return sizes
+
+
+def partition_dirichlet_mixed(
+    features,
+    labels,
+    n_devices: int,
+    beta: float = 0.5,
+    beta_size: float = 0.5,
+    min_per_device: int = 1,
+    seed: int = 0,
+) -> DeviceData:
+    """Label-skew × size-skew: Dir(β) class proportions over Dir(β_size)·M
+    unequal shard sizes (the ROADMAP ``dirichlet`` × ``dirichlet_sized``
+    composition).
+
+    Device d holds m_d ~ :func:`dirichlet_sizes`(β_size) samples whose labels
+    follow q_d ~ Dir(β·1_K) (largest-remainder apportionment of m_d slots to
+    classes, topping up from the fullest per-class pool when one runs dry, so
+    every sample is used exactly once). Shards are wrap-padded to m_max and
+    the true counts ride in ``DeviceData.n_samples`` exactly like
+    :func:`partition_dirichlet_sized`.
+    """
+    features = np.asarray(features)
+    labels = np.asarray(labels)
+    m_total = labels.shape[0]
+    sizes = dirichlet_sizes(
+        m_total, n_devices, beta=beta_size, min_per_device=min_per_device,
+        seed=seed,
+    )
+    rng = np.random.default_rng(seed + 1)
+    per_dev_idx = _apportion_by_label(labels, sizes, beta, rng)
+
+    m_max = int(sizes.max())
+    idx_pad = np.stack([np.resize(idx, m_max) for idx in per_dev_idx])  # wrap-pad
+    return DeviceData(
+        features=features[idx_pad],
+        labels=labels[idx_pad],
+        n_samples=sizes.astype(np.int32),
+    )
 
 
 def partition_dirichlet_sized(

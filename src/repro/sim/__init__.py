@@ -3,13 +3,16 @@
 Three layers (see ROADMAP.md "sim" section):
 
   * :mod:`repro.sim.scenario` — stateful channel processes (static Rayleigh,
-    Gauss–Markov fading, mobility, dropout) and data-heterogeneity presets
-    (iid / shards / dirichlet) behind string registries.
+    Gauss–Markov fading, mobility, dropout, churn) and data-heterogeneity
+    presets (iid / shards / dirichlet / dirichlet_sized / dirichlet_mixed)
+    behind string registries.
   * :mod:`repro.sim.engine`   — the ``lax.scan``-over-rounds round engine
     with a donated carry; ``core.pofl.run_pofl`` is a wrapper over it.
   * :mod:`repro.sim.lattice`  — experiment-lattice specs
     (policies × noise_powers × alphas × seeds [× n_devices]) compiled into
-    one vmapped+scanned program per (policy, shape) group.
+    one vmapped+scanned program per (policy, shape) group, optionally
+    sharded along the cell axis over a ``jax.sharding`` mesh
+    (``run_lattice(..., mesh=...)`` / :func:`make_cell_mesh`).
 """
 from repro.sim.engine import (
     SimEngine,
@@ -18,7 +21,12 @@ from repro.sim.engine import (
     engine_cache_stats,
     reset_engine_cache,
 )
-from repro.sim.lattice import LatticeRecords, LatticeSpec, run_lattice
+from repro.sim.lattice import (
+    LatticeRecords,
+    LatticeSpec,
+    make_cell_mesh,
+    run_lattice,
+)
 from repro.sim.scenario import (
     CHANNEL_SCENARIOS,
     PARTITIONS,
@@ -35,6 +43,7 @@ __all__ = [
     "SimState",
     "cached_engine",
     "engine_cache_stats",
+    "make_cell_mesh",
     "make_channel_process",
     "make_partition",
     "reset_engine_cache",

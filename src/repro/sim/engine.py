@@ -100,9 +100,16 @@ class SimEngine:
         lattice; ``run_with_history`` instead takes an arbitrary Python
         callable and evaluates between chunks).
 
+    ``mesh`` (a ``jax.sharding.Mesh`` or None) is carried as engine identity:
+    the engine itself never reads it — input placement decides where the
+    lattice program runs — but meshed and unmeshed engines must not share
+    trace counters or cache slots (see :func:`cached_engine`), so it keys
+    both.
+
     ``n_traces`` counts how many times the chunked scan has been (re)traced —
     the CI retrace guard asserts it stays flat across repeat ``run_pofl``
-    calls with the same config.
+    calls with the same config. ``n_lattice_traces`` is the same counter for
+    the vmapped-cells lattice program (:meth:`run_lattice_cells`).
     """
 
     def __init__(
@@ -114,6 +121,7 @@ class SimEngine:
         scenario: str = "static_rayleigh",
         scenario_params: dict | None = None,
         eval_fn: Callable | None = None,
+        mesh: Any | None = None,
     ):
         self.loss_fn = loss_fn
         self.data = data
@@ -123,7 +131,9 @@ class SimEngine:
             scenario, self.channel_cfg, **(scenario_params or {})
         )
         self.eval_fn = eval_fn
+        self.mesh = mesh
         self.n_traces = 0  # chunk-scan trace counter (see class docstring)
+        self.n_lattice_traces = 0  # lattice-program trace counter
         # Donating the carry on CPU only triggers "donation not implemented"
         # warnings; donate on accelerators where it buys in-place reuse.
         donate = (0,) if jax.default_backend() != "cpu" else ()
@@ -131,6 +141,9 @@ class SimEngine:
             self._chunk, static_argnames=("n_steps",), donate_argnums=donate
         )
         self._donating = bool(donate)
+        self._lattice_jit = jax.jit(
+            jax.vmap(self._lattice_cell, in_axes=(None, None, None, 0, 0, 0))
+        )
 
     # -- state construction -------------------------------------------------
 
@@ -214,6 +227,34 @@ class SimEngine:
             xs = (t_ints, do_eval, active)
 
         return jax.lax.scan(body, state, xs)
+
+    # -- the vmapped lattice program ----------------------------------------
+
+    def _lattice_cell(self, params0, t_ints, do_eval, noise_power, alpha, seed):
+        self.n_lattice_traces += 1  # Python body runs only when (re)tracing
+        state = self.init(params0, seed)
+        _, recs = self.scan_rounds(
+            state, t_ints, do_eval, noise_power=noise_power, alpha=alpha
+        )
+        return recs
+
+    def run_lattice_cells(
+        self, params0, t_ints, do_eval, noise_b, alpha_b, seed_b
+    ) -> RoundRecord:
+        """One jitted (vmap-over-cells ∘ scan-over-rounds) dispatch.
+
+        ``noise_b``/``alpha_b``/``seed_b`` are the flattened (B,) cell axes;
+        when they carry a ``NamedSharding`` over a cell mesh (see
+        ``sim.lattice``) the whole program partitions along that axis —
+        computation follows the committed input placement, so the engine
+        needs no sharded/unsharded code split. The jit lives on the engine,
+        so repeat calls through :func:`cached_engine` re-trace zero times
+        (``n_lattice_traces`` stays flat).
+        """
+        return self._lattice_jit(
+            params0, jnp.asarray(t_ints), jnp.asarray(do_eval),
+            noise_b, alpha_b, seed_b,
+        )
 
     def _chunk(self, state: SimState, t0, n_active, n_steps: int):
         self.n_traces += 1  # Python body runs only when (re)tracing
@@ -326,6 +367,22 @@ def _freeze(obj):
     return obj
 
 
+def _mesh_key(mesh) -> tuple | None:
+    """Hashable identity of a ``jax.sharding.Mesh`` (None stays None).
+
+    Axis names, logical shape, and the flat device ids — two meshes over the
+    same devices in the same layout are the same engine, anything else
+    (different device set, different order) is not.
+    """
+    if mesh is None:
+        return None
+    return (
+        tuple(mesh.axis_names),
+        tuple(np.shape(mesh.devices)),
+        tuple(d.id for d in np.ravel(mesh.devices)),
+    )
+
+
 def cached_engine(
     loss_fn: Callable,
     data: DeviceData,
@@ -333,15 +390,19 @@ def cached_engine(
     channel_cfg: ChannelConfig | None = None,
     scenario: str = "static_rayleigh",
     scenario_params: dict | None = None,
+    eval_fn: Callable | None = None,
+    mesh: Any | None = None,
 ) -> SimEngine:
     """Return a (possibly shared) :class:`SimEngine` for this task + config.
 
     The key is ``(loss_fn, data identity, cfg with seed zeroed — including
-    the aggregation backend — channel_cfg, scenario)``: calls that differ
-    only by seed share one engine and therefore every jit trace it has
-    already paid for. The cache is a bounded LRU (evicts least recently
-    used); entries pin their ``data`` arrays alive, which is the point —
-    eviction releases them.
+    the aggregation backend — channel_cfg, scenario, eval_fn identity, mesh
+    identity)``: calls that differ only by seed share one engine and
+    therefore every jit trace it has already paid for. A mesh-keyed engine
+    never collides with the unsharded one (or with a differently-shaped
+    mesh), so per-engine trace counters stay meaningful under sharding. The
+    cache is a bounded LRU (evicts least recently used); entries pin their
+    ``data`` arrays alive, which is the point — eviction releases them.
     """
     key = (
         loss_fn,
@@ -350,6 +411,8 @@ def cached_engine(
         channel_cfg,
         scenario,
         _freeze(scenario_params),
+        eval_fn,
+        _mesh_key(mesh),
         # the fused backend's dispatch reads this env var at trace time, so
         # toggling it must not replay a stale trace (parity tests flip it)
         os.environ.get("REPRO_PALLAS_INTERPRET", ""),
@@ -365,6 +428,8 @@ def cached_engine(
         channel_cfg=channel_cfg,
         scenario=scenario,
         scenario_params=scenario_params,
+        eval_fn=eval_fn,
+        mesh=mesh,
     )
     _ENGINE_CACHE[key] = engine
     while len(_ENGINE_CACHE) > _ENGINE_CACHE_MAX:

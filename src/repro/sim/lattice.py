@@ -16,6 +16,17 @@ Compared to looping ``run_pofl`` over (policy × trial × sweep-point) — the
 seed repo's benchmark harness — this removes the per-round host sync and the
 per-(trial, sweep-point) recompiles; see benchmarks/run.py's ``BENCH_sim``
 entry for the measured cells/sec.
+
+Sharding: ``run_lattice(..., mesh=...)`` places the flattened cell axis on a
+``jax.sharding.Mesh`` with ``NamedSharding(P("cells"))`` — the grid is padded
+to a multiple of the mesh size with dead cells (repeats of the last real
+cell) whose outputs are masked off at unpadding, and the per-policy
+vmapped+scanned program is reused unchanged, so a 1-device mesh is
+bit-identical to the unsharded path (pinned by
+tests/test_lattice_sharded.py). ``mesh`` may be a Mesh, a device count
+(→ :func:`make_cell_mesh`), or None. Engines are cached across calls by
+``sim.engine.cached_engine`` keyed on the mesh identity, so repeat sharded
+calls re-trace zero times.
 """
 from __future__ import annotations
 
@@ -25,10 +36,28 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.core.channel import ChannelConfig
 from repro.core.pofl import DeviceData, POFLConfig
-from repro.sim.engine import SimEngine
+from repro.sim.engine import cached_engine
+
+
+def make_cell_mesh(n_devices: int | None = None) -> jax.sharding.Mesh:
+    """A 1-D ``("cells",)`` mesh over the first ``n_devices`` local devices.
+
+    ``None`` takes every visible device. On CPU CI, fake multi-device
+    semantics come from ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    (set before jax initializes).
+    """
+    devices = jax.devices()
+    n = len(devices) if n_devices is None else n_devices
+    if not 1 <= n <= len(devices):
+        raise ValueError(
+            f"mesh wants {n} devices but only {len(devices)} are visible "
+            "(on CPU, set XLA_FLAGS=--xla_force_host_platform_device_count)"
+        )
+    return jax.sharding.Mesh(np.asarray(devices[:n]), ("cells",))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,6 +130,7 @@ def run_lattice(
     channel_cfg: ChannelConfig | None = None,
     scenario: str = "static_rayleigh",
     scenario_params: dict | None = None,
+    mesh: jax.sharding.Mesh | int | None = None,
 ) -> LatticeRecords:
     """Run the full lattice; one jitted (vmap ∘ scan) program per policy.
 
@@ -114,8 +144,17 @@ def run_lattice(
         into the trial-batched grid), and ``data`` may carry heterogeneous
         shards (``DeviceData.n_samples``) — the Eq. 34/35/37 weights follow
         the true m_i/M in every cell.
+      mesh: shard the flattened cell axis over this ``jax.sharding.Mesh``
+        (axis name irrelevant to callers; inputs are placed with
+        ``NamedSharding(P(<first axis>))``). An int builds
+        ``make_cell_mesh(mesh)``. The grid is padded to a multiple of the
+        mesh size with dead cells that are dropped on unpadding; records,
+        order, and values are unchanged (a 1-device mesh is bit-identical
+        to ``mesh=None``).
     """
     base_cfg = base_cfg or POFLConfig(n_devices=data.n_devices)
+    if isinstance(mesh, int):
+        mesh = make_cell_mesh(mesh)
 
     t_ints = np.arange(spec.n_rounds, dtype=np.int32)
     if eval_fn is not None and spec.n_rounds:
@@ -131,34 +170,42 @@ def run_lattice(
         np.asarray(spec.seeds, np.int32),
         indexing="ij",
     )
-    noise_b = jnp.asarray(grid_n.ravel())
-    alpha_b = jnp.asarray(grid_a.ravel())
-    seed_b = jnp.asarray(grid_s.ravel())
+    cells = [grid_n.ravel(), grid_a.ravel(), grid_s.ravel()]
+    n_real = cells[0].size
+
+    if mesh is not None:
+        # pad the cell axis to a multiple of the mesh size with dead cells
+        # (repeats of the last real cell — same shapes, outputs discarded)
+        n_shards = int(np.asarray(mesh.devices).size)
+        pad = (-n_real) % n_shards
+        if pad:
+            cells = [np.concatenate([c, np.repeat(c[-1:], pad)]) for c in cells]
+        cell_sharding = NamedSharding(mesh, PartitionSpec(mesh.axis_names[0]))
+        noise_b, alpha_b, seed_b = (
+            jax.device_put(jnp.asarray(c), cell_sharding) for c in cells
+        )
+    else:
+        noise_b, alpha_b, seed_b = (jnp.asarray(c) for c in cells)
 
     per_policy = []
     for policy in spec.policies:
         cfg = dataclasses.replace(base_cfg, policy=policy, n_devices=data.n_devices)
-        engine = SimEngine(
+        engine = cached_engine(
             loss_fn, data, cfg,
             channel_cfg=channel_cfg,
             scenario=scenario,
             scenario_params=scenario_params,
             eval_fn=eval_fn,
+            mesh=mesh,
         )
-
-        def cell(noise_power, alpha, seed, _engine=engine):
-            state = _engine.init(params0, seed)
-            _, recs = _engine.scan_rounds(
-                state, jnp.asarray(t_ints), jnp.asarray(do_eval),
-                noise_power=noise_power, alpha=alpha,
-            )
-            return recs
-
-        recs = jax.jit(jax.vmap(cell))(noise_b, alpha_b, seed_b)
+        recs = engine.run_lattice_cells(
+            params0, t_ints, do_eval, noise_b, alpha_b, seed_b
+        )
         per_policy.append(recs)  # stays on device until the final stream-out
 
-    # single stream-out: device → host exactly once for the whole lattice
-    per_policy = jax.device_get(per_policy)
+    # single stream-out: device → host exactly once for the whole lattice,
+    # dropping any dead padding cells
+    per_policy = jax.tree.map(lambda a: a[:n_real], jax.device_get(per_policy))
     grid_shape = (len(spec.noise_powers), len(spec.alphas), len(spec.seeds))
 
     def gather(field: str, eval_only: bool) -> np.ndarray:

@@ -59,6 +59,9 @@ Data-heterogeneity presets (``make_partition(name, x, y, n_devices, ...)``):
     from Dir(β)·M, padded to a common length with ``DeviceData.n_samples``
     marking the valid prefixes (``partition_dirichlet_sized``) — the
     unbalanced-data regime of the Eq. 34/35/37 m_i/M weights.
+  * ``dirichlet_mixed`` — label-skew × size-skew composed: Dir(β) class
+    proportions over Dir(β_size)·M unequal shard sizes
+    (``partition_dirichlet_mixed``) — the fully-heterogeneous regime.
 """
 from __future__ import annotations
 
@@ -76,6 +79,7 @@ from repro.core.channel import (
 )
 from repro.data.partition import (
     partition_dirichlet,
+    partition_dirichlet_mixed,
     partition_dirichlet_sized,
     partition_iid,
     partition_noniid_shards,
@@ -272,7 +276,7 @@ def make_channel_process(name: str, cfg: ChannelConfig, **params):
 # data-heterogeneity presets
 # --------------------------------------------------------------------------
 
-PARTITIONS = ("iid", "shards", "dirichlet", "dirichlet_sized")
+PARTITIONS = ("iid", "shards", "dirichlet", "dirichlet_sized", "dirichlet_mixed")
 
 
 def make_partition(name: str, features, labels, n_devices: int, seed: int = 0, **kw):
@@ -285,4 +289,6 @@ def make_partition(name: str, features, labels, n_devices: int, seed: int = 0, *
         return partition_dirichlet(features, labels, n_devices, seed=seed, **kw)
     if name == "dirichlet_sized":
         return partition_dirichlet_sized(features, labels, n_devices, seed=seed, **kw)
+    if name == "dirichlet_mixed":
+        return partition_dirichlet_mixed(features, labels, n_devices, seed=seed, **kw)
     raise ValueError(f"unknown partition {name!r}; known: {PARTITIONS}")

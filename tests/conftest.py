@@ -1,0 +1,31 @@
+"""Shared fixtures: engine-cache hygiene.
+
+The cross-call engine cache (``repro.sim.engine``) is process-global, so a
+test asserting on ``engine_cache_stats()`` counters (or on which engine a
+call returns) would otherwise depend on which tests ran before it. Every
+test starts from an empty cache with zeroed counters; caching behavior is
+still fully exercised *within* each test (that is what the cache tests do).
+"""
+from __future__ import annotations
+
+import pytest
+
+from repro.sim import engine_cache_stats, reset_engine_cache
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _engine_cache_clean_at_session_start():
+    """Importing test modules (or plugins) must not populate the cache —
+    a dirty cache at collection time would mean import-time engine builds."""
+    stats = engine_cache_stats()
+    assert stats == {"hits": 0, "misses": 0, "size": 0}, (
+        f"engine cache dirty at session start: {stats}"
+    )
+    yield
+
+
+@pytest.fixture(autouse=True)
+def _fresh_engine_cache():
+    """Order-independence: every test sees an empty engine cache."""
+    reset_engine_cache()
+    yield

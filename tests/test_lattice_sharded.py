@@ -1,0 +1,218 @@
+"""Mesh-sharded scenario-lattice parity/property suite (ISSUE 3 tentpole pin).
+
+Contracts pinned here:
+
+  * a 1-device mesh is BIT-IDENTICAL to the unsharded path (same structured
+    records, same order) — always runs, any device count;
+  * an 8-fake-device mesh matches the unsharded path dtype-exactly, for
+    divisible and non-divisible (padded) grids — runs under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the dedicated CI
+    leg; skipped when fewer devices are visible);
+  * engine-cache keys distinguish meshed from unmeshed engines, and repeat
+    sharded ``run_lattice`` calls re-trace ZERO times.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import POFLConfig
+from repro.data import make_classification_dataset, partition_dirichlet_sized, partition_noniid_shards
+from repro.sim import (
+    LatticeRecords,
+    LatticeSpec,
+    cached_engine,
+    engine_cache_stats,
+    make_cell_mesh,
+    run_lattice,
+)
+
+N_VISIBLE = len(jax.devices())
+needs_8_devices = pytest.mark.skipif(
+    N_VISIBLE < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8",
+)
+
+_RECORD_FIELDS = ("e_com", "e_var", "grad_norm", "n_scheduled", "loss", "acc")
+
+
+def _loss_fn(params, x, y):
+    logits = x @ params["w"] + params["b"]
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    key = jax.random.PRNGKey(0)
+    x, y = make_classification_dataset("mnist_like", 640, key)
+    data = partition_noniid_shards(x, y, n_devices=8)
+    params0 = {"w": jnp.zeros((784, 10)), "b": jnp.zeros((10,))}
+
+    def ev(p):
+        logits = x[:200] @ p["w"] + p["b"]
+        return _loss_fn(p, x[:200], y[:200]), jnp.mean(
+            jnp.argmax(logits, -1) == y[:200]
+        )
+
+    return data, params0, ev
+
+
+def _assert_records_equal(a: LatticeRecords, b: LatticeRecords):
+    """Dtype-exact equality of the full structured output, order included."""
+    assert a.axes == b.axes
+    np.testing.assert_array_equal(a.eval_rounds, b.eval_rounds)
+    for f in _RECORD_FIELDS:
+        fa, fb = getattr(a, f), getattr(b, f)
+        assert fa.shape == fb.shape, f
+        assert fa.dtype == fb.dtype, f
+        np.testing.assert_array_equal(fa, fb, err_msg=f)
+
+
+def _sweep(setup, mesh, spec=None, **cfg_kw):
+    data, params0, ev = setup
+    spec = spec or LatticeSpec(
+        policies=("pofl", "channel"),
+        noise_powers=(1e-11, 1e-9),
+        seeds=(0, 1000, 2000),
+        n_rounds=4,
+        eval_every=2,
+    )
+    cfg = POFLConfig(n_devices=8, n_scheduled=3, **cfg_kw)
+    return run_lattice(
+        _loss_fn, data, params0, spec, base_cfg=cfg, eval_fn=ev, mesh=mesh
+    )
+
+
+# --------------------------------------------------------------------------
+# 1-device mesh: bit-identical, any environment
+# --------------------------------------------------------------------------
+
+
+def test_one_device_mesh_bit_identical(setup):
+    """CI-asserted acceptance: mesh of 1 device == unsharded, bit for bit."""
+    unsharded = _sweep(setup, mesh=None)
+    sharded = _sweep(setup, mesh=make_cell_mesh(1))
+    _assert_records_equal(unsharded, sharded)
+
+
+def test_mesh_int_shorthand_equals_mesh_object(setup):
+    """``mesh=N`` is sugar for ``mesh=make_cell_mesh(N)`` — and both resolve
+    to the same cached engine (same mesh identity)."""
+    spec = LatticeSpec(policies=("pofl",), seeds=(0, 1), n_rounds=3)
+    by_int = _sweep(setup, mesh=1, spec=spec)
+    by_mesh = _sweep(setup, mesh=make_cell_mesh(1), spec=spec)
+    _assert_records_equal(by_int, by_mesh)
+
+
+def test_make_cell_mesh_validates_device_count():
+    with pytest.raises(ValueError, match="devices"):
+        make_cell_mesh(N_VISIBLE + 1)
+    with pytest.raises(ValueError, match="devices"):
+        make_cell_mesh(0)
+    assert int(np.asarray(make_cell_mesh().devices).size) == N_VISIBLE
+
+
+# --------------------------------------------------------------------------
+# engine-cache keying + retrace guard
+# --------------------------------------------------------------------------
+
+
+def test_cache_keys_distinguish_meshed_engines(setup):
+    """Meshed and unmeshed engines must not collide; equal meshes (same
+    devices, same layout) must — two Mesh objects are one engine."""
+    data, _, _ = setup
+    cfg = POFLConfig(n_devices=8, n_scheduled=3)
+    plain = cached_engine(_loss_fn, data, cfg)
+    meshed = cached_engine(_loss_fn, data, cfg, mesh=make_cell_mesh(1))
+    assert meshed is not plain
+    # a *fresh* Mesh object over the same devices is the same engine
+    assert cached_engine(_loss_fn, data, cfg, mesh=make_cell_mesh(1)) is meshed
+    assert cached_engine(_loss_fn, data, cfg) is plain
+    if N_VISIBLE >= 2:
+        wider = cached_engine(_loss_fn, data, cfg, mesh=make_cell_mesh(2))
+        assert wider is not meshed and wider is not plain
+
+
+def test_repeat_sharded_call_zero_retraces(setup):
+    """Acceptance: repeat sharded run_lattice calls hit the cached engine's
+    lattice jit — zero new traces, pure cache hits."""
+    data, params0, ev = setup
+    mesh = make_cell_mesh(min(8, N_VISIBLE))
+    spec = LatticeSpec(policies=("pofl",), seeds=(0, 1, 2), n_rounds=3)
+    cfg = POFLConfig(n_devices=8, n_scheduled=3)
+
+    first = run_lattice(
+        _loss_fn, data, params0, spec, base_cfg=cfg, eval_fn=ev, mesh=mesh
+    )
+    engine = cached_engine(
+        _loss_fn, data, dataclasses.replace(cfg, policy="pofl"),
+        eval_fn=ev, mesh=mesh,
+    )
+    traces = engine.n_lattice_traces
+    assert traces >= 1
+    stats0 = engine_cache_stats()
+
+    second = run_lattice(
+        _loss_fn, data, params0, spec, base_cfg=cfg, eval_fn=ev, mesh=mesh
+    )
+    assert engine.n_lattice_traces == traces  # ZERO scan retraces
+    assert engine_cache_stats()["misses"] == stats0["misses"]
+    assert engine_cache_stats()["hits"] > stats0["hits"]
+    _assert_records_equal(first, second)
+
+
+# --------------------------------------------------------------------------
+# real multi-device semantics (8 fake CPU devices in CI)
+# --------------------------------------------------------------------------
+
+
+@needs_8_devices
+def test_eight_device_mesh_matches_unsharded(setup):
+    """Full parity suite on 8 fake devices: per-policy grid of 2 noise × 3
+    seeds = 6 cells padded to 8, compared field by field, dtype-exact."""
+    unsharded = _sweep(setup, mesh=None)
+    sharded = _sweep(setup, mesh=make_cell_mesh(8))
+    _assert_records_equal(unsharded, sharded)
+
+
+@needs_8_devices
+@pytest.mark.parametrize("n_seeds", [1, 5, 8, 11])
+def test_non_divisible_grids_roundtrip_padding(setup, n_seeds):
+    """Cell counts below, equal to, and not dividing the mesh size all
+    round-trip through pad/unpad with unchanged shapes, order, and values."""
+    spec = LatticeSpec(
+        policies=("pofl",),
+        seeds=tuple(range(0, 1000 * n_seeds, 1000)),
+        n_rounds=3,
+    )
+    unsharded = _sweep(setup, mesh=None, spec=spec)
+    sharded = _sweep(setup, mesh=make_cell_mesh(8), spec=spec)
+    assert sharded.e_com.shape == (1, 1, 1, n_seeds, 3)
+    _assert_records_equal(unsharded, sharded)
+
+
+@needs_8_devices
+def test_sharded_hetero_churn_lattice_finite(setup):
+    """Scenario composition survives sharding: Dirichlet-sized shards under
+    churn availability, sharded over 8 devices — finite records, clamped
+    |S|, matches the unsharded run exactly."""
+    _, params0, _ = setup
+    key = jax.random.PRNGKey(1)
+    x, y = make_classification_dataset("mnist_like", 640, key)
+    data = partition_dirichlet_sized(x, y, n_devices=8, beta=0.4, seed=0)
+    spec = LatticeSpec(policies=("pofl", "importance"), seeds=(0, 1, 2), n_rounds=5)
+    kw = dict(
+        base_cfg=POFLConfig(n_devices=8, n_scheduled=3),
+        scenario="churn",
+        scenario_params={"p_depart": 0.3, "p_arrive": 0.2},
+    )
+    unsharded = run_lattice(_loss_fn, data, params0, spec, **kw)
+    sharded = run_lattice(_loss_fn, data, params0, spec, mesh=8, **kw)
+    _assert_records_equal(unsharded, sharded)
+    assert np.isfinite(sharded.e_com).all()
+    assert (sharded.n_scheduled <= 3).all() and sharded.n_scheduled.min() < 3

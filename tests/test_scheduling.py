@@ -1,4 +1,5 @@
-"""Scheduling tests: Eq. 34/35 optimality, Lemma 2 unbiasedness (property-based),
+"""Scheduling tests: Eq. 34/35 optimality, Lemma 2 unbiasedness (property-based,
+including under dropout/churn availability with Dirichlet-sized shards),
 Eq. 36/37 sampling, and the PO-FL-B Horvitz–Thompson variant."""
 import jax
 import jax.numpy as jnp
@@ -9,6 +10,10 @@ pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
 from hypothesis import given, settings, strategies as st
 
 from repro.core import scheduling
+from repro.core.channel import ChannelConfig
+from repro.core.numerics import safe_div
+from repro.data import dirichlet_sizes
+from repro.sim import make_channel_process
 
 
 def _inputs(key, n=12, dim=128):
@@ -207,6 +212,83 @@ def test_property_aggregation_unbiased_nonuniform_frac(seed, n, s):
     pi = scheduling.bernoulli_inclusion_probs(probs, s)
     rho = scheduling.bernoulli_weights(pi, frac)
     est_ht = np.asarray(jnp.sum((pi * rho)[:, None] * g, axis=0))
+    np.testing.assert_allclose(est_ht, target, rtol=1e-3, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(4, 12),
+    s=st.integers(1, 4),
+    scenario=st.sampled_from(["dropout", "churn"]),
+)
+def test_property_unbiased_and_finite_under_availability(seed, n, s, scenario):
+    """Extends ``test_property_aggregation_unbiased_nonuniform_frac`` beyond
+    static availability: devices drop (i.i.d. ``dropout``) or churn (sticky
+    Markov ``churn``) and shards are Dirichlet-*sized* (non-uniform m_i/M).
+    Conditional on the realized availability mask, aggregation must stay
+    unbiased for the available-population target Σ_{i avail} (m_i/M)·g_i —
+    exact expectations, no Monte Carlo — and every weight must stay finite
+    and exactly zero off the available set (a prob-0 device that slipped a
+    positive weight would chase offline devices, the artifact the dropout
+    scenario exists to rule out).
+    """
+    key = jax.random.PRNGKey(seed)
+    k_ch, k_roll, k_g, k_q = jax.random.split(key, 4)
+
+    # dirichlet_sized shard fractions (Σ m_i = 40n, every m_i ≥ 1)
+    sizes = dirichlet_sizes(40 * n, n, beta=0.4, seed=seed % 100000)
+    frac = jnp.asarray(sizes / sizes.sum(), jnp.float32)
+
+    params = (
+        {"p_drop": 0.4} if scenario == "dropout"
+        else {"p_depart": 0.3, "p_arrive": 0.3}
+    )
+    proc = make_channel_process(scenario, ChannelConfig(n_devices=n), **params)
+    state = proc.init(k_ch)
+    for k in jax.random.split(k_roll, 4):  # roll so the churn chain trends
+        state, h, avail = proc.step(state, k)
+
+    # the exact masking scheduling_stage applies for can_drop scenarios
+    norms = jnp.abs(jax.random.normal(k_q, (n,))) + 0.1
+    probs = scheduling.scheduling_probs(
+        "pofl", norms, jnp.ones(n), jnp.abs(h), frac, 64, 0.1, 1.0, 1e-9
+    )
+    masked = probs * avail
+    probs_a = safe_div(masked, jnp.sum(masked))
+
+    g = jax.random.normal(k_g, (n, 5))
+    target = np.asarray(jnp.sum((avail * frac)[:, None] * g, axis=0))
+
+    if int(avail.sum()) == 0:
+        # an all-offline round schedules nothing and weighs nothing
+        np.testing.assert_array_equal(np.asarray(probs_a), 0.0)
+        return
+
+    # Eq. 37 with |S| = 1: exact enumeration over the (available) draw
+    est = np.zeros(5)
+    for i in range(n):
+        if float(probs_a[i]) == 0.0:
+            continue  # unavailable → never drafted (sampler masks prob 0)
+        sched = scheduling.Schedule(
+            indices=jnp.array([i], jnp.int32),
+            step_probs=probs_a[i][None],
+            mask=jnp.zeros(n).at[i].set(1.0),
+        )
+        rho = scheduling.aggregation_weights(sched, probs_a, frac, 1)
+        assert bool(jnp.isfinite(rho).all())
+        np.testing.assert_array_equal(np.asarray(rho) * (1.0 - np.asarray(avail)), 0.0)
+        est += float(probs_a[i]) * np.asarray(
+            jnp.sum((rho * sched.mask)[:, None] * g, axis=0)
+        )
+    np.testing.assert_allclose(est, target, rtol=1e-4, atol=1e-5)
+
+    # Horvitz–Thompson (PO-FL-B): E[mask_i] = π_i, analytic mean over the
+    # available set (off-availability π floors at EPS but is never drawn)
+    pi = scheduling.bernoulli_inclusion_probs(probs_a, s)
+    rho_ht = scheduling.bernoulli_weights(pi, frac)
+    assert bool(jnp.isfinite(rho_ht).all())
+    est_ht = np.asarray(jnp.sum((avail * pi * rho_ht)[:, None] * g, axis=0))
     np.testing.assert_allclose(est_ht, target, rtol=1e-3, atol=1e-5)
 
 

@@ -17,6 +17,7 @@ from repro.data import (
     dirichlet_sizes,
     make_classification_dataset,
     partition_dirichlet,
+    partition_dirichlet_mixed,
     partition_dirichlet_sized,
     partition_noniid_shards,
 )
@@ -627,6 +628,85 @@ def test_hetero_padding_never_sampled():
         local_gradient_stage(
             loss, empty, cfg, {"w": jnp.zeros((d, 3))}, jax.random.PRNGKey(0)
         )
+
+
+def test_dirichlet_mixed_pins_sizes_and_label_histograms():
+    """dirichlet_mixed = dirichlet × dirichlet_sized in one preset: for a
+    fixed seed both the shard sizes and the per-device label histograms are
+    pinned, both skews are genuinely present, and every sample is used
+    exactly once across the valid prefixes."""
+    from repro.sim import make_partition
+
+    key = jax.random.PRNGKey(0)
+    x, y = make_classification_dataset("mnist_like", 2000, key)
+    dd = make_partition(
+        "dirichlet_mixed", x, y, n_devices=10, beta=0.3, beta_size=0.4, seed=0
+    )
+    # pinned shard sizes (Dir(0.4)·2000, largest-remainder, min 1/device)
+    np.testing.assert_array_equal(
+        dd.n_samples, [153, 1, 365, 135, 102, 484, 234, 502, 23, 1]
+    )
+    assert dd.features.shape == (10, 502, 784)
+    np.testing.assert_allclose(
+        np.asarray(dd.data_frac), np.asarray(dd.n_samples) / 2000.0, rtol=1e-6
+    )
+    # pinned device-0 label histogram (Dir(0.3) label proportions)
+    hist0 = np.bincount(np.asarray(dd.labels[0][:153]), minlength=10)
+    np.testing.assert_array_equal(hist0, [0, 3, 14, 89, 3, 6, 0, 0, 33, 5])
+
+    # both skews present: sizes far from equal, labels far from uniform
+    sizes = np.asarray(dd.n_samples)
+    assert sizes.max() > 2 * sizes.min() and sizes.sum() == 2000
+    top_fracs = []
+    for d in range(10):
+        lab = np.asarray(dd.labels[d][: sizes[d]])
+        counts = np.bincount(lab, minlength=10)
+        top_fracs.append(counts.max() / counts.sum())
+    assert np.mean(top_fracs) > 0.35  # vs ≈0.1–0.2 for uniform labels
+
+    # every sample used exactly once across valid prefixes (wrap-padding
+    # reuses only a device's own rows, past its n_samples prefix)
+    valid = np.concatenate(
+        [np.asarray(dd.features[d][: sizes[d]]) for d in range(10)]
+    )
+    assert np.unique(valid, axis=0).shape[0] == 2000
+    part_classes, part_counts = np.unique(
+        np.concatenate([np.asarray(dd.labels[d][: sizes[d]]) for d in range(10)]),
+        return_counts=True,
+    )
+    global_classes, global_counts = np.unique(np.asarray(y), return_counts=True)
+    np.testing.assert_array_equal(part_classes, global_classes)
+    np.testing.assert_array_equal(part_counts, global_counts)
+
+
+@pytest.mark.parametrize(
+    "scenario,params",
+    [("dropout", {"p_drop": 0.5}), ("churn", {"p_depart": 0.3, "p_arrive": 0.2})],
+)
+def test_hetero_shards_under_availability_stay_finite(setup, scenario, params):
+    """Dirichlet-sized (unequal m_i/M) shards composed with availability
+    scenarios: trajectory, metrics and realized |S| stay finite/clamped —
+    the engine-level counterpart of the scheduling-level property test
+    (tests/test_scheduling.py::test_property_unbiased_and_finite_under_availability)."""
+    _, params0, _ = setup
+    key = jax.random.PRNGKey(0)
+    x, y = make_classification_dataset("mnist_like", 1200, key)
+    data = partition_dirichlet_sized(x, y, n_devices=12, beta=0.4, seed=0)
+    cfg = POFLConfig(n_devices=12, n_scheduled=4, policy="pofl", seed=0)
+    engine = SimEngine(
+        _loss_fn, data, cfg, scenario=scenario, scenario_params=params
+    )
+    state = engine.init(params0, 0)
+    final, recs = jax.jit(
+        lambda s: engine.scan_rounds(
+            s, jnp.arange(30, dtype=jnp.int32), jnp.zeros(30, bool)
+        )
+    )(state)
+    assert np.isfinite(np.asarray(final.params["w"])).all()
+    assert np.isfinite(np.asarray(recs.e_com)).all()
+    assert np.isfinite(np.asarray(recs.e_var)).all()
+    n_sched = np.asarray(recs.n_scheduled)
+    assert (n_sched <= 4).all() and n_sched.min() < 4  # clamping fired
 
 
 # --------------------------------------------------------------------------
