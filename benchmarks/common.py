@@ -159,6 +159,35 @@ def run_policies(
     }
 
 
+# the reduced fig4-style sweep benchmarks/run.py times for BENCH_sim.json —
+# ONE definition shared by the in-process bench and the multi-host bench
+# workers spawned by `repro.launch.distributed` (--hosts N), so the two
+# timings measure the identical workload
+BENCH_SWEEP_KW = dict(n_rounds=30, n_trials=3, n_scheduled=10, eval_every=10)
+
+
+def bench_task() -> Task:
+    """The task the sim-lattice throughput bench runs on."""
+    return build_task("mnist", n_devices=20, n_train=2000)
+
+
+def bench_sweep(
+    backend: str = "jnp", mesh=None, n_rounds: int | None = None, task=None
+):
+    """Run the reduced benchmark sweep once → ``(results, seconds, cells)``.
+
+    ``mesh`` may be any ``run_policies`` mesh — including a process-spanning
+    global mesh inside a ``jax.distributed`` worker (where every host runs
+    this same call and gets the same timing shape).
+    """
+    task = task or bench_task()
+    kw = dict(BENCH_SWEEP_KW, policies=POLICIES, backend=backend)
+    if n_rounds is not None:
+        kw["n_rounds"] = n_rounds
+    out, seconds = timed(run_policies, task, mesh=mesh, **kw)
+    return out, seconds, len(POLICIES) * kw["n_trials"]
+
+
 def run_policies_loop(
     task: Task,
     policies=POLICIES,

@@ -9,18 +9,41 @@ Prints ``name,us_per_call,derived`` CSV lines (reduced settings — pass
   cells, n_rounds, n_devices       — sweep size (cells = policies × trials)
   backend                          — aggregation backend ("jnp"/"pallas_fused")
   mesh_devices                     — devices the cell axis was sharded over
-                                     (1 = unsharded run)
+                                     (1 = unsharded run; with --hosts N this
+                                     is the GLOBAL process-spanning count)
+  n_hosts                          — jax.distributed process count the
+                                     lattice ran across (1 = single-host)
   lattice_seconds / loop_seconds   — lattice vs cached-engine run_pofl loop
+                                     (the loop baseline always runs
+                                     single-host, unsharded)
   speedup                          — loop_seconds / lattice_seconds
   cells_per_sec, round_cells_per_sec
   per_device_cells_per_sec         — cells_per_sec / mesh_devices (the
                                      sharding-efficiency trajectory number)
-  engine_cache_hits / _misses      — cross-call engine cache counters
+  per_host_cells_per_sec           — cells_per_sec / n_hosts (the multi-host
+                                     scaling trajectory number)
+  engine_cache_hits / _misses      — cross-call engine cache counters (with
+                                     --hosts N they cover the in-process loop
+                                     baseline only; the lattice engines live
+                                     in the worker processes)
 
 ``--backend {jnp,pallas_fused}`` selects the aggregation backend and
 ``--mesh N`` shards the lattice's cell axis over the first N local devices
 (on CPU, export ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
-first), both threaded through benchmarks/common.py.
+first), both threaded through benchmarks/common.py. ``--mesh N`` exceeding
+the visible local device count is a HARD ERROR (exit 2) — never a silent
+fall back to fewer devices.
+
+``--hosts H`` (H > 1) measures the MULTI-HOST lattice instead: the sweep is
+dispatched through ``repro.launch.distributed`` as H coordinated
+``jax.distributed`` processes × (mesh/H) fake CPU devices each (no XLA_FLAGS
+needed — the launcher sets each worker's pool), e.g.
+
+    PYTHONPATH=src python -m benchmarks.run --hosts 2 --mesh 8
+
+times the identical ``benchmarks.common.bench_sweep`` workload on a
+2-process × 4-devices-per-process global mesh; ``--mesh`` must divide evenly
+by ``--hosts`` (default: one device per host).
 """
 from __future__ import annotations
 
@@ -79,7 +102,7 @@ def _kernel_micro():
     return f"max_abs_err={max(err_a, err_f, err_s):.2e}"
 
 
-def _bench_sim(backend: str = "jnp", mesh_devices: int = 0):
+def _bench_sim(backend: str = "jnp", mesh_devices: int = 0, n_hosts: int = 1):
     """Reduced fig4-style sweep (5 policies × 3 trials) through sim.lattice
     vs the cached-engine one-run_pofl-per-cell loop → BENCH_sim.json.
 
@@ -87,38 +110,55 @@ def _bench_sim(backend: str = "jnp", mesh_devices: int = 0):
     cache + single-static-length active-mask scan), so the speedup is the
     honest lattice-vs-loop number, not lattice-vs-cold-recompiles.
     ``mesh_devices > 0`` shards the lattice's cell axis over that many local
-    devices; the loop baseline always runs unsharded.
+    devices; ``n_hosts > 1`` instead runs the lattice across that many
+    coordinated ``jax.distributed`` processes via the
+    ``repro.launch.distributed`` launcher (``mesh_devices`` then counts the
+    GLOBAL devices). The loop baseline always runs single-host, unsharded.
     """
     from benchmarks.common import (
-        POLICIES, build_task, run_policies, run_policies_loop, timed,
+        BENCH_SWEEP_KW, POLICIES, bench_sweep, bench_task, run_policies_loop,
+        timed,
     )
     from repro.sim import engine_cache_stats, make_cell_mesh, reset_engine_cache
 
-    mesh = make_cell_mesh(mesh_devices) if mesh_devices else None
-    n_mesh = 1 if mesh is None else mesh_devices
-    task = build_task("mnist", n_devices=20, n_train=2000)
-    kw = dict(
-        policies=POLICIES, n_rounds=30, n_trials=3, n_scheduled=10,
-        eval_every=10, backend=backend,
-    )
-    _, t_lattice = timed(run_policies, task, mesh=mesh, **kw)
+    n_rounds = BENCH_SWEEP_KW["n_rounds"]
+    task = bench_task()  # shared between the lattice sweep and loop baseline
+    if n_hosts > 1:
+        from repro.launch.distributed import run_bench
+
+        total = mesh_devices or n_hosts
+        worker = run_bench(
+            n_procs=n_hosts,
+            devices_per_proc=total // n_hosts,
+            backend=backend,
+            n_rounds=n_rounds,
+        )
+        t_lattice = worker["lattice_seconds"]
+        cells = worker["cells"]
+        n_mesh = worker["mesh_devices"]
+    else:
+        mesh = make_cell_mesh(mesh_devices) if mesh_devices else None
+        n_mesh = 1 if mesh is None else mesh_devices
+        _, t_lattice, cells = bench_sweep(backend=backend, mesh=mesh, task=task)
     reset_engine_cache()
+    kw = dict(BENCH_SWEEP_KW, policies=POLICIES, backend=backend)
     _, t_loop = timed(run_policies_loop, task, **kw)
     cache = engine_cache_stats()
 
-    cells = len(POLICIES) * kw["n_trials"]
     payload = {
         "cells": cells,
-        "n_rounds": kw["n_rounds"],
+        "n_rounds": n_rounds,
         "n_devices": 20,
         "backend": backend,
         "mesh_devices": n_mesh,
+        "n_hosts": n_hosts,
         "lattice_seconds": round(t_lattice, 3),
         "loop_seconds": round(t_loop, 3),
         "speedup": round(t_loop / t_lattice, 2),
         "cells_per_sec": round(cells / t_lattice, 3),
-        "round_cells_per_sec": round(cells * kw["n_rounds"] / t_lattice, 1),
+        "round_cells_per_sec": round(cells * n_rounds / t_lattice, 1),
         "per_device_cells_per_sec": round(cells / t_lattice / n_mesh, 3),
+        "per_host_cells_per_sec": round(cells / t_lattice / n_hosts, 3),
         "engine_cache_hits": cache["hits"],
         "engine_cache_misses": cache["misses"],
     }
@@ -140,9 +180,37 @@ def main(argv: list[str] | None = None) -> None:
         "--mesh", type=int, default=0, metavar="N",
         help="shard the sim-lattice bench's cell axis over the first N local "
         "devices (0 = unsharded; on CPU set "
-        "XLA_FLAGS=--xla_force_host_platform_device_count=N first)",
+        "XLA_FLAGS=--xla_force_host_platform_device_count=N first); with "
+        "--hosts H this is the GLOBAL device count split H ways",
+    )
+    parser.add_argument(
+        "--hosts", type=int, default=1, metavar="H",
+        help="run the sim-lattice bench across H coordinated jax.distributed "
+        "processes via repro.launch.distributed (1 = in-process)",
     )
     args = parser.parse_args(argv)
+
+    # validate the topology UP FRONT: a --mesh that cannot be honored must
+    # abort the whole run (exit 2), not degrade into a CSV ERROR line while
+    # every other benchmark silently proceeds without BENCH_sim.json
+    if args.hosts < 1:
+        parser.error(f"--hosts must be >= 1 (got {args.hosts})")
+    if args.mesh < 0:
+        parser.error(f"--mesh must be >= 0 (got {args.mesh})")
+    if args.hosts == 1 and args.mesh:
+        import jax
+
+        n_local = len(jax.devices())
+        if args.mesh > n_local:
+            parser.error(
+                f"--mesh {args.mesh} exceeds the {n_local} visible local "
+                "device(s); on CPU set "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count={args.mesh}"
+            )
+    if args.hosts > 1 and (args.mesh or args.hosts) % args.hosts:
+        parser.error(
+            f"--mesh {args.mesh} must divide evenly across --hosts {args.hosts}"
+        )
 
     from benchmarks import (
         fig3_single_device,
@@ -157,9 +225,12 @@ def main(argv: list[str] | None = None) -> None:
     _run("kernels_microbench", _kernel_micro, lambda d: d)
     _run(
         "sim_lattice",
-        lambda: _bench_sim(backend=args.backend, mesh_devices=args.mesh),
-        lambda d: "cells/s=%.2f speedup=%.1fx backend=%s mesh=%d" % (
+        lambda: _bench_sim(
+            backend=args.backend, mesh_devices=args.mesh, n_hosts=args.hosts
+        ),
+        lambda d: "cells/s=%.2f speedup=%.1fx backend=%s mesh=%d hosts=%d" % (
             d["cells_per_sec"], d["speedup"], d["backend"], d["mesh_devices"],
+            d["n_hosts"],
         ),
     )
     _run(

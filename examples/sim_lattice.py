@@ -10,6 +10,15 @@ express). ``--mesh N`` shards the 8-cell-per-policy axis over N devices
     PYTHONPATH=src python examples/sim_lattice.py [--backend pallas_fused]
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/sim_lattice.py --mesh 8
+
+``--distributed`` initializes ``jax.distributed`` from the ``REPRO_DIST_*``
+env contract and shards the cell axis over the GLOBAL (process-spanning)
+device list — run it under the local launcher (2 hosts × 4 fake CPU devices
+each; every host prints the same gathered records):
+
+    PYTHONPATH=src python -m repro.launch.distributed \
+        --procs 2 --devices-per-proc 4 -- \
+        python examples/sim_lattice.py --distributed
 """
 import argparse
 
@@ -19,7 +28,14 @@ import numpy as np
 from repro.core.pofl import BACKENDS, POFLConfig
 from repro.data.synthetic import make_classification_dataset
 from repro.models import small
-from repro.sim import LatticeSpec, make_cell_mesh, make_partition, run_lattice
+from repro.sim import (
+    LatticeSpec,
+    initialize_distributed,
+    make_cell_mesh,
+    make_global_cell_mesh,
+    make_partition,
+    run_lattice,
+)
 
 
 def main(argv=None):
@@ -35,8 +51,25 @@ def main(argv=None):
         "(0 = unsharded; on CPU set "
         "XLA_FLAGS=--xla_force_host_platform_device_count=N first)",
     )
+    parser.add_argument(
+        "--distributed", action="store_true",
+        help="initialize jax.distributed from the REPRO_DIST_* env contract "
+        "and shard the cell axis over ALL global devices (see "
+        "repro.launch.distributed)",
+    )
+    parser.add_argument(
+        "--rounds", type=int, default=30, metavar="T",
+        help="rounds per cell (shrink for smoke runs)",
+    )
     args = parser.parse_args(argv)
-    mesh = make_cell_mesh(args.mesh) if args.mesh else None
+
+    if args.distributed:
+        # must precede the first device query; a missing env contract just
+        # degrades to a single-process run over the local devices
+        initialize_distributed()
+        mesh = make_global_cell_mesh(args.mesh or None)  # --mesh counts GLOBAL devices here
+    else:
+        mesh = make_cell_mesh(args.mesh) if args.mesh else None
 
     key = jax.random.PRNGKey(0)
     k_train, k_test, k_init = jax.random.split(key, 3)
@@ -52,7 +85,7 @@ def main(argv=None):
         policies=("pofl", "importance", "channel"),
         noise_powers=(1e-11, 1e-9),
         seeds=(0, 1000, 2000, 3000),
-        n_rounds=30,
+        n_rounds=args.rounds,
         eval_every=10,
     )
     records = run_lattice(
@@ -64,7 +97,13 @@ def main(argv=None):
         mesh=mesh,
     )
 
-    shard_note = f", cells sharded over {args.mesh} devices" if mesh else ""
+    if mesh is None:
+        shard_note = ""
+    else:
+        n_dev = int(np.asarray(mesh.devices).size)
+        shard_note = f", cells sharded over {n_dev} devices"
+        if args.distributed:
+            shard_note += f" ({jax.process_count()} hosts)"
     print(f"lattice: {spec.n_cells} cells × {spec.n_rounds} rounds "
           f"(eval rounds {records.eval_rounds.tolist()}){shard_note}")
     for policy in spec.policies:

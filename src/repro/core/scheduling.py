@@ -42,13 +42,13 @@ def pofl_q(
       data_frac:  (N,) m_i / M.
     """
     v_g_tilde = jnp.sum(data_frac * grad_vars)
-    com_term = (
-        (1.0 + alpha)
-        * v_g_tilde
-        * dim
-        * noise_power
-        * data_frac**2
-        / (tx_power * eps_guard(h_abs) ** 2)
+    # guard the DENOMINATOR, not |h|: eps_guard(h)**2 underflows to exactly 0
+    # in float32 for |h| ≲ 1e-19, which turns a deep fade into inf/NaN probs.
+    # For every physical |h| (h² ≥ EPS) this is bit-identical to dividing by
+    # tx_power·|h|² — pinned trajectories are unchanged.
+    com_term = safe_div(
+        (1.0 + alpha) * v_g_tilde * dim * noise_power * data_frac**2,
+        tx_power * h_abs**2,
     )
     var_term = (1.0 + 1.0 / alpha) * data_frac**2 * grad_norms**2
     return jnp.sqrt(com_term + var_term)

@@ -1,0 +1,456 @@
+"""Local multi-process launcher for ``jax.distributed`` lattice runs.
+
+Spawns N coordinated worker processes ON THIS MACHINE — a shared coordinator
+address on localhost, a distinct process id per worker, and a per-worker
+``XLA_FLAGS=--xla_force_host_platform_device_count=K`` fake CPU device pool —
+so the multi-host lattice path (``repro.sim.multihost`` + ``run_lattice``
+over a :func:`~repro.sim.multihost.make_global_cell_mesh`) runs end-to-end on
+one CPU box. That makes multi-host a CI-testable code path instead of a
+cluster-only one: tests/test_multihost_lattice.py drives this launcher via
+``subprocess`` and asserts the 2-process × 4-fake-device lattice is
+dtype-exact against the in-process single-host run of the same spec.
+
+Worker contract (written into each child's environment — real multi-host
+deployments export the same three variables per host instead):
+
+    REPRO_DIST_COORDINATOR   host:port of process 0's coordination service
+    REPRO_DIST_NUM_PROCESSES total process count
+    REPRO_DIST_PROCESS_ID    this process's rank
+
+Usage (CPU CI / laptop):
+
+    # built-in parity workload: 2 hosts × 4 fake devices, records → npz
+    python -m repro.launch.distributed --procs 2 --devices-per-proc 4 \\
+        --workload parity --out /tmp/records.npz
+
+    # multihost throughput bench (benchmarks/run.py --hosts N calls this)
+    python -m repro.launch.distributed --procs 2 --devices-per-proc 4 \\
+        --workload bench --out /tmp/bench.json
+
+    # any script that calls sim.initialize_distributed() itself
+    python -m repro.launch.distributed --procs 2 --devices-per-proc 4 \\
+        -- python examples/sim_lattice.py --distributed
+
+Workers force ``JAX_PLATFORMS=cpu``: this launcher exists for the
+fake-device CPU story; real accelerator pods bring their own process
+launcher (SLURM/GKE) and only need the env contract above.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import re
+import socket
+import subprocess
+import sys
+
+import numpy as np
+
+from repro.sim.engine import RoundRecord
+from repro.sim.multihost import (
+    ENV_COORDINATOR,
+    ENV_NUM_PROCESSES,
+    ENV_PROCESS_ID,
+)
+
+# the canonical per-round record fields (one source: the engine's RoundRecord)
+_RECORD_FIELDS = RoundRecord._fields
+_DEVICE_COUNT_FLAG = re.compile(r"--xla_force_host_platform_device_count=\S+\s*")
+
+
+def find_free_port() -> int:
+    """Bind-and-release a localhost TCP port for the coordinator."""
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+@dataclasses.dataclass
+class WorkerResult:
+    process_id: int
+    returncode: int
+    output: str  # merged stdout+stderr
+
+
+def worker_env(
+    coordinator: str,
+    num_processes: int,
+    process_id: int,
+    devices_per_proc: int,
+    base_env: dict | None = None,
+) -> dict:
+    """Environment for one spawned worker: the ``REPRO_DIST_*`` contract plus
+    a fresh fake-device pool (any inherited device-count flag is stripped —
+    the child's pool must be exactly ``devices_per_proc``) and import roots
+    matching the parent (``repro``'s src dir + the parent cwd, so workload
+    code resolves ``benchmarks``/``examples`` the way the parent would)."""
+    env = dict(os.environ if base_env is None else base_env)
+    env[ENV_COORDINATOR] = coordinator
+    env[ENV_NUM_PROCESSES] = str(num_processes)
+    env[ENV_PROCESS_ID] = str(process_id)
+    inherited = _DEVICE_COUNT_FLAG.sub("", env.get("XLA_FLAGS", "")).strip()
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={devices_per_proc}"
+        + (f" {inherited}" if inherited else "")
+    )
+    env["JAX_PLATFORMS"] = "cpu"
+    import repro
+
+    # namespace-package-safe (repro has no __init__.py, so __file__ is None)
+    src_root = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
+    roots = [src_root, os.getcwd()]
+    if env.get("PYTHONPATH"):
+        roots.append(env["PYTHONPATH"])
+    env["PYTHONPATH"] = os.pathsep.join(roots)
+    return env
+
+
+def spawn_local(
+    worker_argv: list[str],
+    n_procs: int = 2,
+    devices_per_proc: int = 4,
+    timeout: float = 900.0,
+    base_env: dict | None = None,
+) -> list[WorkerResult]:
+    """Run ``worker_argv`` as ``n_procs`` coordinated local processes.
+
+    Every worker gets the same argv and the per-rank env contract; the call
+    blocks until all exit. ``timeout`` is one ABSOLUTE deadline for the whole
+    topology (workers run concurrently, so a wedged barrier costs one
+    timeout, not one per rank); stragglers past it are killed with their
+    output preserved. Results come back in rank order; nothing is raised on
+    failure — see :func:`run_workers` for the raising wrapper.
+    """
+    import tempfile
+    import time
+
+    coordinator = f"127.0.0.1:{find_free_port()}"
+    # build every env BEFORE the first spawn: a partial spawn would orphan
+    # rank 0 blocking forever on the coordination barrier for ranks that
+    # were never started
+    envs = [
+        worker_env(coordinator, n_procs, pid, devices_per_proc, base_env)
+        for pid in range(n_procs)
+    ]
+    # each worker streams into its own temp file, never a pipe: sequential
+    # pipe draining would wedge the topology as soon as one rank fills the
+    # 64KB pipe buffer while an earlier rank still runs (ranks block on
+    # each other through collectives, so output must never backpressure)
+    outs = [tempfile.TemporaryFile(mode="w+") for _ in envs]
+    procs = [
+        subprocess.Popen(
+            worker_argv, env=env, stdout=f, stderr=subprocess.STDOUT, text=True,
+        )
+        for env, f in zip(envs, outs)
+    ]
+    deadline = time.monotonic() + timeout
+    killed = set()
+    try:
+        for pid, proc in enumerate(procs):
+            try:
+                proc.wait(timeout=max(0.0, deadline - time.monotonic()))
+            except subprocess.TimeoutExpired:
+                proc.kill()
+                proc.wait()
+                killed.add(pid)
+    finally:
+        for proc in procs:
+            if proc.poll() is None:
+                proc.kill()
+                proc.wait()
+    results = []
+    for pid, (proc, f) in enumerate(zip(procs, outs)):
+        f.seek(0)
+        out = f.read()
+        f.close()
+        if pid in killed:
+            out += f"\n[launcher] killed at the {timeout}s deadline"
+        results.append(WorkerResult(pid, -9 if pid in killed else proc.returncode, out))
+    return results
+
+
+def run_workers(
+    worker_argv: list[str],
+    n_procs: int = 2,
+    devices_per_proc: int = 4,
+    timeout: float = 900.0,
+) -> list[WorkerResult]:
+    """:func:`spawn_local` that raises ``RuntimeError`` (with output tails)
+    when any worker exits nonzero — the launcher must never report success
+    over a half-failed topology."""
+    results = spawn_local(worker_argv, n_procs, devices_per_proc, timeout)
+    failed = [r for r in results if r.returncode != 0]
+    if failed:
+        tails = "\n".join(
+            f"--- worker {r.process_id} (rc={r.returncode}) ---\n{r.output[-4000:]}"
+            for r in failed
+        )
+        raise RuntimeError(
+            f"{len(failed)}/{len(results)} distributed workers failed:\n{tails}"
+        )
+    return results
+
+
+# --------------------------------------------------------------------------
+# LatticeRecords ↔ npz (the parity harness compares across processes)
+# --------------------------------------------------------------------------
+
+
+def save_records(path: str, records, meta: dict) -> None:
+    """Persist a ``LatticeRecords`` (+ run metadata) to one ``.npz``."""
+    np.savez(
+        path,
+        __axes__=json.dumps(records.axes),
+        __meta__=json.dumps(meta),
+        eval_rounds=records.eval_rounds,
+        **{f: getattr(records, f) for f in _RECORD_FIELDS},
+    )
+
+
+def load_records(path: str):
+    """Inverse of :func:`save_records` → ``(LatticeRecords, meta)``."""
+    from repro.sim.lattice import LatticeRecords
+
+    with np.load(path) as z:
+        axes = json.loads(str(z["__axes__"]))
+        meta = json.loads(str(z["__meta__"]))
+        records = LatticeRecords(
+            axes=axes,
+            eval_rounds=z["eval_rounds"],
+            **{f: z[f] for f in _RECORD_FIELDS},
+        )
+    return records, meta
+
+
+# --------------------------------------------------------------------------
+# the parity workload — ONE task definition shared by the subprocess workers
+# and the in-process reference run, so the harness compares like for like
+# --------------------------------------------------------------------------
+
+
+def _parity_loss_fn(params, x, y):
+    import jax
+    import jax.numpy as jnp
+
+    logits = x @ params["w"] + params["b"]
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def parity_spec(n_rounds: int = 4):
+    """The pinned 2-policy × 2-noise × 3-seed grid (6 cells per policy —
+    deliberately NOT a multiple of the 8-device CI topology, so the parity
+    run exercises dead-cell padding across the process boundary)."""
+    from repro.sim.lattice import LatticeSpec
+
+    return LatticeSpec(
+        policies=("pofl", "channel"),
+        noise_powers=(1e-11, 1e-9),
+        alphas=(0.1,),
+        seeds=(0, 1000, 2000),
+        n_rounds=n_rounds,
+        eval_every=2,
+    )
+
+
+def run_parity_lattice(mesh=None, n_rounds: int = 4):
+    """Run the parity workload twice on one engine → ``(records, meta)``.
+
+    The second call must re-trace nothing (``n_lattice_traces`` flat) — the
+    acceptance retrace guard runs INSIDE the worker topology, where the
+    trace is the expensive multi-process SPMD program.
+    """
+    import dataclasses as _dc
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.pofl import POFLConfig
+    from repro.data.partition import partition_noniid_shards
+    from repro.data.synthetic import make_classification_dataset
+    from repro.sim.engine import cached_engine
+    from repro.sim.lattice import run_lattice
+
+    key = jax.random.PRNGKey(0)
+    x, y = make_classification_dataset("mnist_like", 640, key)
+    data = partition_noniid_shards(x, y, n_devices=8)
+    params0 = {"w": jnp.zeros((784, 10)), "b": jnp.zeros((10,))}
+
+    def eval_fn(p):
+        logits = x[:200] @ p["w"] + p["b"]
+        return (
+            _parity_loss_fn(p, x[:200], y[:200]),
+            jnp.mean(jnp.argmax(logits, -1) == y[:200]),
+        )
+
+    spec = parity_spec(n_rounds)
+    cfg = POFLConfig(n_devices=8, n_scheduled=3)
+    kw = dict(base_cfg=cfg, eval_fn=eval_fn, mesh=mesh)
+    records = run_lattice(_parity_loss_fn, data, params0, spec, **kw)
+
+    traces = [
+        cached_engine(
+            _parity_loss_fn, data, _dc.replace(cfg, policy=p),
+            eval_fn=eval_fn, mesh=mesh,
+        ).n_lattice_traces
+        for p in spec.policies
+    ]
+    repeat = run_lattice(_parity_loss_fn, data, params0, spec, **kw)
+    traces_after = [
+        cached_engine(
+            _parity_loss_fn, data, _dc.replace(cfg, policy=p),
+            eval_fn=eval_fn, mesh=mesh,
+        ).n_lattice_traces
+        for p in spec.policies
+    ]
+    repeat_exact = all(
+        np.array_equal(getattr(records, f), getattr(repeat, f))
+        for f in _RECORD_FIELDS
+    )
+    meta = {
+        "n_rounds": n_rounds,
+        "traces_first": traces,
+        "retrace_delta": int(sum(traces_after) - sum(traces)),
+        "repeat_exact": bool(repeat_exact),
+    }
+    return records, meta
+
+
+# --------------------------------------------------------------------------
+# worker entrypoints
+# --------------------------------------------------------------------------
+
+
+def _worker_parity(args) -> None:
+    from repro.sim.multihost import initialize_distributed, make_global_cell_mesh
+
+    initialize_distributed()
+    import jax
+
+    # no ambient-mesh context needed: run_lattice places everything with
+    # explicit NamedShardings (the `-- command` test runs the same lattice
+    # with no mesh context at all)
+    mesh = make_global_cell_mesh()
+    records, meta = run_parity_lattice(mesh=mesh, n_rounds=args.n_rounds)
+    meta.update(
+        process_count=jax.process_count(),
+        process_index=jax.process_index(),
+        n_global_devices=len(jax.devices()),
+        n_local_devices=len(jax.local_devices()),
+    )
+    print(f"[worker {jax.process_index()}] {meta}", flush=True)
+    if jax.process_index() == 0 and args.out:
+        save_records(args.out, records, meta)
+
+
+def _worker_bench(args) -> None:
+    import time
+
+    from repro.sim.multihost import initialize_distributed, make_global_cell_mesh
+
+    initialize_distributed()
+    import jax
+
+    from benchmarks.common import bench_sweep  # parent cwd is on PYTHONPATH
+
+    mesh = make_global_cell_mesh()
+    t0 = time.time()
+    _, seconds, cells = bench_sweep(
+        backend=args.backend, mesh=mesh, n_rounds=args.n_rounds
+    )
+    payload = {
+        "lattice_seconds": round(seconds, 3),
+        "wall_seconds": round(time.time() - t0, 3),
+        "cells": cells,
+        "n_hosts": jax.process_count(),
+        "mesh_devices": len(jax.devices()),
+    }
+    print(f"[worker {jax.process_index()}] bench {payload}", flush=True)
+    if jax.process_index() == 0 and args.out:
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=2)
+
+
+def run_bench(
+    n_procs: int,
+    devices_per_proc: int,
+    backend: str = "jnp",
+    n_rounds: int = 30,
+    timeout: float = 1200.0,
+) -> dict:
+    """Spawn the bench workload across ``n_procs`` local hosts and return
+    process 0's timing payload (used by ``benchmarks/run.py --hosts N``)."""
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as tmp:
+        out = os.path.join(tmp, "bench.json")
+        run_workers(
+            [
+                sys.executable, "-m", "repro.launch.distributed", "--worker",
+                "--workload", "bench", "--out", out,
+                "--backend", backend, "--n-rounds", str(n_rounds),
+            ],
+            n_procs=n_procs,
+            devices_per_proc=devices_per_proc,
+            timeout=timeout,
+        )
+        with open(out) as f:
+            return json.load(f)
+
+
+def main(argv: list[str] | None = None) -> None:
+    argv = sys.argv[1:] if argv is None else list(argv)
+    if "--" in argv:
+        split = argv.index("--")
+        argv, command = argv[:split], argv[split + 1:]
+    else:
+        command = None
+
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--procs", type=int, default=2, metavar="N",
+                        help="number of coordinated local processes")
+    parser.add_argument("--devices-per-proc", type=int, default=4, metavar="K",
+                        help="fake CPU devices per process "
+                        "(--xla_force_host_platform_device_count)")
+    parser.add_argument("--workload", default="parity",
+                        choices=("parity", "bench"),
+                        help="built-in workload when no `-- command` is given")
+    parser.add_argument("--out", default="",
+                        help="worker-0 output path (npz for parity, json for bench)")
+    parser.add_argument("--n-rounds", type=int, default=4)
+    parser.add_argument("--backend", default="jnp")
+    parser.add_argument("--timeout", type=float, default=900.0)
+    parser.add_argument("--worker", action="store_true",
+                        help=argparse.SUPPRESS)  # internal: run AS a worker
+    args = parser.parse_args(argv)
+
+    if args.worker:
+        if args.workload == "parity":
+            _worker_parity(args)
+        else:
+            _worker_bench(args)
+        return
+
+    if args.procs < 1:
+        parser.error("--procs must be >= 1")
+    if args.devices_per_proc < 1:
+        parser.error("--devices-per-proc must be >= 1")
+
+    worker_argv = command or [
+        sys.executable, "-m", "repro.launch.distributed", "--worker",
+        "--workload", args.workload, "--out", args.out,
+        "--n-rounds", str(args.n_rounds), "--backend", args.backend,
+    ]
+    results = run_workers(
+        worker_argv,
+        n_procs=args.procs,
+        devices_per_proc=args.devices_per_proc,
+        timeout=args.timeout,
+    )
+    sys.stdout.write(results[0].output)
+
+
+if __name__ == "__main__":
+    main()

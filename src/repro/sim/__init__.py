@@ -13,6 +13,11 @@ Three layers (see ROADMAP.md "sim" section):
     one vmapped+scanned program per (policy, shape) group, optionally
     sharded along the cell axis over a ``jax.sharding`` mesh
     (``run_lattice(..., mesh=...)`` / :func:`make_cell_mesh`).
+  * :mod:`repro.sim.multihost` — the process-spanning half of the lattice
+    sharding story: ``jax.distributed`` init from the ``REPRO_DIST_*`` env
+    contract (:func:`initialize_distributed`), global-device cell meshes
+    (:func:`make_global_cell_mesh`), per-process shard feeding and record
+    gathering. Driven locally by ``repro.launch.distributed``.
 """
 from repro.sim.engine import (
     SimEngine,
@@ -27,6 +32,13 @@ from repro.sim.lattice import (
     make_cell_mesh,
     run_lattice,
 )
+from repro.sim.multihost import (
+    DistributedConfig,
+    distributed_env,
+    initialize_distributed,
+    make_global_cell_mesh,
+    mesh_spans_processes,
+)
 from repro.sim.scenario import (
     CHANNEL_SCENARIOS,
     PARTITIONS,
@@ -36,16 +48,21 @@ from repro.sim.scenario import (
 
 __all__ = [
     "CHANNEL_SCENARIOS",
+    "DistributedConfig",
     "LatticeRecords",
     "LatticeSpec",
     "PARTITIONS",
     "SimEngine",
     "SimState",
     "cached_engine",
+    "distributed_env",
     "engine_cache_stats",
+    "initialize_distributed",
     "make_cell_mesh",
     "make_channel_process",
+    "make_global_cell_mesh",
     "make_partition",
+    "mesh_spans_processes",
     "reset_engine_cache",
     "run_lattice",
 ]

@@ -370,17 +370,30 @@ def _freeze(obj):
 def _mesh_key(mesh) -> tuple | None:
     """Hashable identity of a ``jax.sharding.Mesh`` (None stays None).
 
-    Axis names, logical shape, and the flat device ids — two meshes over the
-    same devices in the same layout are the same engine, anything else
-    (different device set, different order) is not.
+    Axis names, logical shape, and the flat (device id, owning process)
+    pairs — two meshes over the same devices in the same layout are the same
+    engine, anything else (different device set, different order, devices
+    from a different process span) is not.
     """
     if mesh is None:
         return None
     return (
         tuple(mesh.axis_names),
         tuple(np.shape(mesh.devices)),
-        tuple(d.id for d in np.ravel(mesh.devices)),
+        tuple((d.id, d.process_index) for d in np.ravel(mesh.devices)),
     )
+
+
+def _process_topology_key() -> tuple:
+    """The process topology this engine's traces were built under.
+
+    A ``jax.distributed`` run compiles SPMD programs against the global
+    device count and this process's rank, so traces from one topology must
+    never be replayed under another — within one process lifetime the
+    topology cannot change, but the key keeps the cache honest (and its
+    entries debuggable) all the same.
+    """
+    return (jax.process_count(), jax.process_index())
 
 
 def cached_engine(
@@ -397,10 +410,12 @@ def cached_engine(
 
     The key is ``(loss_fn, data identity, cfg with seed zeroed — including
     the aggregation backend — channel_cfg, scenario, eval_fn identity, mesh
-    identity)``: calls that differ only by seed share one engine and
-    therefore every jit trace it has already paid for. A mesh-keyed engine
-    never collides with the unsharded one (or with a differently-shaped
-    mesh), so per-engine trace counters stay meaningful under sharding. The
+    identity, process topology)``: calls that differ only by seed share one
+    engine and therefore every jit trace it has already paid for. A
+    mesh-keyed engine never collides with the unsharded one (or with a
+    differently-shaped mesh, or one spanning a different ``jax.distributed``
+    process set), so per-engine trace counters stay meaningful under
+    sharding. The
     cache is a bounded LRU (evicts least recently used); entries pin their
     ``data`` arrays alive, which is the point — eviction releases them.
     """
@@ -413,6 +428,7 @@ def cached_engine(
         _freeze(scenario_params),
         eval_fn,
         _mesh_key(mesh),
+        _process_topology_key(),
         # the fused backend's dispatch reads this env var at trace time, so
         # toggling it must not replay a stale trace (parity tests flip it)
         os.environ.get("REPRO_PALLAS_INTERPRET", ""),

@@ -27,6 +27,16 @@ tests/test_lattice_sharded.py). ``mesh`` may be a Mesh, a device count
 (→ :func:`make_cell_mesh`), or None. Engines are cached across calls by
 ``sim.engine.cached_engine`` keyed on the mesh identity, so repeat sharded
 calls re-trace zero times.
+
+Multi-host: when the mesh spans processes (``jax.distributed`` initialized —
+see ``repro.sim.multihost`` — and a global-device mesh from
+:func:`~repro.sim.multihost.make_global_cell_mesh`), every process makes the
+SAME ``run_lattice`` call but feeds only its addressable shard of the padded
+cell grid (``shard_to_global`` assembly) and receives the full records back
+via a tiled allgather (``gather_records``), so the returned
+:class:`LatticeRecords` is identical on every host — dtype-exact against the
+single-host run of the same spec, pinned by tests/test_multihost_lattice.py
+through the ``repro.launch.distributed`` subprocess launcher.
 """
 from __future__ import annotations
 
@@ -41,23 +51,30 @@ from jax.sharding import NamedSharding, PartitionSpec
 from repro.core.channel import ChannelConfig
 from repro.core.pofl import DeviceData, POFLConfig
 from repro.sim.engine import cached_engine
+from repro.sim.multihost import (
+    cells_mesh_over,
+    gather_records,
+    mesh_spans_processes,
+    shard_to_global,
+)
 
 
 def make_cell_mesh(n_devices: int | None = None) -> jax.sharding.Mesh:
-    """A 1-D ``("cells",)`` mesh over the first ``n_devices`` local devices.
+    """A 1-D ``("cells",)`` mesh over the first ``n_devices`` LOCAL devices.
 
-    ``None`` takes every visible device. On CPU CI, fake multi-device
-    semantics come from ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
-    (set before jax initializes).
+    ``None`` takes every local device. Genuinely local: under
+    ``jax.distributed`` this builds from ``jax.local_devices()`` (this
+    process's own devices — ``jax.devices()`` would return rank 0's devices
+    on every rank); process-spanning meshes come from
+    ``repro.sim.multihost.make_global_cell_mesh`` instead. On CPU CI, fake
+    multi-device semantics come from
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set before jax
+    initializes).
     """
-    devices = jax.devices()
-    n = len(devices) if n_devices is None else n_devices
-    if not 1 <= n <= len(devices):
-        raise ValueError(
-            f"mesh wants {n} devices but only {len(devices)} are visible "
-            "(on CPU, set XLA_FLAGS=--xla_force_host_platform_device_count)"
-        )
-    return jax.sharding.Mesh(np.asarray(devices[:n]), ("cells",))
+    return cells_mesh_over(
+        jax.local_devices(), n_devices,
+        hint="(on CPU, set XLA_FLAGS=--xla_force_host_platform_device_count)",
+    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -150,7 +167,10 @@ def run_lattice(
         ``make_cell_mesh(mesh)``. The grid is padded to a multiple of the
         mesh size with dead cells that are dropped on unpadding; records,
         order, and values are unchanged (a 1-device mesh is bit-identical
-        to ``mesh=None``).
+        to ``mesh=None``). A process-spanning mesh
+        (``sim.multihost.make_global_cell_mesh`` under ``jax.distributed``)
+        switches input feeding to per-process shard assembly and records to
+        an allgather — every host returns the same full records.
     """
     base_cfg = base_cfg or POFLConfig(n_devices=data.n_devices)
     if isinstance(mesh, int):
@@ -173,6 +193,7 @@ def run_lattice(
     cells = [grid_n.ravel(), grid_a.ravel(), grid_s.ravel()]
     n_real = cells[0].size
 
+    multihost = mesh_spans_processes(mesh)
     if mesh is not None:
         # pad the cell axis to a multiple of the mesh size with dead cells
         # (repeats of the last real cell — same shapes, outputs discarded)
@@ -181,9 +202,16 @@ def run_lattice(
         if pad:
             cells = [np.concatenate([c, np.repeat(c[-1:], pad)]) for c in cells]
         cell_sharding = NamedSharding(mesh, PartitionSpec(mesh.axis_names[0]))
-        noise_b, alpha_b, seed_b = (
-            jax.device_put(jnp.asarray(c), cell_sharding) for c in cells
-        )
+        if multihost:
+            # every process holds the same deterministic grid; each commits
+            # only the shards its own devices own
+            noise_b, alpha_b, seed_b = (
+                shard_to_global(c, cell_sharding) for c in cells
+            )
+        else:
+            noise_b, alpha_b, seed_b = (
+                jax.device_put(jnp.asarray(c), cell_sharding) for c in cells
+            )
     else:
         noise_b, alpha_b, seed_b = (jnp.asarray(c) for c in cells)
 
@@ -201,11 +229,20 @@ def run_lattice(
         recs = engine.run_lattice_cells(
             params0, t_ints, do_eval, noise_b, alpha_b, seed_b
         )
+        if multihost:
+            # drain the (collective-free) compute before the gather's single
+            # collective program launches anywhere — overlapping launches are
+            # what the CPU gloo runtime cannot be trusted with
+            jax.block_until_ready(recs)
         per_policy.append(recs)  # stays on device until the final stream-out
 
     # single stream-out: device → host exactly once for the whole lattice,
-    # dropping any dead padding cells
-    per_policy = jax.tree.map(lambda a: a[:n_real], jax.device_get(per_policy))
+    # dropping any dead padding cells (multi-host: a tiled allgather first —
+    # no process can address the other hosts' record shards directly)
+    per_policy = (
+        gather_records(per_policy, mesh) if multihost else jax.device_get(per_policy)
+    )
+    per_policy = jax.tree.map(lambda a: a[:n_real], per_policy)
     grid_shape = (len(spec.noise_powers), len(spec.alphas), len(spec.seeds))
 
     def gather(field: str, eval_only: bool) -> np.ndarray:

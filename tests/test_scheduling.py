@@ -292,6 +292,121 @@ def test_property_unbiased_and_finite_under_availability(seed, n, s, scenario):
     np.testing.assert_allclose(est_ht, target, rtol=1e-3, atol=1e-5)
 
 
+@settings(max_examples=60, deadline=None)
+@given(
+    policy=st.sampled_from(scheduling.POLICIES),
+    n=st.integers(2, 24),
+    seed=st.integers(0, 2**31 - 1),
+    h_regime=st.sampled_from(["normal", "faded", "underflow", "zero"]),
+    zero_norms=st.booleans(),
+    onehot_frac=st.booleans(),
+    alpha=st.floats(1e-3, 10.0),
+    noise_power=st.sampled_from([0.0, 1e-11, 1e-2]),
+)
+def test_property_probs_distribution_under_extremes(
+    policy, n, seed, h_regime, zero_norms, onehot_frac, alpha, noise_power
+):
+    """EVERY policy must emit a probability distribution no matter how
+    degenerate the round looks: deep fades down to |h| = 0 exactly (whose
+    float32 square underflows — the case the ``pofl_q`` denominator guard
+    exists for), all-zero uploaded gradient norms, one-hot ``data_frac``
+    (one device owns the whole dataset), σ_z² = 0, extreme α. Outputs must
+    be finite, non-negative, and sum to 1 — a NaN here would silently poison
+    every downstream Eq. 36/37 draw of a lattice cell."""
+    key = jax.random.PRNGKey(seed)
+    k_n, k_v, k_h = jax.random.split(key, 3)
+    norms = (
+        jnp.zeros((n,))
+        if zero_norms
+        else jax.random.uniform(k_n, (n,), minval=0.1, maxval=5.0)
+    )
+    gvars = jax.random.uniform(k_v, (n,), minval=0.0, maxval=1.0)
+    h_scale = {"normal": 1.0, "faded": 1e-12, "underflow": 1e-25, "zero": 0.0}
+    h_abs = jax.random.uniform(k_h, (n,), minval=0.0, maxval=1.0) * h_scale[h_regime]
+    frac = (
+        jnp.zeros((n,)).at[seed % n].set(1.0)
+        if onehot_frac
+        else jnp.full((n,), 1.0 / n)
+    )
+    p = scheduling.scheduling_probs(
+        policy, norms, gvars, h_abs, frac, 128, alpha, 1.0, noise_power
+    )
+    assert bool(jnp.isfinite(p).all()), p
+    assert bool((p >= 0).all()), p
+    np.testing.assert_allclose(float(p.sum()), 1.0, rtol=1e-4)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(2, 20),
+    s=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+    n_zero=st.integers(0, 5),
+)
+def test_property_sampler_invariants_and_eq36_renormalization(n, s, seed, n_zero):
+    """Invariants of the Eq. 36 draw + the PO-FL-B inclusion probs:
+
+      * no device is ever drawn twice, the mask is exactly the drawn set,
+        and zero-probability devices are never drafted;
+      * REPLAYING the draw in float64 shows Eq. 36's renormalization keeps
+        every per-step live distribution a distribution (the not-yet-drawn
+        masses q_i = p_i/(1 − Σ_{j<k} p_{Y_j}) sum to 1, each in (0, 1]);
+        replaying in float32 *kernel order* pins the recorded ``step_probs``
+        to the exact arithmetic the scan performed — near-exhausted mass
+        makes 1−cum catastrophically cancel in float32, so the recorded
+        value may exceed the float64 mass and only the float32 replay is the
+        honest equality;
+      * Σπ_i = n_scheduled for the Bernoulli inclusion probabilities, with
+        every π_i in (0, 1].
+    """
+    s = min(s, n)
+    n_zero = min(n_zero, n - s)  # keep at least s selectable devices
+    key = jax.random.PRNGKey(seed)
+    k_p, k_draw = jax.random.split(key)
+    p = jax.random.dirichlet(k_p, jnp.full((n,), 1.2))
+    p = p.at[:n_zero].set(0.0)  # offline devices (exchangeable draw)
+    p = p / p.sum()
+
+    sched = scheduling.sample_without_replacement(k_draw, p, s)
+    idx = np.asarray(sched.indices)
+    step_probs = np.asarray(sched.step_probs)
+    mask = np.asarray(sched.mask)
+
+    # enough selectable mass → every draw is real, and none repeats
+    assert (idx >= 0).all(), idx
+    assert len(set(idx.tolist())) == s, idx
+    assert float(mask.sum()) == float(s)
+    assert set(np.flatnonzero(mask).tolist()) == set(idx.tolist())
+    p_np = np.asarray(p, np.float64)
+    assert (p_np[idx] > 0).all(), "a zero-probability device was drafted"
+
+    # replay the sequential draw: float64 for the mathematical invariant
+    # (over the EXACTLY-normalized distribution — float32 p sums to 1 only
+    # to ~n·eps, which tiny remaining mass would amplify), float32 in
+    # kernel order for the recorded values
+    p32 = np.asarray(p, np.float32)
+    p_np = p_np / p_np.sum()
+    cum64, cum32 = 0.0, np.float32(0.0)
+    drawn: set[int] = set()
+    for k in range(s):
+        live = np.array([p_np[i] if i not in drawn else 0.0 for i in range(n)])
+        q = live / (1.0 - cum64)
+        np.testing.assert_allclose(q.sum(), 1.0, rtol=1e-9)
+        assert 0.0 < q[idx[k]] <= 1.0 + 1e-12  # the true Eq. 36 mass
+        q32 = p32[idx[k]] / max(np.float32(1.0) - cum32, np.float32(1e-30))
+        assert step_probs[k] > 0.0
+        np.testing.assert_allclose(step_probs[k], q32, rtol=1e-5)
+        drawn.add(int(idx[k]))
+        cum64 += p_np[idx[k]]
+        cum32 = np.float32(cum32 + p32[idx[k]])
+
+    # Σπ = n_scheduled (bisection target), π a valid inclusion-prob vector
+    pi = np.asarray(scheduling.bernoulli_inclusion_probs(p, s))
+    assert np.isfinite(pi).all()
+    assert (pi > 0).all() and (pi <= 1.0).all()
+    np.testing.assert_allclose(pi.sum(), s, rtol=1e-3)
+
+
 @settings(max_examples=15, deadline=None)
 @given(seed=st.integers(0, 2**31 - 1))
 def test_property_eq37_weights_reduce_to_eq16_for_single(seed):

@@ -778,6 +778,53 @@ def test_churn_engine_runs_finite(setup):
     assert (n_sched <= 4).all() and n_sched.min() < 4  # clamping fired
 
 
+def test_churn_dirichlet_mixed_golden_trajectory():
+    """Seed-pinned golden trajectory for churn availability × dirichlet_mixed
+    shards — the one PR-2/PR-3 feature pair that previously had no
+    end-to-end pin (churn was pinned on equal shards, dirichlet_mixed only at
+    the partition level). Any change to the PRNG key discipline, the Markov
+    availability chain, the mixed-partition apportionment, or the Eq. 34-37
+    weighting of unequal m_i/M moves these numbers and must be deliberate.
+
+    The pinned ``n_scheduled`` run (2, 1, 4, 3, 4, 4) doubles as a structural
+    check: churn genuinely clamps |S^t| below n_scheduled=4 on early rounds.
+    """
+    key = jax.random.PRNGKey(3)
+    x, y = make_classification_dataset("mnist_like", 600, key)
+    data = partition_dirichlet_mixed(
+        x, y, n_devices=10, beta=0.3, beta_size=0.4, seed=0
+    )
+    params0 = {"w": jnp.zeros((784, 10)), "b": jnp.zeros((10,))}
+    spec = LatticeSpec(
+        policies=("pofl",), noise_powers=(1e-11,), alphas=(0.1,), seeds=(0,),
+        n_rounds=6,
+    )
+    recs = run_lattice(
+        _loss_fn, data, params0, spec,
+        base_cfg=POFLConfig(n_devices=10, n_scheduled=4),
+        scenario="churn",
+        scenario_params={"p_depart": 0.3, "p_arrive": 0.2},
+    )
+    cell = {f: np.asarray(getattr(recs, f)[0, 0, 0, 0]) for f in
+            ("e_com", "e_var", "grad_norm", "n_scheduled")}
+    np.testing.assert_array_equal(
+        cell["n_scheduled"], [2.0, 1.0, 4.0, 3.0, 4.0, 4.0]
+    )
+    golden = {
+        "e_com": [0.031349364668130875, 0.001395408296957612,
+                  0.012313947081565857, 0.02131267450749874,
+                  0.03685463219881058, 0.007252929266542196],
+        "e_var": [0.1070418655872345, 0.12386903166770935,
+                  0.07931140810251236, 0.08480053395032883,
+                  0.08735901862382889, 0.15798714756965637],
+        "grad_norm": [0.20976485311985016, 0.06041086092591286,
+                      0.18663346767425537, 0.2160150557756424,
+                      0.219487726688385, 0.11000669002532959],
+    }
+    for f, want in golden.items():
+        np.testing.assert_allclose(cell[f], want, rtol=1e-5, err_msg=f)
+
+
 # --------------------------------------------------------------------------
 # trial-batched fused kernel
 # --------------------------------------------------------------------------
