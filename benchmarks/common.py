@@ -174,18 +174,38 @@ def bench_task() -> Task:
 def bench_sweep(
     backend: str = "jnp", mesh=None, n_rounds: int | None = None, task=None
 ):
-    """Run the reduced benchmark sweep once → ``(results, seconds, cells)``.
+    """Run the reduced benchmark sweep cold + warm → ``(results, timings, cells)``.
+
+    ``timings`` separates compile cost from throughput honestly:
+
+      cold_seconds     — first call (trace + XLA compile + run)
+      steady_seconds   — identical repeat call (cached engine + executable:
+                         zero retraces, zero recompiles — pure run)
+      compile_seconds  — the engines' AOT ``lower().compile()`` wall time
+                         (``repro.sim.engine.lattice_compile_stats``, scoped
+                         by the engine-cache reset below)
+      n_compiles       — distinct lattice programs compiled (1 for the
+                         policy-fused lattice)
 
     ``mesh`` may be any ``run_policies`` mesh — including a process-spanning
     global mesh inside a ``jax.distributed`` worker (where every host runs
     this same call and gets the same timing shape).
     """
+    from repro.sim import lattice_compile_stats, reset_engine_cache
+
     task = task or bench_task()
     kw = dict(BENCH_SWEEP_KW, policies=POLICIES, backend=backend)
     if n_rounds is not None:
         kw["n_rounds"] = n_rounds
-    out, seconds = timed(run_policies, task, mesh=mesh, **kw)
-    return out, seconds, len(POLICIES) * kw["n_trials"]
+    reset_engine_cache()  # scope compile stats (and cold-ness) to this sweep
+    out, cold = timed(run_policies, task, mesh=mesh, **kw)
+    _, steady = timed(run_policies, task, mesh=mesh, **kw)
+    timings = {
+        "cold_seconds": cold,
+        "steady_seconds": steady,
+        **lattice_compile_stats(),
+    }
+    return out, timings, len(POLICIES) * kw["n_trials"]
 
 
 def run_policies_loop(

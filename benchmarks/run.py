@@ -13,19 +13,43 @@ Prints ``name,us_per_call,derived`` CSV lines (reduced settings — pass
                                      is the GLOBAL process-spanning count)
   n_hosts                          — jax.distributed process count the
                                      lattice ran across (1 = single-host)
-  lattice_seconds / loop_seconds   — lattice vs cached-engine run_pofl loop
-                                     (the loop baseline always runs
-                                     single-host, unsharded)
-  speedup                          — loop_seconds / lattice_seconds
-  cells_per_sec, round_cells_per_sec
-  per_device_cells_per_sec         — cells_per_sec / mesh_devices (the
-                                     sharding-efficiency trajectory number)
-  per_host_cells_per_sec           — cells_per_sec / n_hosts (the multi-host
-                                     scaling trajectory number)
-  engine_cache_hits / _misses      — cross-call engine cache counters (with
-                                     --hosts N they cover the in-process loop
-                                     baseline only; the lattice engines live
-                                     in the worker processes)
+  lattice_seconds / loop_seconds   — COLD lattice (trace + compile + run) vs
+                                     cached-engine run_pofl loop (the loop
+                                     baseline always runs single-host,
+                                     unsharded)
+  steady_seconds                   — identical repeat lattice call (cached
+                                     engine + AOT executable: zero retraces,
+                                     zero recompiles — pure run)
+  compile_seconds                  — AOT ``lower().compile()`` wall time
+                                     inside the cold call
+                                     (``sim.engine.lattice_compile_stats``)
+  n_compiles                       — distinct lattice programs compiled
+                                     (1: the whole policy-fused sweep is one
+                                     program; was one per policy before)
+  speedup                          — loop_seconds / steady_seconds (honest
+                                     steady-state lattice vs cached loop)
+  cold_speedup                     — loop_seconds / lattice_seconds (the old
+                                     compile-blended number, kept for the
+                                     trajectory)
+  cells_per_sec                    — cells / lattice_seconds (cold, blended —
+                                     the historical trajectory number)
+  steady_cells_per_sec             — cells / steady_seconds
+  round_cells_per_sec              — cells × n_rounds / lattice_seconds
+  per_device_cells_per_sec         — steady_cells_per_sec / mesh_devices (the
+                                     sharding-efficiency trajectory number;
+                                     steady-state since the one-compile PR)
+  per_host_cells_per_sec           — steady_cells_per_sec / n_hosts (the
+                                     multi-host scaling trajectory number)
+  engine_cache_hits / _misses      — engine cache counters over the lattice
+                                     cold+warm pair (misses == 1: one fused
+                                     engine per lattice; with --hosts N they
+                                     come from worker 0, where the lattice
+                                     engines live)
+
+Set ``REPRO_COMPILE_CACHE=<dir>`` to persist XLA compiles across runs
+(``repro.sim.compile_cache``): a repeat cold run then reloads every lattice
+program from disk instead of recompiling (compile_seconds collapses to the
+deserialization cost).
 
 ``--backend {jnp,pallas_fused}`` selects the aggregation backend and
 ``--mesh N`` shards the lattice's cell axis over the first N local devices
@@ -106,14 +130,17 @@ def _bench_sim(backend: str = "jnp", mesh_devices: int = 0, n_hosts: int = 1):
     """Reduced fig4-style sweep (5 policies × 3 trials) through sim.lattice
     vs the cached-engine one-run_pofl-per-cell loop → BENCH_sim.json.
 
-    ``loop_seconds`` is measured against the PR-2 optimized wrapper (engine
-    cache + single-static-length active-mask scan), so the speedup is the
-    honest lattice-vs-loop number, not lattice-vs-cold-recompiles.
-    ``mesh_devices > 0`` shards the lattice's cell axis over that many local
-    devices; ``n_hosts > 1`` instead runs the lattice across that many
-    coordinated ``jax.distributed`` processes via the
-    ``repro.launch.distributed`` launcher (``mesh_devices`` then counts the
-    GLOBAL devices). The loop baseline always runs single-host, unsharded.
+    The lattice runs TWICE (cold, then an identical warm repeat), splitting
+    ``lattice_seconds``/``compile_seconds`` from ``steady_seconds`` so
+    compile cost stops blending into throughput; ``loop_seconds`` is the
+    PR-2 optimized wrapper (engine cache + single-static-length active-mask
+    scan), so ``speedup`` is the honest steady-lattice-vs-loop number and
+    ``cold_speedup`` the old blended one. ``mesh_devices > 0`` shards the
+    lattice's cell axis over that many local devices; ``n_hosts > 1``
+    instead runs the lattice across that many coordinated
+    ``jax.distributed`` processes via the ``repro.launch.distributed``
+    launcher (``mesh_devices`` then counts the GLOBAL devices). The loop
+    baseline always runs single-host, unsharded.
     """
     from benchmarks.common import (
         BENCH_SWEEP_KW, POLICIES, bench_sweep, bench_task, run_policies_loop,
@@ -133,17 +160,28 @@ def _bench_sim(backend: str = "jnp", mesh_devices: int = 0, n_hosts: int = 1):
             backend=backend,
             n_rounds=n_rounds,
         )
-        t_lattice = worker["lattice_seconds"]
+        timings = {
+            "cold_seconds": worker["lattice_seconds"],
+            "steady_seconds": worker["steady_seconds"],
+            "compile_seconds": worker["compile_seconds"],
+            "n_compiles": worker["n_compiles"],
+        }
+        lattice_cache = {
+            "hits": worker["engine_cache_hits"],
+            "misses": worker["engine_cache_misses"],
+        }
         cells = worker["cells"]
         n_mesh = worker["mesh_devices"]
     else:
         mesh = make_cell_mesh(mesh_devices) if mesh_devices else None
         n_mesh = 1 if mesh is None else mesh_devices
-        _, t_lattice, cells = bench_sweep(backend=backend, mesh=mesh, task=task)
+        _, timings, cells = bench_sweep(backend=backend, mesh=mesh, task=task)
+        lattice_cache = engine_cache_stats()
+    t_cold = timings["cold_seconds"]
+    t_steady = timings["steady_seconds"]
     reset_engine_cache()
     kw = dict(BENCH_SWEEP_KW, policies=POLICIES, backend=backend)
     _, t_loop = timed(run_policies_loop, task, **kw)
-    cache = engine_cache_stats()
 
     payload = {
         "cells": cells,
@@ -152,15 +190,20 @@ def _bench_sim(backend: str = "jnp", mesh_devices: int = 0, n_hosts: int = 1):
         "backend": backend,
         "mesh_devices": n_mesh,
         "n_hosts": n_hosts,
-        "lattice_seconds": round(t_lattice, 3),
+        "lattice_seconds": round(t_cold, 3),
+        "steady_seconds": round(t_steady, 3),
+        "compile_seconds": round(timings["compile_seconds"], 3),
+        "n_compiles": timings["n_compiles"],
         "loop_seconds": round(t_loop, 3),
-        "speedup": round(t_loop / t_lattice, 2),
-        "cells_per_sec": round(cells / t_lattice, 3),
-        "round_cells_per_sec": round(cells * n_rounds / t_lattice, 1),
-        "per_device_cells_per_sec": round(cells / t_lattice / n_mesh, 3),
-        "per_host_cells_per_sec": round(cells / t_lattice / n_hosts, 3),
-        "engine_cache_hits": cache["hits"],
-        "engine_cache_misses": cache["misses"],
+        "speedup": round(t_loop / t_steady, 2),
+        "cold_speedup": round(t_loop / t_cold, 2),
+        "cells_per_sec": round(cells / t_cold, 3),
+        "steady_cells_per_sec": round(cells / t_steady, 3),
+        "round_cells_per_sec": round(cells * n_rounds / t_cold, 1),
+        "per_device_cells_per_sec": round(cells / t_steady / n_mesh, 3),
+        "per_host_cells_per_sec": round(cells / t_steady / n_hosts, 3),
+        "engine_cache_hits": lattice_cache["hits"],
+        "engine_cache_misses": lattice_cache["misses"],
     }
     out_path = os.path.join(os.path.dirname(__file__), "..", "BENCH_sim.json")
     with open(os.path.abspath(out_path), "w") as f:
@@ -170,6 +213,11 @@ def _bench_sim(backend: str = "jnp", mesh_devices: int = 0, n_hosts: int = 1):
 
 def main(argv: list[str] | None = None) -> None:
     from repro.core import BACKENDS
+    from repro.sim import enable_compile_cache
+
+    # REPRO_COMPILE_CACHE=<dir> persists every XLA compile below across runs
+    # (no-op when unset); must precede the first compile to catch them all
+    enable_compile_cache()
 
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument(
@@ -228,9 +276,13 @@ def main(argv: list[str] | None = None) -> None:
         lambda: _bench_sim(
             backend=args.backend, mesh_devices=args.mesh, n_hosts=args.hosts
         ),
-        lambda d: "cells/s=%.2f speedup=%.1fx backend=%s mesh=%d hosts=%d" % (
-            d["cells_per_sec"], d["speedup"], d["backend"], d["mesh_devices"],
-            d["n_hosts"],
+        lambda d: (
+            "steady_cells/s=%.2f cold_cells/s=%.2f compile_s=%.1f "
+            "n_compiles=%d speedup=%.1fx backend=%s mesh=%d hosts=%d" % (
+                d["steady_cells_per_sec"], d["cells_per_sec"],
+                d["compile_seconds"], d["n_compiles"], d["speedup"],
+                d["backend"], d["mesh_devices"], d["n_hosts"],
+            )
         ),
     )
     _run(

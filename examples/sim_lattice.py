@@ -1,10 +1,11 @@
 """Scenario-lattice quickstart: a whole paper-style sweep in one program.
 
 Runs (3 policies × 2 noise powers × 4 trials) = 24 cells of PO-FL training
-through ``repro.sim`` — one vmapped+scanned compile per policy, metrics
-streamed out once — under temporally-correlated Gauss–Markov fading with
-random device dropout (scenarios the per-round ``run_pofl`` loop cannot
-express). ``--mesh N`` shards the 8-cell-per-policy axis over N devices
+through ``repro.sim`` — ONE policy-fused vmapped+scanned compile for the
+whole sweep (the policy axis is traced), metrics streamed out once — under
+temporally-correlated Gauss–Markov fading with random device dropout
+(scenarios the per-round ``run_pofl`` loop cannot express). Set
+``REPRO_COMPILE_CACHE=<dir>`` to persist that one compile across runs. ``--mesh N`` shards the 8-cell-per-policy axis over N devices
 (results are identical — only placement changes):
 
     PYTHONPATH=src python examples/sim_lattice.py [--backend pallas_fused]
@@ -30,7 +31,9 @@ from repro.data.synthetic import make_classification_dataset
 from repro.models import small
 from repro.sim import (
     LatticeSpec,
+    enable_compile_cache,
     initialize_distributed,
+    lattice_compile_stats,
     make_cell_mesh,
     make_global_cell_mesh,
     make_partition,
@@ -62,6 +65,10 @@ def main(argv=None):
         help="rounds per cell (shrink for smoke runs)",
     )
     args = parser.parse_args(argv)
+
+    # REPRO_COMPILE_CACHE=<dir> persists the lattice's XLA compile across
+    # runs (repro.sim.compile_cache); no-op when unset
+    cache_dir = enable_compile_cache()
 
     if args.distributed:
         # must precede the first device query; a missing env contract just
@@ -104,8 +111,12 @@ def main(argv=None):
         shard_note = f", cells sharded over {n_dev} devices"
         if args.distributed:
             shard_note += f" ({jax.process_count()} hosts)"
+    cs = lattice_compile_stats()
+    cache_note = f", compile cache {cache_dir}" if cache_dir else ""
     print(f"lattice: {spec.n_cells} cells × {spec.n_rounds} rounds "
-          f"(eval rounds {records.eval_rounds.tolist()}){shard_note}")
+          f"(eval rounds {records.eval_rounds.tolist()}){shard_note} — "
+          f"{cs['n_compiles']} compile(s), {cs['compile_seconds']:.1f}s"
+          f"{cache_note}")
     for policy in spec.policies:
         for np_ in spec.noise_powers:
             acc = records.cell(policy=policy, noise_power=np_)["acc"]

@@ -70,7 +70,10 @@ class POFLConfig:
     n_scheduled: int = 10
     alpha: float = 0.1
     policy: str = "pofl"
-    sampler: str = "without_replacement"  # or "bernoulli" (PO-FL-B variant)
+    # "without_replacement" (the paper's sequential Eq. 36 scan), "topk"
+    # (Gumbel top-k draw — same law, different PRNG stream, no S-step scan),
+    # or "bernoulli" (PO-FL-B Horvitz–Thompson variant)
+    sampler: str = "without_replacement"
     tx_power: float = 1.0
     noise_power: float = 1e-11
     batch_size: int = 10
@@ -193,30 +196,73 @@ def scheduling_stage(
     noise_power,
     k_sched: jax.Array,
     avail: jnp.ndarray | None = None,
+    policy_id: jnp.ndarray | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Step 4: p_i^t (Eq. 34/Remark 2) → draw S^t → weights ρ (Eq. 37/HT).
 
     Returns ``(rho, mask)`` — per-device aggregation weights and the 0/1
     scheduled indicator. ``avail`` (sim dropout/churn) zeroes unavailable
     devices' probabilities before the draw.
+
+    ``policy_id`` (a traced int32, ``scheduling.POLICY_IDS`` order) switches
+    the stage to the FUSED dispatch the policy-vmapped lattice compiles: the
+    probabilities come from ``scheduling_probs_by_id`` and the
+    deterministic-policy weight rule is a value select instead of a Python
+    branch. Per-cell values are bit-identical to the ``policy_id=None``
+    string dispatch of the same policy — every branch's arithmetic is
+    exactly the static version's, and both weight rules consume the same
+    draw of the same ``k_sched``.
     """
-    probs = scheduling.scheduling_probs(
-        cfg.policy, stats.norm, stats.var, h_abs, data_frac, dim,
-        alpha, cfg.tx_power, noise_power,
-    )
+    method = "topk" if cfg.sampler == "topk" else "sequential"
+    if policy_id is None:
+        probs = scheduling.scheduling_probs(
+            cfg.policy, stats.norm, stats.var, h_abs, data_frac, dim,
+            alpha, cfg.tx_power, noise_power,
+        )
+    else:
+        probs = scheduling.scheduling_probs_by_id(
+            policy_id, stats.norm, stats.var, h_abs, data_frac, dim,
+            alpha, cfg.tx_power, noise_power,
+        )
     if avail is not None:
         masked = probs * avail
         probs = safe_div(masked, jnp.sum(masked))
-    if cfg.policy == "deterministic":
-        sched = scheduling.sample_without_replacement(k_sched, probs, cfg.n_scheduled)
-        rho = scheduling.deterministic_weights(sched, data_frac)
-        mask = sched.mask
-    elif cfg.sampler == "bernoulli":
-        mask, pi = scheduling.sample_bernoulli(k_sched, probs, cfg.n_scheduled)
-        rho = scheduling.bernoulli_weights(pi, data_frac)
+
+    if policy_id is None:
+        if cfg.policy == "deterministic":
+            sched = scheduling.sample_without_replacement(
+                k_sched, probs, cfg.n_scheduled, method=method
+            )
+            rho = scheduling.deterministic_weights(sched, data_frac)
+            mask = sched.mask
+        elif cfg.sampler == "bernoulli":
+            mask, pi = scheduling.sample_bernoulli(k_sched, probs, cfg.n_scheduled)
+            rho = scheduling.bernoulli_weights(pi, data_frac)
+        else:
+            sched = scheduling.sample_without_replacement(
+                k_sched, probs, cfg.n_scheduled, method=method
+            )
+            rho = scheduling.aggregation_weights(sched, probs, data_frac, cfg.n_scheduled)
+            mask = sched.mask
+        return rho, mask
+
+    # fused dispatch: the policy is data, so the deterministic-vs-stochastic
+    # weight rule is a select over values computed from the SAME draw (the
+    # string path draws with the same key in either branch)
+    is_det = policy_id == scheduling.DETERMINISTIC_ID
+    sched = scheduling.sample_without_replacement(
+        k_sched, probs, cfg.n_scheduled, method=method
+    )
+    rho_det = scheduling.deterministic_weights(sched, data_frac)
+    if cfg.sampler == "bernoulli":
+        mask_b, pi = scheduling.sample_bernoulli(k_sched, probs, cfg.n_scheduled)
+        rho = jnp.where(is_det, rho_det, scheduling.bernoulli_weights(pi, data_frac))
+        mask = jnp.where(is_det, sched.mask, mask_b)
     else:
-        sched = scheduling.sample_without_replacement(k_sched, probs, cfg.n_scheduled)
-        rho = scheduling.aggregation_weights(sched, probs, data_frac, cfg.n_scheduled)
+        rho_seq = scheduling.aggregation_weights(
+            sched, probs, data_frac, cfg.n_scheduled
+        )
+        rho = jnp.where(is_det, rho_det, rho_seq)
         mask = sched.mask
     return rho, mask
 
@@ -289,13 +335,18 @@ def round_algorithm(
     noise_power: jnp.ndarray | float | None = None,
     alpha: jnp.ndarray | float | None = None,
     avail: jnp.ndarray | None = None,
+    policy_id: jnp.ndarray | None = None,
 ) -> tuple[Any, RoundMetrics]:
     """Steps 2–6 of Algorithm 1 for one round, given this round's channel ``h``.
 
     Composes the four pipeline stages. ``noise_power`` / ``alpha`` default to
     the (static) config values but may be traced arrays — the simulation
-    lattice vmaps over them. Everything structural (policy, sampler, |S|,
-    batch size, backend) stays static.
+    lattice vmaps over them. Everything structural (sampler, |S|, batch
+    size, backend) stays static. The POLICY is static by default
+    (``cfg.policy`` string dispatch) but becomes one more traced leaf when
+    ``policy_id`` is given (``scheduling.POLICY_IDS`` order): the fused
+    lattice vmaps over it, so every policy of a sweep shares ONE compiled
+    program. Per-cell values are bit-identical between the two dispatches.
 
     ``avail`` is an optional (N,) 0/1 availability mask (sim dropout/churn
     scenarios): unavailable devices get zero scheduling probability this
@@ -308,8 +359,16 @@ def round_algorithm(
 
     data_frac = data.data_frac
 
-    noise_free = cfg.policy == "noisefree"
-    agg_noise_power = 0.0 if noise_free else noise_power
+    if policy_id is None:
+        noise_free = cfg.policy == "noisefree"
+        agg_noise_power = 0.0 if noise_free else noise_power
+    else:
+        # traced policy: σ_z² = 0 for noisefree cells is a runtime select —
+        # sqrt(0)·z and the 0-noise closed forms are exact, so values match
+        # the static 0.0 of the string path bit for bit
+        agg_noise_power = jnp.where(
+            policy_id == scheduling.NOISEFREE_ID, 0.0, noise_power
+        )
 
     # -- step 2: local mini-batch gradients ---------------------------
     g = local_gradient_stage(loss_fn, data, cfg, params, k_batch)  # (N, D)
@@ -322,7 +381,7 @@ def round_algorithm(
     h_abs = jnp.abs(h)
     rho, mask = scheduling_stage(
         cfg, stats, h_abs, data_frac, dim, alpha, noise_power, k_sched,
-        avail=avail,
+        avail=avail, policy_id=policy_id,
     )
 
     # -- steps 5-6: AirComp aggregation + model update ----------------

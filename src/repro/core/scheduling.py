@@ -22,6 +22,21 @@ from repro.core.numerics import EPS, eps_guard, safe_div
 
 POLICIES = ("pofl", "importance", "channel", "noisefree", "deterministic")
 
+# Integer ids for the traced-dispatch path (`scheduling_probs_by_id`): the id
+# IS the index into the `lax.switch` branch table, so this order is part of
+# the traced program's contract — append new policies, never reorder.
+POLICY_IDS = {name: i for i, name in enumerate(POLICIES)}
+NOISEFREE_ID = POLICY_IDS["noisefree"]
+DETERMINISTIC_ID = POLICY_IDS["deterministic"]
+
+
+def policy_id(policy: str) -> int:
+    """The integer id of ``policy`` for the traced dispatch path."""
+    try:
+        return POLICY_IDS[policy]
+    except KeyError:
+        raise ValueError(f"unknown policy {policy!r}; choose from {POLICIES}")
+
 
 def pofl_q(
     grad_norms: jnp.ndarray,
@@ -82,6 +97,64 @@ def scheduling_probs(
     return q / jnp.sum(q)
 
 
+def scheduling_probs_by_id(
+    policy_id: jnp.ndarray,
+    grad_norms: jnp.ndarray,
+    grad_vars: jnp.ndarray,
+    h_abs: jnp.ndarray,
+    data_frac: jnp.ndarray,
+    dim: int,
+    alpha,
+    tx_power: float,
+    noise_power,
+) -> jnp.ndarray:
+    """:func:`scheduling_probs` with the policy as a TRACED integer.
+
+    ``policy_id`` indexes the ``lax.switch`` branch table built from
+    ``POLICIES`` order (see ``POLICY_IDS``); each branch computes exactly the
+    same unnormalized score ``q`` as the string-dispatch version, and the
+    eps-guard + normalization are shared, so per-call values are
+    bit-identical to ``scheduling_probs(POLICIES[policy_id], ...)``. Under a
+    ``vmap`` over cells the switch degenerates to compute-all-and-select —
+    the price of fusing every policy into ONE compiled lattice program
+    (``repro.sim.lattice``) instead of one compile per policy.
+    """
+
+    def _q_pofl(norms, gvars, h, frac, a, s2):
+        return pofl_q(norms, gvars, h, frac, dim, a, tx_power, s2)
+
+    def _q_noisefree(norms, gvars, h, frac, a, s2):
+        del s2
+        return pofl_q(norms, gvars, h, frac, dim, a, tx_power, 0.0)
+
+    def _q_importance(norms, gvars, h, frac, a, s2):
+        del gvars, h, a, s2
+        return frac * norms
+
+    def _q_channel(norms, gvars, h, frac, a, s2):
+        del norms, gvars, frac, a, s2
+        return h**2
+
+    def _q_deterministic(norms, gvars, h, frac, a, s2):
+        del norms, gvars, frac, a, s2
+        return jnp.ones_like(h)
+
+    branches = {
+        "pofl": _q_pofl,
+        "importance": _q_importance,
+        "channel": _q_channel,
+        "noisefree": _q_noisefree,
+        "deterministic": _q_deterministic,
+    }
+    q = jax.lax.switch(
+        policy_id,
+        [branches[name] for name in POLICIES],
+        grad_norms, grad_vars, h_abs, data_frac, alpha, noise_power,
+    )
+    q = eps_guard(q)
+    return q / jnp.sum(q)
+
+
 class Schedule(NamedTuple):
     """One round's draw: indices Y_{t,k}, their step-k renormalized probs q_k,
     and the 0/1 device mask.
@@ -99,9 +172,10 @@ class Schedule(NamedTuple):
 
 
 def sample_without_replacement(
-    key: jax.Array, probs: jnp.ndarray, n_scheduled: int
+    key: jax.Array, probs: jnp.ndarray, n_scheduled: int,
+    method: str = "sequential",
 ) -> Schedule:
-    """Sequential sampling without replacement with Eq. 36 renormalization.
+    """Sampling without replacement with Eq. 36 renormalization.
 
     At step k the live probabilities are q_i = p_i / (1 - Σ_{j<k} p_{Y_j})
     for unselected i (0 otherwise); we record q_{Y_k} for the Eq. 37 weights.
@@ -110,8 +184,46 @@ def sample_without_replacement(
     selectable mass is exhausted the remaining draws are no-ops (the
     ``Schedule`` sentinel described above) instead of drafting a prob-0
     device whose Eq. 37 weight 1/q would explode.
+
+    ``method`` selects the draw implementation:
+
+      * ``"sequential"`` (default) — the S-step ``lax.scan`` of categorical
+        draws; the seed implementation, pinned trajectories depend on its
+        exact PRNG consumption.
+      * ``"topk"`` — one Gumbel-perturbed-logit top-k (no scan): drawing the
+        top-S of ``log p_i + Gumbel_i`` is distributionally identical to the
+        S sequential Eq. 36 draws (the Gumbel top-k trick), and the ordered
+        indices reconstruct the same ``step_probs``. A different PRNG stream
+        (one Gumbel vector vs S categorical keys), so realized draws differ
+        sample-by-sample from ``"sequential"`` — opt in where only the LAW
+        matters (fresh sweeps), never under pinned trajectories.
     """
     n = probs.shape[0]
+
+    if method == "topk":
+        selectable = probs > 0
+        logits = jnp.where(selectable, jnp.log(eps_guard(probs)), -jnp.inf)
+        perturbed = logits + jax.random.gumbel(key, (n,))
+        # top_k caps at n; draws beyond that are sentinels anyway (the scan
+        # path likewise clamps an over-subscribed n_scheduled > n)
+        _, order = jax.lax.top_k(perturbed, min(n_scheduled, n))
+        if n_scheduled > n:
+            order = jnp.concatenate(
+                [order, jnp.zeros((n_scheduled - n,), order.dtype)]
+            )
+        n_live = jnp.sum(selectable.astype(jnp.int32))
+        real = jnp.arange(n_scheduled) < n_live  # clamp like the scan path
+        indices = jnp.where(real, order, -1).astype(jnp.int32)
+        safe = jnp.maximum(indices, 0)
+        p_sel = jnp.where(real, probs[safe], 0.0)
+        cum_prev = jnp.concatenate(
+            [jnp.zeros((1,), p_sel.dtype), jnp.cumsum(p_sel)[:-1]]
+        )
+        step_probs = jnp.where(real, safe_div(p_sel, 1.0 - cum_prev), jnp.inf)
+        mask = jnp.zeros(n).at[safe].add(jnp.where(real, 1.0, 0.0))
+        return Schedule(indices=indices, step_probs=step_probs, mask=mask)
+    if method != "sequential":
+        raise ValueError(f"unknown sampling method {method!r}")
 
     def step(carry, k_key):
         mask, cum_p = carry

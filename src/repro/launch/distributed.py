@@ -260,7 +260,12 @@ def run_parity_lattice(mesh=None, n_rounds: int = 4):
 
     The second call must re-trace nothing (``n_lattice_traces`` flat) — the
     acceptance retrace guard runs INSIDE the worker topology, where the
-    trace is the expensive multi-process SPMD program.
+    trace is the expensive multi-process SPMD program. Since the
+    policy-fused lattice, the whole multi-policy spec is ONE engine (the
+    ``FUSED_POLICY`` cache sentinel), ONE trace, and ONE compile — and the
+    ``fuse_policies=False`` per-policy fallback must reproduce its records
+    bit for bit on the same topology (``fused_matches_fallback``), with the
+    cell axis now spanning policies across the process boundary.
     """
     import dataclasses as _dc
 
@@ -270,7 +275,7 @@ def run_parity_lattice(mesh=None, n_rounds: int = 4):
     from repro.core.pofl import POFLConfig
     from repro.data.partition import partition_noniid_shards
     from repro.data.synthetic import make_classification_dataset
-    from repro.sim.engine import cached_engine
+    from repro.sim.engine import FUSED_POLICY, cached_engine
     from repro.sim.lattice import run_lattice
 
     key = jax.random.PRNGKey(0)
@@ -290,30 +295,34 @@ def run_parity_lattice(mesh=None, n_rounds: int = 4):
     kw = dict(base_cfg=cfg, eval_fn=eval_fn, mesh=mesh)
     records = run_lattice(_parity_loss_fn, data, params0, spec, **kw)
 
-    traces = [
-        cached_engine(
-            _parity_loss_fn, data, _dc.replace(cfg, policy=p),
+    def fused_engine():
+        return cached_engine(
+            _parity_loss_fn, data, _dc.replace(cfg, policy=FUSED_POLICY),
             eval_fn=eval_fn, mesh=mesh,
-        ).n_lattice_traces
-        for p in spec.policies
-    ]
+        )
+
+    traces = fused_engine().n_lattice_traces
+    n_compiles = fused_engine().n_compiles
     repeat = run_lattice(_parity_loss_fn, data, params0, spec, **kw)
-    traces_after = [
-        cached_engine(
-            _parity_loss_fn, data, _dc.replace(cfg, policy=p),
-            eval_fn=eval_fn, mesh=mesh,
-        ).n_lattice_traces
-        for p in spec.policies
-    ]
+    traces_after = fused_engine().n_lattice_traces
     repeat_exact = all(
         np.array_equal(getattr(records, f), getattr(repeat, f))
+        for f in _RECORD_FIELDS
+    )
+    fallback = run_lattice(
+        _parity_loss_fn, data, params0, spec, fuse_policies=False, **kw
+    )
+    fused_matches_fallback = all(
+        np.array_equal(getattr(records, f), getattr(fallback, f))
         for f in _RECORD_FIELDS
     )
     meta = {
         "n_rounds": n_rounds,
         "traces_first": traces,
-        "retrace_delta": int(sum(traces_after) - sum(traces)),
+        "n_lattice_compiles": n_compiles,
+        "retrace_delta": int(traces_after - traces),
         "repeat_exact": bool(repeat_exact),
+        "fused_matches_fallback": bool(fused_matches_fallback),
     }
     return records, meta
 
@@ -324,8 +333,10 @@ def run_parity_lattice(mesh=None, n_rounds: int = 4):
 
 
 def _worker_parity(args) -> None:
+    from repro.sim.compile_cache import enable_compile_cache
     from repro.sim.multihost import initialize_distributed, make_global_cell_mesh
 
+    enable_compile_cache()  # REPRO_COMPILE_CACHE inherited from the launcher
     initialize_distributed()
     import jax
 
@@ -348,20 +359,29 @@ def _worker_parity(args) -> None:
 def _worker_bench(args) -> None:
     import time
 
+    from repro.sim.compile_cache import enable_compile_cache
     from repro.sim.multihost import initialize_distributed, make_global_cell_mesh
 
+    enable_compile_cache()  # REPRO_COMPILE_CACHE inherited from the launcher
     initialize_distributed()
     import jax
 
     from benchmarks.common import bench_sweep  # parent cwd is on PYTHONPATH
+    from repro.sim import engine_cache_stats
 
     mesh = make_global_cell_mesh()
     t0 = time.time()
-    _, seconds, cells = bench_sweep(
+    _, timings, cells = bench_sweep(
         backend=args.backend, mesh=mesh, n_rounds=args.n_rounds
     )
+    cache = engine_cache_stats()
     payload = {
-        "lattice_seconds": round(seconds, 3),
+        "lattice_seconds": round(timings["cold_seconds"], 3),
+        "steady_seconds": round(timings["steady_seconds"], 3),
+        "compile_seconds": round(timings["compile_seconds"], 3),
+        "n_compiles": timings["n_compiles"],
+        "engine_cache_hits": cache["hits"],
+        "engine_cache_misses": cache["misses"],
         "wall_seconds": round(time.time() - t0, 3),
         "cells": cells,
         "n_hosts": jax.process_count(),

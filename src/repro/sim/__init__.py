@@ -19,11 +19,17 @@ Three layers (see ROADMAP.md "sim" section):
     (:func:`make_global_cell_mesh`), per-process shard feeding and record
     gathering. Driven locally by ``repro.launch.distributed``.
 """
+from repro.sim.compile_cache import (
+    enable_compile_cache,
+    persistent_cache_counters,
+)
 from repro.sim.engine import (
+    FUSED_POLICY,
     SimEngine,
     SimState,
     cached_engine,
     engine_cache_stats,
+    lattice_compile_stats,
     reset_engine_cache,
 )
 from repro.sim.lattice import (
@@ -49,6 +55,7 @@ from repro.sim.scenario import (
 __all__ = [
     "CHANNEL_SCENARIOS",
     "DistributedConfig",
+    "FUSED_POLICY",
     "LatticeRecords",
     "LatticeSpec",
     "PARTITIONS",
@@ -56,13 +63,16 @@ __all__ = [
     "SimState",
     "cached_engine",
     "distributed_env",
+    "enable_compile_cache",
     "engine_cache_stats",
     "initialize_distributed",
+    "lattice_compile_stats",
     "make_cell_mesh",
     "make_channel_process",
     "make_global_cell_mesh",
     "make_partition",
     "mesh_spans_processes",
+    "persistent_cache_counters",
     "reset_engine_cache",
     "run_lattice",
 ]

@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import time
 from collections import OrderedDict
 from typing import Any, Callable, NamedTuple
 
@@ -49,6 +50,16 @@ import numpy as np
 from repro.core.channel import ChannelConfig
 from repro.core.pofl import DeviceData, History, POFLConfig, round_algorithm
 from repro.sim.scenario import make_channel_process
+
+# per-engine cap on cached AOT lattice executables (LRU eviction)
+_LATTICE_EXECUTABLES_MAX = 8
+
+# The cfg.policy sentinel of a POLICY-FUSED engine (``repro.sim.lattice``
+# with ``fuse_policies=True``): the policy is a traced per-cell input
+# (``policy_id``), so the engine's static policy string is deliberately not
+# a real policy — it only keys the engine cache, making the whole
+# multi-policy lattice ONE cache entry (and one compile).
+FUSED_POLICY = "__fused__"
 
 
 class SimState(NamedTuple):
@@ -134,6 +145,8 @@ class SimEngine:
         self.mesh = mesh
         self.n_traces = 0  # chunk-scan trace counter (see class docstring)
         self.n_lattice_traces = 0  # lattice-program trace counter
+        self.n_compiles = 0  # AOT lattice compiles (one per arg signature)
+        self.compile_seconds = 0.0  # trace+compile wall time of those
         # Donating the carry on CPU only triggers "donation not implemented"
         # warnings; donate on accelerators where it buys in-place reuse.
         donate = (0,) if jax.default_backend() != "cpu" else ()
@@ -144,6 +157,17 @@ class SimEngine:
         self._lattice_jit = jax.jit(
             jax.vmap(self._lattice_cell, in_axes=(None, None, None, 0, 0, 0))
         )
+        self._fused_lattice_jit = jax.jit(
+            jax.vmap(
+                self._fused_lattice_cell, in_axes=(None, None, None, 0, 0, 0, 0)
+            )
+        )
+        # AOT ``lower().compile()`` executable cache: arg signature →
+        # compiled lattice program (see :meth:`_aot_lattice_executable`).
+        # Bounded LRU, same rationale as PR 4's gather-jit cache: each entry
+        # pins a full XLA executable, so a long-lived process sweeping many
+        # lattice shapes must evict, not accumulate.
+        self._lattice_executables: OrderedDict[tuple, Any] = OrderedDict()
 
     # -- state construction -------------------------------------------------
 
@@ -164,6 +188,7 @@ class SimEngine:
         noise_power=None,          # traced scalar or None → cfg.noise_power
         alpha=None,                # traced scalar or None → cfg.alpha
         active: jnp.ndarray | None = None,  # (T,) bool — mask padded rounds
+        policy_id=None,            # traced int32 or None → cfg.policy string
     ) -> tuple[SimState, RoundRecord]:
         """Pure scan over rounds; vmap-safe (xs stay unbatched, so the eval
         ``lax.cond`` remains a genuine branch, not a select).
@@ -188,6 +213,7 @@ class SimEngine:
                 # processes that never drop skip the masking entirely →
                 # bit-identical to the legacy static path
                 avail=avail if self.process.can_drop else None,
+                policy_id=policy_id,
             )
             if self.eval_fn is None:
                 loss = acc = jnp.zeros(())
@@ -238,23 +264,112 @@ class SimEngine:
         )
         return recs
 
+    def _fused_lattice_cell(
+        self, params0, t_ints, do_eval, noise_power, alpha, seed, policy_id
+    ):
+        self.n_lattice_traces += 1  # Python body runs only when (re)tracing
+        state = self.init(params0, seed)
+        _, recs = self.scan_rounds(
+            state, t_ints, do_eval, noise_power=noise_power, alpha=alpha,
+            policy_id=policy_id,
+        )
+        return recs
+
+    @staticmethod
+    def _arg_signature(leaf) -> tuple:
+        """Hashable AOT-dispatch identity of one lattice argument: shape,
+        dtype, weak-typedness, and placement (a committed ``NamedSharding``
+        compiles a different — partitioned — program than the default
+        single-device placement; jax shardings hash by device layout, so two
+        equal meshes share a signature). Must never touch the leaf's VALUES:
+        a process-spanning global array cannot be fetched."""
+        dtype = getattr(leaf, "dtype", None)
+        if dtype is None:  # non-array leaf (never a global array)
+            dtype = np.asarray(leaf).dtype
+        return (
+            tuple(np.shape(leaf)),
+            str(dtype),
+            bool(getattr(leaf, "weak_type", False)),
+            getattr(leaf, "sharding", None),
+        )
+
+    def _aot_lattice_executable(self, fused: bool, args: tuple):
+        """The compiled lattice program for ``args`` — AOT, cached, counted.
+
+        First call for an argument signature pays ``jit.lower(...).compile()``
+        ONCE (wall time accumulated in ``compile_seconds``, count in
+        ``n_compiles``) and keeps the resulting executable; repeats dispatch
+        straight to it — no jit-cache lookup, no re-trace, and honest
+        compile-vs-steady-state accounting for ``benchmarks/run.py``. The
+        executable also exposes XLA's per-program ``cost_analysis`` /
+        ``memory_analysis`` (see :meth:`lattice_cost_analysis`).
+        """
+        leaves, treedef = jax.tree.flatten(args)
+        key = (fused, treedef, tuple(self._arg_signature(l) for l in leaves))
+        compiled = self._lattice_executables.get(key)
+        if compiled is None:
+            fn = self._fused_lattice_jit if fused else self._lattice_jit
+            t0 = time.perf_counter()
+            compiled = fn.lower(*args).compile()
+            self.compile_seconds += time.perf_counter() - t0
+            self.n_compiles += 1
+            self._lattice_executables[key] = compiled
+            while len(self._lattice_executables) > _LATTICE_EXECUTABLES_MAX:
+                self._lattice_executables.popitem(last=False)
+        else:
+            self._lattice_executables.move_to_end(key)
+        return compiled
+
     def run_lattice_cells(
-        self, params0, t_ints, do_eval, noise_b, alpha_b, seed_b
+        self, params0, t_ints, do_eval, noise_b, alpha_b, seed_b,
+        policy_b=None,
     ) -> RoundRecord:
-        """One jitted (vmap-over-cells ∘ scan-over-rounds) dispatch.
+        """One compiled (vmap-over-cells ∘ scan-over-rounds) dispatch.
 
         ``noise_b``/``alpha_b``/``seed_b`` are the flattened (B,) cell axes;
         when they carry a ``NamedSharding`` over a cell mesh (see
         ``sim.lattice``) the whole program partitions along that axis —
         computation follows the committed input placement, so the engine
-        needs no sharded/unsharded code split. The jit lives on the engine,
+        needs no sharded/unsharded code split. ``policy_b`` (flattened (B,)
+        int32 ``scheduling.POLICY_IDS``) switches to the POLICY-FUSED
+        program: the policy becomes one more vmapped cell axis, so a whole
+        multi-policy lattice is ONE compile. Dispatch is AOT
+        (``lower().compile()`` on first signature, cached executable after),
         so repeat calls through :func:`cached_engine` re-trace zero times
-        (``n_lattice_traces`` stays flat).
+        (``n_lattice_traces`` stays flat) and recompile zero times
+        (``n_compiles`` stays flat).
         """
-        return self._lattice_jit(
-            params0, jnp.asarray(t_ints), jnp.asarray(do_eval),
+        args = (
+            jax.tree.map(jnp.asarray, params0),
+            jnp.asarray(t_ints), jnp.asarray(do_eval),
             noise_b, alpha_b, seed_b,
         )
+        fused = policy_b is not None
+        if fused:
+            args = args + (policy_b,)
+        return self._aot_lattice_executable(fused, args)(*args)
+
+    def lattice_cost_analysis(self) -> dict:
+        """XLA ``cost_analysis`` (flops/bytes) of the most recent lattice
+        executable, as a flat dict ({} before the first compile).
+
+        jax-version compat: newer jax returns the dict directly, 0.4.x wraps
+        it in a one-element list (same shim as ``launch.dryrun``).
+        """
+        if not self._lattice_executables:
+            return {}
+        compiled = next(reversed(self._lattice_executables.values()))
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
+        return dict(cost)
+
+    def lattice_memory_analysis(self):
+        """XLA ``memory_analysis`` (argument/output/temp bytes) of the most
+        recent lattice executable, or None before the first compile."""
+        if not self._lattice_executables:
+            return None
+        return next(reversed(self._lattice_executables.values())).memory_analysis()
 
     def _chunk(self, state: SimState, t0, n_active, n_steps: int):
         self.n_traces += 1  # Python body runs only when (re)tracing
@@ -456,6 +571,18 @@ def cached_engine(
 def engine_cache_stats() -> dict:
     """Snapshot of the cross-call engine cache: hits/misses/size."""
     return {**_CACHE_STATS, "size": len(_ENGINE_CACHE)}
+
+
+def lattice_compile_stats() -> dict:
+    """Aggregate AOT lattice-compile counters over every cached engine:
+    ``{"n_compiles", "compile_seconds"}`` — the compile-vs-steady-state split
+    ``benchmarks/run.py`` reports (engines dropped by ``reset_engine_cache``
+    leave the aggregate, so scope a measurement with a reset first)."""
+    engines = list(_ENGINE_CACHE.values())
+    return {
+        "n_compiles": sum(e.n_compiles for e in engines),
+        "compile_seconds": sum(e.compile_seconds for e in engines),
+    }
 
 
 def reset_engine_cache() -> None:

@@ -1,29 +1,44 @@
-"""Experiment lattices: whole paper sweeps as one vmapped+scanned program.
+"""Experiment lattices: whole paper sweeps as ONE vmapped+scanned program.
 
 A :class:`LatticeSpec` names the sweep axes
 
     policies × noise_powers × alphas × seeds        (× n_rounds scanned)
 
-and :func:`run_lattice` compiles each policy's sub-lattice into a SINGLE
-jitted program: ``vmap`` over the flattened (noise, alpha, seed) grid of the
-engine's ``lax.scan`` over rounds. Policies (and anything shape-changing,
-e.g. n_devices or |S|) are structural, so they loop in Python — one compile
-per policy, reused across every cell. Per-cell metrics stay on device for
-the whole run and stream out exactly once at the end as structured numpy
-records.
+and :func:`run_lattice` compiles the ENTIRE lattice into a single program:
+``vmap`` over the flattened (policy, noise, alpha, seed) grid of the
+engine's ``lax.scan`` over rounds. The policy axis is *traced* — each cell
+carries an int32 ``policy_id`` dispatched by ``lax.switch``
+(``core.scheduling.scheduling_probs_by_id``), so a 5-policy sweep pays ONE
+trace and ONE XLA compile instead of five (the engine cache likewise holds
+one entry per lattice, keyed by the ``FUSED_POLICY`` sentinel).
+``fuse_policies=False`` keeps the per-policy Python loop (one compile per
+policy, each over the same traced-dispatch cell program with a constant
+``policy_id``) — pinned bit-identical to the fused path by
+tests/test_fused_lattice.py. The historical ``cfg.policy`` STRING dispatch
+remains the round engine's default (``run_pofl`` trajectories are pinned on
+it) and is pinned against the traced dispatch bitwise at the
+``scheduling_probs`` level; whole-lattice string-vs-switch comparisons are
+dtype-exact up to the documented ≤1-ULP cross-program reduction wobble
+(same phenomenon as the PR-4 multi-host ``e_var`` carve-out). Anything
+shape-changing (n_devices, |S|, samplers) remains structural either way. Per-cell metrics
+stay on device for the whole run and stream out exactly once at the end as
+structured numpy records.
 
 Compared to looping ``run_pofl`` over (policy × trial × sweep-point) — the
 seed repo's benchmark harness — this removes the per-round host sync and the
 per-(trial, sweep-point) recompiles; see benchmarks/run.py's ``BENCH_sim``
-entry for the measured cells/sec.
+entry for the measured cells/sec (``compile_seconds`` vs
+``steady_cells_per_sec`` — dispatch is AOT ``lower().compile()`` on the
+engine, and ``repro.sim.compile_cache`` can persist the compiles across
+processes).
 
-Sharding: ``run_lattice(..., mesh=...)`` places the flattened cell axis on a
-``jax.sharding.Mesh`` with ``NamedSharding(P("cells"))`` — the grid is padded
-to a multiple of the mesh size with dead cells (repeats of the last real
-cell) whose outputs are masked off at unpadding, and the per-policy
-vmapped+scanned program is reused unchanged, so a 1-device mesh is
-bit-identical to the unsharded path (pinned by
-tests/test_lattice_sharded.py). ``mesh`` may be a Mesh, a device count
+Sharding: ``run_lattice(..., mesh=...)`` places the flattened cell axis —
+which now spans policies too — on a ``jax.sharding.Mesh`` with
+``NamedSharding(P("cells"))``: the grid is padded to a multiple of the mesh
+size with dead cells (repeats of the last real cell) whose outputs are
+masked off at unpadding, and the same vmapped+scanned program is reused
+unchanged, so a 1-device mesh is bit-identical to the unsharded path (pinned
+by tests/test_lattice_sharded.py). ``mesh`` may be a Mesh, a device count
 (→ :func:`make_cell_mesh`), or None. Engines are cached across calls by
 ``sim.engine.cached_engine`` keyed on the mesh identity, so repeat sharded
 calls re-trace zero times.
@@ -48,9 +63,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec
 
+from repro.core import scheduling
 from repro.core.channel import ChannelConfig
 from repro.core.pofl import DeviceData, POFLConfig
-from repro.sim.engine import cached_engine
+from repro.sim.engine import FUSED_POLICY, cached_engine
 from repro.sim.multihost import (
     cells_mesh_over,
     gather_records,
@@ -148,8 +164,9 @@ def run_lattice(
     scenario: str = "static_rayleigh",
     scenario_params: dict | None = None,
     mesh: jax.sharding.Mesh | int | None = None,
+    fuse_policies: bool = True,
 ) -> LatticeRecords:
-    """Run the full lattice; one jitted (vmap ∘ scan) program per policy.
+    """Run the full lattice; ONE compiled (vmap ∘ scan) program for the spec.
 
     Args:
       eval_fn: traceable ``params -> (loss, acc)`` — evaluated inside the
@@ -171,6 +188,13 @@ def run_lattice(
         (``sim.multihost.make_global_cell_mesh`` under ``jax.distributed``)
         switches input feeding to per-process shard assembly and records to
         an allgather — every host returns the same full records.
+      fuse_policies: True (default) folds the policy axis into the traced
+        program — every cell carries an int32 ``policy_id``, the whole
+        lattice is one engine-cache entry / one trace / one compile. False
+        restores the per-policy Python loop — each policy compiles its own
+        (smaller) program over the same traced-dispatch cell body with a
+        constant ``policy_id`` axis, so records are bit-identical to the
+        fused path; kept as the debugging/fallback route.
     """
     base_cfg = base_cfg or POFLConfig(n_devices=data.n_devices)
     if isinstance(mesh, int):
@@ -183,14 +207,24 @@ def run_lattice(
         do_eval = np.zeros(spec.n_rounds, bool)
     eval_rounds = t_ints[do_eval]
 
-    # flattened vmap grid over (noise, alpha, seed)
-    grid_n, grid_a, grid_s = np.meshgrid(
+    # flattened vmap grid: (policy,) × noise × alpha × seed when fused —
+    # policy-major, so the fused flat order equals the per-policy stack order
+    grid_axes = [
         np.asarray(spec.noise_powers, np.float32),
         np.asarray(spec.alphas, np.float32),
         np.asarray(spec.seeds, np.int32),
-        indexing="ij",
-    )
-    cells = [grid_n.ravel(), grid_a.ravel(), grid_s.ravel()]
+    ]
+    if fuse_policies:
+        pol_ids = np.asarray(
+            [scheduling.policy_id(p) for p in spec.policies], np.int32
+        )
+        grid_p, grid_n, grid_a, grid_s = np.meshgrid(
+            pol_ids, *grid_axes, indexing="ij"
+        )
+        cells = [grid_n.ravel(), grid_a.ravel(), grid_s.ravel(), grid_p.ravel()]
+    else:
+        grid_n, grid_a, grid_s = np.meshgrid(*grid_axes, indexing="ij")
+        cells = [grid_n.ravel(), grid_a.ravel(), grid_s.ravel()]
     n_real = cells[0].size
 
     multihost = mesh_spans_processes(mesh)
@@ -202,23 +236,26 @@ def run_lattice(
         if pad:
             cells = [np.concatenate([c, np.repeat(c[-1:], pad)]) for c in cells]
         cell_sharding = NamedSharding(mesh, PartitionSpec(mesh.axis_names[0]))
+
         if multihost:
             # every process holds the same deterministic grid; each commits
             # only the shards its own devices own
-            noise_b, alpha_b, seed_b = (
-                shard_to_global(c, cell_sharding) for c in cells
-            )
+            def place(c):
+                return shard_to_global(c, cell_sharding)
         else:
-            noise_b, alpha_b, seed_b = (
-                jax.device_put(jnp.asarray(c), cell_sharding) for c in cells
-            )
+            def place(c):
+                return jax.device_put(jnp.asarray(c), cell_sharding)
     else:
-        noise_b, alpha_b, seed_b = (jnp.asarray(c) for c in cells)
+        def place(c):
+            return jnp.asarray(c)
 
-    per_policy = []
-    for policy in spec.policies:
-        cfg = dataclasses.replace(base_cfg, policy=policy, n_devices=data.n_devices)
-        engine = cached_engine(
+    cells_b = [place(c) for c in cells]
+    n_padded = cells[0].size
+
+    grid_shape = (len(spec.noise_powers), len(spec.alphas), len(spec.seeds))
+
+    def one_engine(cfg: POFLConfig):
+        return cached_engine(
             loss_fn, data, cfg,
             channel_cfg=channel_cfg,
             scenario=scenario,
@@ -226,13 +263,50 @@ def run_lattice(
             eval_fn=eval_fn,
             mesh=mesh,
         )
-        recs = engine.run_lattice_cells(
-            params0, t_ints, do_eval, noise_b, alpha_b, seed_b
+
+    if fuse_policies:
+        noise_b, alpha_b, seed_b, policy_b = cells_b
+        cfg = dataclasses.replace(
+            base_cfg, policy=FUSED_POLICY, n_devices=data.n_devices
+        )
+        recs = one_engine(cfg).run_lattice_cells(
+            params0, t_ints, do_eval, noise_b, alpha_b, seed_b,
+            policy_b=policy_b,
         )
         if multihost:
             # drain the (collective-free) compute before the gather's single
             # collective program launches anywhere — overlapping launches are
             # what the CPU gloo runtime cannot be trusted with
+            jax.block_until_ready(recs)
+        # single stream-out: device → host exactly once for the whole
+        # lattice, dropping any dead padding cells
+        recs = gather_records(recs, mesh) if multihost else jax.device_get(recs)
+        recs = jax.tree.map(lambda a: a[:n_real], recs)
+
+        def gather(field: str, eval_only: bool) -> np.ndarray:
+            stacked = np.asarray(getattr(recs, field))  # (P·B, T), policy-major
+            stacked = stacked.reshape(
+                (len(spec.policies),) + grid_shape + (spec.n_rounds,)
+            )
+            return stacked[..., do_eval] if eval_only else stacked
+
+        return _assemble_records(spec, gather, eval_rounds)
+
+    noise_b, alpha_b, seed_b = cells_b
+    per_policy = []
+    for policy in spec.policies:
+        # same traced-dispatch cell program, constant policy axis — one
+        # (smaller) compile per policy, per-cell values bit-identical to the
+        # fused program's lanes
+        policy_b = place(
+            np.full((n_padded,), scheduling.policy_id(policy), np.int32)
+        )
+        cfg = dataclasses.replace(base_cfg, policy=policy, n_devices=data.n_devices)
+        recs = one_engine(cfg).run_lattice_cells(
+            params0, t_ints, do_eval, noise_b, alpha_b, seed_b,
+            policy_b=policy_b,
+        )
+        if multihost:
             jax.block_until_ready(recs)
         per_policy.append(recs)  # stays on device until the final stream-out
 
@@ -243,13 +317,16 @@ def run_lattice(
         gather_records(per_policy, mesh) if multihost else jax.device_get(per_policy)
     )
     per_policy = jax.tree.map(lambda a: a[:n_real], per_policy)
-    grid_shape = (len(spec.noise_powers), len(spec.alphas), len(spec.seeds))
 
     def gather(field: str, eval_only: bool) -> np.ndarray:
         stacked = np.stack([getattr(r, field) for r in per_policy])  # (P, B, T)
         stacked = stacked.reshape((len(spec.policies),) + grid_shape + (spec.n_rounds,))
         return stacked[..., do_eval] if eval_only else stacked
 
+    return _assemble_records(spec, gather, eval_rounds)
+
+
+def _assemble_records(spec: LatticeSpec, gather, eval_rounds) -> LatticeRecords:
     return LatticeRecords(
         axes={
             "policy": list(spec.policies),

@@ -2,10 +2,13 @@
 cell meshes + per-process shard feeding and record gathering.
 
 PR 3 sharded the lattice's flattened cell axis over a *single-process* mesh;
-this module is the process-spanning half of that story. Each participating
-process runs the SAME ``run_lattice`` call (SPMD — every process executes
-every ``jax.jit`` dispatch), but only materializes / computes the shard of
-the padded cell grid that lives on its addressable devices:
+this module is the process-spanning half of that story (and since the PR-5
+policy-fused lattice the sharded cell axis spans POLICIES too — the whole
+multi-policy spec is one program whose shard feed and record gather route
+through here unchanged). Each participating process runs the SAME
+``run_lattice`` call (SPMD — every process executes every compiled
+dispatch), but only materializes / computes the shard of the padded cell
+grid that lives on its addressable devices:
 
   * :func:`initialize_distributed` wires ``jax.distributed`` from explicit
     args or the ``REPRO_DIST_*`` env contract written by

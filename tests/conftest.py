@@ -1,16 +1,32 @@
-"""Shared fixtures: engine-cache hygiene.
+"""Shared fixtures: engine-cache hygiene + opt-in persistent compile cache.
 
 The cross-call engine cache (``repro.sim.engine``) is process-global, so a
 test asserting on ``engine_cache_stats()`` counters (or on which engine a
 call returns) would otherwise depend on which tests ran before it. Every
 test starts from an empty cache with zeroed counters; caching behavior is
 still fully exercised *within* each test (that is what the cache tests do).
+
+Persistent compiles: when ``REPRO_COMPILE_CACHE=<dir>`` is exported, every
+XLA compile in the test session is persisted there / reloaded from there
+(``repro.sim.compile_cache``) — CI runs the compile-heavy suites against an
+``actions/cache``'d directory. ``REPRO_COMPILE_CACHE_EXPECT_HITS=1``
+additionally makes the session FAIL unless at least one compile was served
+from the persistent cache — the warm-second-run assertion of the CI jobs.
 """
 from __future__ import annotations
 
+import os
+
 import pytest
 
-from repro.sim import engine_cache_stats, reset_engine_cache
+from repro.sim import (
+    enable_compile_cache,
+    engine_cache_stats,
+    persistent_cache_counters,
+    reset_engine_cache,
+)
+
+_CACHE_DIR = enable_compile_cache()  # no-op (None) unless the env var is set
 
 
 @pytest.fixture(scope="session", autouse=True)
@@ -29,3 +45,25 @@ def _fresh_engine_cache():
     """Order-independence: every test sees an empty engine cache."""
     reset_engine_cache()
     yield
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _persistent_cache_hits_guard():
+    """With ``REPRO_COMPILE_CACHE_EXPECT_HITS`` set, a session that never
+    hit the persistent compilation cache is a FAILURE — CI's warm re-run
+    proves compiles actually survive across processes."""
+    yield
+    counters = persistent_cache_counters()
+    if _CACHE_DIR:
+        print(
+            f"\npersistent compile cache {_CACHE_DIR}: "
+            f"{counters['hits']} hit(s), {counters['misses']} miss(es)"
+        )
+    if os.environ.get("REPRO_COMPILE_CACHE_EXPECT_HITS"):
+        assert _CACHE_DIR, (
+            "REPRO_COMPILE_CACHE_EXPECT_HITS needs REPRO_COMPILE_CACHE set"
+        )
+        assert counters["hits"] > 0, (
+            "expected persistent compilation-cache hits on this warm run, "
+            f"got none (counters: {counters}, dir: {_CACHE_DIR})"
+        )

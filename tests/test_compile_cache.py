@@ -1,0 +1,65 @@
+"""Persistent compilation cache (ISSUE 5): the REPRO_COMPILE_CACHE contract.
+
+In-process unit tests for the enable/no-op/counter plumbing, plus a
+subprocess pair proving compiles actually survive process death: a cold
+process populates the cache directory, a second fresh process compiles the
+same program and must log persistent-cache HITS (the same assertion CI's
+warm pytest re-run makes via the conftest guard).
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+from repro.sim import compile_cache
+
+HERE = os.path.dirname(__file__)
+SRC = os.path.abspath(os.path.join(HERE, "..", "src"))
+
+_PROBE = """
+import jax, jax.numpy as jnp
+from repro.sim.compile_cache import enable_compile_cache, persistent_cache_counters
+assert enable_compile_cache() is not None
+f = jax.jit(lambda x: jnp.sin(x) @ jnp.cos(x).T)
+f(jnp.ones((32, 32))).block_until_ready()
+print("HITS", persistent_cache_counters()["hits"])
+"""
+
+
+def test_enable_is_noop_without_contract(monkeypatch):
+    monkeypatch.delenv(compile_cache.ENV_CACHE_DIR, raising=False)
+    assert compile_cache.enable_compile_cache() is None
+    assert compile_cache.cache_dir_entries() == 0
+
+
+def test_cache_dir_entries_counts_payloads(tmp_path):
+    (tmp_path / "a-cache").write_bytes(b"x")
+    (tmp_path / "a-atime").write_bytes(b"x")  # LRU sidecar, not a payload
+    (tmp_path / "b-cache").write_bytes(b"x")
+    assert compile_cache.cache_dir_entries(str(tmp_path)) == 2
+    assert compile_cache.cache_dir_entries(str(tmp_path / "missing")) == 0
+
+
+def test_persistent_cache_hits_across_processes(tmp_path):
+    """Cold process populates REPRO_COMPILE_CACHE; a FRESH process compiling
+    the same program must be served from it (hits > 0) — in-memory jit
+    caches cannot explain that, only the persistent layer can."""
+    env = dict(
+        os.environ, PYTHONPATH=SRC, JAX_PLATFORMS="cpu",
+        REPRO_COMPILE_CACHE=str(tmp_path),
+    )
+
+    def probe() -> int:
+        out = subprocess.run(
+            [sys.executable, "-c", _PROBE], env=env,
+            capture_output=True, text=True, timeout=120,
+        )
+        assert out.returncode == 0, out.stdout + out.stderr
+        return int(out.stdout.split("HITS")[1].strip())
+
+    cold_hits = probe()
+    assert compile_cache.cache_dir_entries(str(tmp_path)) > 0
+    warm_hits = probe()
+    assert cold_hits == 0
+    assert warm_hits > 0

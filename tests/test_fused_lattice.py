@@ -1,0 +1,284 @@
+"""Policy-fused lattice suite (ISSUE 5 tentpole pin).
+
+Contracts pinned here:
+
+  * a multi-policy ``LatticeSpec`` (≥3 policies) compiles exactly ONE
+    lattice program: one engine-cache entry (the ``FUSED_POLICY`` sentinel),
+    ``n_lattice_traces == 1``, ``n_compiles == 1`` — and an identical repeat
+    call re-traces and re-compiles ZERO times with bit-identical records;
+  * the ``fuse_policies=False`` per-policy fallback (same traced-dispatch
+    cell program, constant policy axis, one smaller compile per policy) is
+    BIT-IDENTICAL to the fused path — unmeshed, on a 1-device mesh, on the
+    8-fake-device mesh, for the ``jnp`` and ``pallas_fused``-interpret
+    backends, and for the ``topk`` sampler;
+  * the engine's AOT ``lower().compile()`` path exposes per-program
+    ``cost_analysis`` / ``memory_analysis`` and a ``compile_seconds``
+    counter;
+  * the traced ``lax.switch`` dispatch tracks the historical ``cfg.policy``
+    string dispatch: bitwise at the ``scheduling_probs`` level (see
+    tests/test_scheduling.py), and at whole-trajectory level dtype-exact up
+    to the documented ≤1-ULP cross-program reduction wobble (the same
+    carve-out PR 4 established for multi-host ``e_var``).
+
+The 8-device legs run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+(the sharded-8dev CI job) and skip elsewhere.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import POFLConfig
+from repro.core.scheduling import POLICY_IDS
+from repro.data import make_classification_dataset, partition_noniid_shards
+from repro.sim import (
+    FUSED_POLICY,
+    LatticeSpec,
+    cached_engine,
+    engine_cache_stats,
+    lattice_compile_stats,
+    make_cell_mesh,
+    run_lattice,
+)
+
+N_VISIBLE = len(jax.devices())
+needs_8_devices = pytest.mark.skipif(
+    N_VISIBLE < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8",
+)
+
+_RECORD_FIELDS = ("e_com", "e_var", "grad_norm", "n_scheduled", "loss", "acc")
+
+MULTI_POLICY_SPEC = LatticeSpec(
+    policies=("pofl", "importance", "channel", "noisefree", "deterministic"),
+    noise_powers=(1e-11, 1e-9),
+    seeds=(0, 1000),
+    n_rounds=3,
+    eval_every=2,
+)
+
+
+def _loss_fn(params, x, y):
+    logits = x @ params["w"] + params["b"]
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    key = jax.random.PRNGKey(0)
+    x, y = make_classification_dataset("mnist_like", 640, key)
+    data = partition_noniid_shards(x, y, n_devices=8)
+    params0 = {"w": jnp.zeros((784, 10)), "b": jnp.zeros((10,))}
+
+    def ev(p):
+        logits = x[:200] @ p["w"] + p["b"]
+        return _loss_fn(p, x[:200], y[:200]), jnp.mean(
+            jnp.argmax(logits, -1) == y[:200]
+        )
+
+    return data, params0, ev
+
+
+def _assert_bit_identical(a, b, ulp_fields=()):
+    """Dtype-exact structured equality; ``ulp_fields`` relaxes named fields
+    to rtol 1e-6 where two program SHAPES (not values) are being compared —
+    the documented ≤1-ULP cross-program reduction wobble (PR-4 precedent)."""
+    assert a.axes == b.axes
+    np.testing.assert_array_equal(a.eval_rounds, b.eval_rounds)
+    for f in _RECORD_FIELDS:
+        fa, fb = getattr(a, f), getattr(b, f)
+        assert fa.shape == fb.shape, f
+        assert fa.dtype == fb.dtype, f
+        if f in ulp_fields:
+            np.testing.assert_allclose(fa, fb, rtol=1e-6, err_msg=f)
+        else:
+            np.testing.assert_array_equal(fa, fb, err_msg=f)
+
+
+def _sweep(setup, mesh=None, spec=MULTI_POLICY_SPEC, fuse=True, **cfg_kw):
+    data, params0, ev = setup
+    cfg = POFLConfig(n_devices=8, n_scheduled=3, **cfg_kw)
+    return run_lattice(
+        _loss_fn, data, params0, spec, base_cfg=cfg, eval_fn=ev, mesh=mesh,
+        fuse_policies=fuse,
+    )
+
+
+def _fused_engine(setup, mesh=None, **cfg_kw):
+    data, _, ev = setup
+    cfg = POFLConfig(n_devices=8, n_scheduled=3, policy=FUSED_POLICY, **cfg_kw)
+    return cached_engine(_loss_fn, data, cfg, eval_fn=ev, mesh=mesh)
+
+
+# --------------------------------------------------------------------------
+# acceptance: one engine, one trace, one compile for a ≥3-policy lattice
+# --------------------------------------------------------------------------
+
+
+def test_multi_policy_lattice_compiles_once(setup):
+    """5 policies × 2 noise × 2 seeds: ONE engine-cache miss, ONE trace, ONE
+    XLA compile — and the repeat call adds none of the three, returning
+    bit-identical records."""
+    assert len(MULTI_POLICY_SPEC.policies) >= 3
+    first = _sweep(setup)
+    stats = engine_cache_stats()
+    assert stats["misses"] == 1, stats
+    engine = _fused_engine(setup)
+    assert engine.n_lattice_traces == 1
+    assert engine.n_compiles == 1
+    assert engine.compile_seconds > 0.0
+    assert lattice_compile_stats() == {
+        "n_compiles": 1, "compile_seconds": engine.compile_seconds,
+    }
+
+    repeat = _sweep(setup)
+    assert engine.n_lattice_traces == 1  # ZERO retraces
+    assert engine.n_compiles == 1        # ZERO recompiles
+    assert engine_cache_stats()["misses"] == 1
+    _assert_bit_identical(first, repeat)
+
+
+def test_fallback_pays_one_compile_per_policy(setup):
+    """The fuse_policies=False loop is the old cost model: one engine and
+    one (smaller) compile per policy — the number the fused path collapses."""
+    _sweep(setup, fuse=False)
+    stats = engine_cache_stats()
+    assert stats["misses"] == len(MULTI_POLICY_SPEC.policies)
+    cs = lattice_compile_stats()
+    assert cs["n_compiles"] == len(MULTI_POLICY_SPEC.policies)
+
+
+# --------------------------------------------------------------------------
+# fused ≡ fallback, bit for bit, across backends / mesh / sampler
+# --------------------------------------------------------------------------
+
+
+def test_fused_matches_fallback_unmeshed(setup):
+    _assert_bit_identical(_sweep(setup), _sweep(setup, fuse=False))
+
+
+def test_fused_matches_fallback_one_device_mesh(setup):
+    mesh = make_cell_mesh(1)
+    fused = _sweep(setup, mesh=mesh)
+    _assert_bit_identical(fused, _sweep(setup, mesh=mesh, fuse=False))
+    # and the meshed fused lattice is the unmeshed fused lattice, bit for bit
+    _assert_bit_identical(fused, _sweep(setup))
+
+
+def test_fused_matches_fallback_pallas_interpret(setup, monkeypatch):
+    """The pallas_fused aggregation backend (interpret-mode kernel on CPU)
+    composes with the traced policy dispatch: fused ≡ fallback bitwise."""
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    spec = dataclasses.replace(MULTI_POLICY_SPEC, seeds=(0,))
+    fused = _sweep(setup, spec=spec, backend="pallas_fused")
+    fallback = _sweep(setup, spec=spec, fuse=False, backend="pallas_fused")
+    _assert_bit_identical(fused, fallback)
+
+
+def test_fused_matches_fallback_bernoulli_sampler(setup):
+    """The PO-FL-B Horvitz–Thompson sampler's fused select (is_det over
+    bernoulli vs deterministic weights/masks, both branches drawing from the
+    same k_sched) matches the per-policy fallback bit for bit."""
+    spec = dataclasses.replace(MULTI_POLICY_SPEC, seeds=(0,))
+    fused = _sweep(setup, spec=spec, sampler="bernoulli")
+    fallback = _sweep(setup, spec=spec, fuse=False, sampler="bernoulli")
+    _assert_bit_identical(fused, fallback)
+
+
+def test_fused_matches_fallback_topk_sampler(setup):
+    """The Gumbel top-k sampler fast path rides the fused dispatch too.
+    The top-k program shape happens to fuse the eval-loss reduction
+    differently at the two batch sizes (fused 20 cells vs fallback 4), so
+    ``loss`` gets the ULP carve-out; every trajectory field stays exact."""
+    spec = dataclasses.replace(MULTI_POLICY_SPEC, seeds=(0,))
+    fused = _sweep(setup, spec=spec, sampler="topk")
+    fallback = _sweep(setup, spec=spec, fuse=False, sampler="topk")
+    _assert_bit_identical(fused, fallback, ulp_fields=("loss",))
+    assert np.isfinite(fused.e_com).all()
+    assert (fused.n_scheduled <= 3).all() and (fused.n_scheduled >= 1).all()
+
+
+@needs_8_devices
+def test_fused_matches_fallback_eight_device_mesh(setup):
+    """Acceptance (meshed): the policy-spanning cell axis shards over 8 fake
+    devices (20 real cells padded to 24; the fallback pads 4 → 8 per policy)
+    and fused ≡ fallback ≡ unmeshed-fused, bit for bit."""
+    mesh = make_cell_mesh(8)
+    fused = _sweep(setup, mesh=mesh)
+    _assert_bit_identical(fused, _sweep(setup, mesh=mesh, fuse=False))
+    _assert_bit_identical(fused, _sweep(setup))
+
+
+# --------------------------------------------------------------------------
+# traced switch vs historical string dispatch (documented ULP carve-out)
+# --------------------------------------------------------------------------
+
+
+def test_traced_dispatch_tracks_string_dispatch(setup):
+    """Same engine, same cells, policy dispatched by traced id vs by the
+    historical cfg.policy string: the two are DIFFERENT XLA programs, so
+    reduction outputs may wobble by ≤1 ULP (exactly the PR-4 multi-host
+    ``e_var`` phenomenon) — pinned here at rtol 1e-6 with the integer
+    ``n_scheduled`` exact. The bitwise contract for the switch itself lives
+    at the ``scheduling_probs_by_id`` level (tests/test_scheduling.py)."""
+    data, params0, ev = setup
+    t_ints = np.arange(3, dtype=np.int32)
+    do_eval = np.zeros(3, bool)
+    noise_b = jnp.full((4,), 1e-9, jnp.float32)
+    alpha_b = jnp.full((4,), 0.1, jnp.float32)
+    seed_b = jnp.arange(4, dtype=jnp.int32) * 1000
+    for policy in ("pofl", "deterministic", "noisefree"):
+        cfg = POFLConfig(n_devices=8, n_scheduled=3, policy=policy)
+        engine = cached_engine(_loss_fn, data, cfg, eval_fn=ev)
+        by_string = engine.run_lattice_cells(
+            params0, t_ints, do_eval, noise_b, alpha_b, seed_b
+        )
+        by_id = engine.run_lattice_cells(
+            params0, t_ints, do_eval, noise_b, alpha_b, seed_b,
+            policy_b=jnp.full((4,), POLICY_IDS[policy], jnp.int32),
+        )
+        np.testing.assert_array_equal(
+            np.asarray(by_string.n_scheduled), np.asarray(by_id.n_scheduled),
+            err_msg=policy,
+        )
+        for f in ("e_com", "e_var", "grad_norm", "loss", "acc"):
+            np.testing.assert_allclose(
+                np.asarray(getattr(by_string, f)), np.asarray(getattr(by_id, f)),
+                rtol=1e-6, err_msg=f"{policy}:{f}",
+            )
+
+
+# --------------------------------------------------------------------------
+# AOT program introspection
+# --------------------------------------------------------------------------
+
+
+def test_aot_exposes_cost_and_memory_analysis(setup):
+    spec = LatticeSpec(policies=("pofl", "channel"), seeds=(0,), n_rounds=2)
+    _sweep(setup, spec=spec)
+    engine = _fused_engine(setup)
+    cost = engine.lattice_cost_analysis()
+    assert cost and any("flops" in k for k in cost)
+    mem = engine.lattice_memory_analysis()
+    assert mem is not None and mem.output_size_in_bytes > 0
+    assert engine.compile_seconds > 0.0 and engine.n_compiles == 1
+
+
+def test_aot_cache_distinguishes_signatures(setup):
+    """A different cell-axis length is a different executable (one more
+    compile), but repeating either signature costs nothing new."""
+    spec2 = LatticeSpec(policies=("pofl", "channel"), seeds=(0, 1), n_rounds=2)
+    spec3 = dataclasses.replace(spec2, seeds=(0, 1, 2))
+    _sweep(setup, spec=spec2)
+    engine = _fused_engine(setup)
+    assert engine.n_compiles == 1
+    _sweep(setup, spec=spec3)
+    assert engine.n_compiles == 2
+    _sweep(setup, spec=spec2)
+    _sweep(setup, spec=spec3)
+    assert engine.n_compiles == 2

@@ -23,6 +23,7 @@ import pytest
 from repro.core import POFLConfig
 from repro.data import make_classification_dataset, partition_dirichlet_sized, partition_noniid_shards
 from repro.sim import (
+    FUSED_POLICY,
     LatticeRecords,
     LatticeSpec,
     cached_engine,
@@ -149,8 +150,10 @@ def test_repeat_sharded_call_zero_retraces(setup):
     first = run_lattice(
         _loss_fn, data, params0, spec, base_cfg=cfg, eval_fn=ev, mesh=mesh
     )
+    # the policy-fused lattice is ONE engine keyed by the FUSED_POLICY
+    # sentinel, regardless of how many policies the spec names
     engine = cached_engine(
-        _loss_fn, data, dataclasses.replace(cfg, policy="pofl"),
+        _loss_fn, data, dataclasses.replace(cfg, policy=FUSED_POLICY),
         eval_fn=ev, mesh=mesh,
     )
     traces = engine.n_lattice_traces

@@ -213,6 +213,12 @@ def test_two_process_lattice_matches_single_host(tmp_path):
     # zero retraces on the repeat sharded call, and bit-stable repeat records
     assert meta["retrace_delta"] == 0
     assert meta["repeat_exact"] is True
+    # the policy-FUSED lattice: the whole 2-policy spec is one trace / one
+    # compile inside the worker topology, and the per-policy fallback
+    # reproduces it bit for bit across the process boundary
+    assert meta["traces_first"] == 1
+    assert meta["n_lattice_compiles"] == 1
+    assert meta["fused_matches_fallback"] is True
 
     reference, ref_meta = run_parity_lattice(mesh=None)
     assert ref_meta["retrace_delta"] == 0

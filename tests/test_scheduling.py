@@ -407,6 +407,192 @@ def test_property_sampler_invariants_and_eq36_renormalization(n, s, seed, n_zero
     np.testing.assert_allclose(pi.sum(), s, rtol=1e-3)
 
 
+@settings(max_examples=60, deadline=None)
+@given(
+    policy=st.sampled_from(scheduling.POLICIES),
+    n=st.integers(2, 24),
+    seed=st.integers(0, 2**31 - 1),
+    h_regime=st.sampled_from(["normal", "faded", "underflow", "zero"]),
+    zero_norms=st.booleans(),
+    onehot_frac=st.booleans(),
+    alpha=st.floats(1e-3, 10.0),
+    noise_power=st.sampled_from([0.0, 1e-11, 1e-2]),
+)
+def test_property_probs_by_id_tracks_string_dispatch(
+    policy, n, seed, h_regime, zero_norms, onehot_frac, alpha, noise_power
+):
+    """ISSUE 5 tentpole pin: for EVERY policy id, the traced ``lax.switch``
+    dispatch (``scheduling_probs_by_id``) computes the string dispatch's
+    arithmetic. The branch table is op-for-op the string version, but XLA
+    compiles HLO-conditional branch computations separately from the main
+    computation, so internal reductions (``v_g_tilde``, the Σq normalizer)
+    may round differently by ≤1 ULP — measured, deterministic, and
+    identical in kind to the PR-4 cross-program ``e_var`` carve-out. The
+    pin is therefore: ≤1-ULP agreement with the string dispatch (rtol 3e-7)
+    in every form (direct and the vmapped all-branches-and-select form the
+    fused lattice compiles), plus BITWISE lane determinism of the vmapped
+    form. The end-to-end bitwise contract lives where it is achievable and
+    load-bearing: the fused lattice vs its per-policy fallback (both
+    switch programs) in tests/test_fused_lattice.py. Inputs include the
+    PR-4 extremes: |h| → 0 exactly (float32 ``h²`` underflow), all-zero
+    norms, one-hot data_frac, σ_z² = 0."""
+    key = jax.random.PRNGKey(seed)
+    k_n, k_v, k_h = jax.random.split(key, 3)
+    norms = (
+        jnp.zeros((n,))
+        if zero_norms
+        else jax.random.uniform(k_n, (n,), minval=0.1, maxval=5.0)
+    )
+    gvars = jax.random.uniform(k_v, (n,), minval=0.0, maxval=1.0)
+    h_scale = {"normal": 1.0, "faded": 1e-12, "underflow": 1e-25, "zero": 0.0}
+    h_abs = jax.random.uniform(k_h, (n,), minval=0.0, maxval=1.0) * h_scale[h_regime]
+    frac = (
+        jnp.zeros((n,)).at[seed % n].set(1.0)
+        if onehot_frac
+        else jnp.full((n,), 1.0 / n)
+    )
+    pid = scheduling.policy_id(policy)
+    assert scheduling.POLICIES[pid] == policy
+
+    def both(i, al, no):
+        return (
+            scheduling.scheduling_probs(
+                policy, norms, gvars, h_abs, frac, 128, al, 1.0, no
+            ),
+            scheduling.scheduling_probs_by_id(
+                i, norms, gvars, h_abs, frac, 128, al, 1.0, no
+            ),
+        )
+
+    a32, s32 = jnp.float32(alpha), jnp.float32(noise_power)
+    want, direct = jax.jit(both)(jnp.int32(pid), a32, s32)
+    np.testing.assert_allclose(
+        np.asarray(want), np.asarray(direct), rtol=3e-7, atol=1e-10
+    )
+    assert np.isfinite(np.asarray(direct)).all()
+    assert (np.asarray(direct) >= 0).all()
+    np.testing.assert_allclose(float(np.asarray(direct).sum()), 1.0, rtol=1e-4)
+
+    batched = jax.jit(jax.vmap(
+        lambda i: scheduling.scheduling_probs_by_id(
+            i, norms, gvars, h_abs, frac, 128, a32, 1.0, s32
+        )
+    ))(jnp.full((2,), pid, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(batched[0]), np.asarray(batched[1]))
+    np.testing.assert_allclose(
+        np.asarray(want), np.asarray(batched[0]), rtol=3e-7, atol=1e-10
+    )
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(2, 20),
+    s=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+    n_zero=st.integers(0, 5),
+)
+def test_property_topk_sampler_invariants(n, s, seed, n_zero):
+    """The Gumbel top-k fast path satisfies the sequential sampler's
+    invariants: no device drawn twice, the mask is exactly the drawn set,
+    zero-probability devices are never drafted, the recorded ``step_probs``
+    are the Eq. 36 renormalized masses of the ordered draw (float64 replay),
+    and Σπ_i = n_scheduled for the Bernoulli inclusion probabilities."""
+    s = min(s, n)
+    n_zero = min(n_zero, n - s)  # keep at least s selectable devices
+    key = jax.random.PRNGKey(seed)
+    k_p, k_draw = jax.random.split(key)
+    p = jax.random.dirichlet(k_p, jnp.full((n,), 1.2))
+    p = p.at[:n_zero].set(0.0)
+    p = p / p.sum()
+
+    sched = scheduling.sample_without_replacement(k_draw, p, s, method="topk")
+    idx = np.asarray(sched.indices)
+    step_probs = np.asarray(sched.step_probs)
+    mask = np.asarray(sched.mask)
+
+    assert (idx >= 0).all(), idx
+    assert len(set(idx.tolist())) == s, idx
+    assert float(mask.sum()) == float(s)
+    assert set(np.flatnonzero(mask).tolist()) == set(idx.tolist())
+    p_np = np.asarray(p, np.float64)
+    assert (p_np[idx] > 0).all(), "a zero-probability device was drafted"
+
+    # float64 replay of Eq. 36 over the ordered draw: the reconstructed
+    # step_probs must be the renormalized live masses (float32-computed, so
+    # compared at float32 tolerance, not bitwise)
+    cum = 0.0
+    for k in range(s):
+        q = p_np[idx[k]] / (1.0 - cum)
+        assert step_probs[k] > 0.0
+        np.testing.assert_allclose(step_probs[k], q, rtol=1e-4)
+        cum += p_np[idx[k]]
+
+    pi = np.asarray(scheduling.bernoulli_inclusion_probs(p, s))
+    assert np.isfinite(pi).all()
+    assert (pi > 0).all() and (pi <= 1.0).all()
+    np.testing.assert_allclose(pi.sum(), s, rtol=1e-3)
+
+
+def test_topk_first_draw_chi_square_matches_sequential():
+    """Distributional identity of the Gumbel top-k draw: the FIRST draw of
+    ``method="topk"`` is a plain p-categorical, so its frequencies over many
+    draws must pass a chi-square test against expected counts — and against
+    ``method="sequential"``'s observed counts (two-sample). Thresholds are
+    the χ² df=n−1 ≈0.999 quantiles; the seeds are fixed, so this is a
+    deterministic regression test, not a flaky monte-carlo one."""
+    p = jnp.array([0.3, 0.25, 0.2, 0.1, 0.1, 0.05])
+    n, s, n_draws = p.shape[0], 3, 4000
+    keys = jax.random.split(jax.random.PRNGKey(123), n_draws)
+
+    def first(method):
+        draw = jax.vmap(
+            lambda k: scheduling.sample_without_replacement(
+                k, p, s, method=method
+            ).indices[0]
+        )(keys if method == "topk" else jax.random.split(jax.random.PRNGKey(7), n_draws))
+        return np.bincount(np.asarray(draw), minlength=n)
+
+    obs_topk = first("topk")
+    obs_seq = first("sequential")
+    expected = np.asarray(p, np.float64) * n_draws
+    chi2_threshold = 20.5  # χ²_{5, 0.999}
+    for obs in (obs_topk, obs_seq):
+        chi2 = float(np.sum((obs - expected) ** 2 / expected))
+        assert chi2 < chi2_threshold, (obs, expected, chi2)
+    # two-sample chi-square: topk vs sequential observed counts
+    tot = obs_topk + obs_seq
+    chi2_2s = float(np.sum((obs_topk - obs_seq) ** 2 / np.maximum(tot, 1)))
+    assert chi2_2s < 2 * chi2_threshold, (obs_topk, obs_seq, chi2_2s)
+
+    # later draws still cover the support without replacement
+    sched = scheduling.sample_without_replacement(keys[0], p, n, method="topk")
+    assert sorted(np.asarray(sched.indices).tolist()) == list(range(n))
+
+
+def test_topk_clamps_when_selectable_mass_exhausted():
+    """Fewer selectable devices than n_scheduled → sentinel no-op draws,
+    exactly like the sequential path's clamp contract."""
+    p = jnp.array([0.6, 0.4, 0.0, 0.0])
+    sched = scheduling.sample_without_replacement(
+        jax.random.PRNGKey(0), p, 3, method="topk"
+    )
+    idx = np.asarray(sched.indices)
+    assert set(idx[:2].tolist()) == {0, 1}
+    assert idx[2] == -1
+    assert np.asarray(sched.step_probs)[2] == np.inf
+    assert float(np.asarray(sched.mask).sum()) == 2.0
+    # n_scheduled beyond the device count clamps too (top_k caps at n; the
+    # sequential path's contract), instead of a trace-time top_k error
+    over = scheduling.sample_without_replacement(
+        jax.random.PRNGKey(1), jnp.array([0.7, 0.3]), 3, method="topk"
+    )
+    idx = np.asarray(over.indices)
+    assert set(idx[:2].tolist()) == {0, 1} and idx[2] == -1
+    assert float(np.asarray(over.mask).sum()) == 2.0
+    with pytest.raises(ValueError, match="unknown sampling method"):
+        scheduling.sample_without_replacement(jax.random.PRNGKey(0), p, 2, method="nope")
+
+
 @settings(max_examples=15, deadline=None)
 @given(seed=st.integers(0, 2**31 - 1))
 def test_property_eq37_weights_reduce_to_eq16_for_single(seed):
