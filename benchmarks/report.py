@@ -1,9 +1,15 @@
-"""Render §Dry-run / §Roofline markdown tables from dryrun_results.jsonl."""
+"""Render §Dry-run / §Roofline markdown tables from dryrun_results.jsonl,
+plus the sim-lattice perf trajectory from ``BENCH_history.jsonl`` (one
+appended record per ``python -m benchmarks.run``, stamped with git SHA and
+timestamp — see ``benchmarks.run.append_history``)."""
 from __future__ import annotations
 
 import argparse
+import json
+import os
 
 from benchmarks.roofline import DEFAULT_JSON, load_records, roofline_terms
+from benchmarks.run import HISTORY_PATH
 
 
 def dryrun_table(recs) -> str:
@@ -47,15 +53,66 @@ def roofline_table(recs) -> str:
     return "\n".join(lines)
 
 
-def main(path=DEFAULT_JSON):
-    recs = sorted(load_records(path), key=lambda r: (r["arch"], r["shape"], r["mesh"]))
-    print("### §Dry-run records\n")
-    print(dryrun_table(recs))
-    print("\n### §Roofline (single-pod 16×16)\n")
-    print(roofline_table(recs))
+def load_history(path: str = HISTORY_PATH) -> list[dict]:
+    """The appended bench trajectory, oldest first ([] when never run).
+    Malformed lines (a torn append) are skipped, not raised."""
+    if not os.path.exists(path):
+        return []
+    entries = []
+    with open(path, encoding="utf-8") as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                entries.append(json.loads(line))
+            except json.JSONDecodeError:
+                continue
+    return entries
+
+
+def history_table(entries) -> str:
+    """Markdown trajectory of the sim-lattice bench across commits."""
+    lines = [
+        "| when | sha | backend | mesh | hosts | cells | steady cells/s | "
+        "compile_s | n_compiles | speedup |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for e in entries:
+        lines.append(
+            f"| {str(e.get('timestamp', '?'))[:19]} | {e.get('git_sha', '?')} | "
+            f"{e.get('backend', '?')} | {e.get('mesh_devices', '?')} | "
+            f"{e.get('n_hosts', '?')} | {e.get('cells', '?')} | "
+            f"{e.get('steady_cells_per_sec', '?')} | "
+            f"{e.get('compile_seconds', '?')} | {e.get('n_compiles', '?')} | "
+            f"{e.get('speedup', '?')} |"
+        )
+    return "\n".join(lines)
+
+
+def main(path=DEFAULT_JSON, history_path=HISTORY_PATH):
+    if os.path.exists(path):
+        recs = sorted(
+            load_records(path), key=lambda r: (r["arch"], r["shape"], r["mesh"])
+        )
+        print("### §Dry-run records\n")
+        print(dryrun_table(recs))
+        print("\n### §Roofline (single-pod 16×16)\n")
+        print(roofline_table(recs))
+    else:
+        print(f"(no dry-run records at {path})")
+    history = load_history(history_path)
+    if history:
+        print("\n### §Sim-lattice trajectory (BENCH_history.jsonl)\n")
+        print(history_table(history))
+    else:
+        print(f"\n(no bench history at {history_path} — run "
+              "`python -m benchmarks.run` to start the trajectory)")
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default=DEFAULT_JSON)
-    main(ap.parse_args().json)
+    ap.add_argument("--history", default=HISTORY_PATH)
+    args = ap.parse_args()
+    main(args.json, args.history)

@@ -3,7 +3,10 @@ micro-benchmarks + the roofline table + the sim-lattice throughput bench.
 
 Prints ``name,us_per_call,derived`` CSV lines (reduced settings — pass
 --full to the individual modules for paper-scale runs), and writes
-``BENCH_sim.json`` so future PRs have a perf trajectory.
+``BENCH_sim.json`` so future PRs have a perf trajectory. Every run is ALSO
+appended — stamped with the git SHA and a UTC timestamp — to
+``BENCH_history.jsonl`` next to it, so the trajectory survives the
+overwrite (``python -m benchmarks.report`` renders it).
 
 ``BENCH_sim.json`` schema (one flat object):
   cells, n_rounds, n_devices       — sweep size (cells = policies × trials)
@@ -72,9 +75,44 @@ by ``--hosts`` (default: one device per host).
 from __future__ import annotations
 
 import argparse
+import datetime
 import json
 import os
+import subprocess
 import time
+
+_REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+HISTORY_PATH = os.path.join(_REPO_ROOT, "BENCH_history.jsonl")
+
+
+def _git_sha() -> str:
+    """The current commit SHA, or "unknown" outside a usable git checkout."""
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=_REPO_ROOT, capture_output=True, text=True, timeout=10,
+            check=True,
+        ).stdout.strip() or "unknown"
+    except Exception:  # noqa: BLE001 - no git, not a repo, timeout: all "unknown"
+        return "unknown"
+
+
+def append_history(payload: dict, path: str = HISTORY_PATH) -> dict:
+    """Append one timestamped+SHA-stamped bench record to the history JSONL.
+
+    ``BENCH_sim.json`` is overwritten per run (latest-state contract);
+    this file is the append-only trajectory behind it.
+    """
+    entry = {
+        "timestamp": datetime.datetime.now(datetime.timezone.utc).isoformat(
+            timespec="seconds"
+        ),
+        "git_sha": _git_sha(),
+        **payload,
+    }
+    with open(path, "a", encoding="utf-8") as f:
+        f.write(json.dumps(entry) + "\n")
+    return entry
 
 
 def _csv(name: str, seconds: float, derived: str):
@@ -208,6 +246,7 @@ def _bench_sim(backend: str = "jnp", mesh_devices: int = 0, n_hosts: int = 1):
     out_path = os.path.join(os.path.dirname(__file__), "..", "BENCH_sim.json")
     with open(os.path.abspath(out_path), "w") as f:
         json.dump(payload, f, indent=2)
+    append_history(payload)
     return payload
 
 

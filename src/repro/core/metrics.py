@@ -1,9 +1,13 @@
-"""Convergence-bound diagnostics (Theorem 1 terms) tracked during training."""
+"""Convergence-bound diagnostics (Theorem 1 terms) tracked during training,
+plus the in-trace observability taps (:class:`RoundDiagnostics`) that
+``ObsConfig(diagnostics=True)`` compiles into the lattice program."""
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import Any, NamedTuple
 
 import jax.numpy as jnp
+
+from repro.core.numerics import EPS, safe_div
 
 
 class RoundMetrics(NamedTuple):
@@ -15,8 +19,65 @@ class RoundMetrics(NamedTuple):
     grad_norm: jnp.ndarray     # ||ŷ^t||
     n_scheduled: jnp.ndarray   # realized |S^t|
     a_scalar: jnp.ndarray      # denoise scalar a^t (Lemma 1)
+    diag: Any = None           # RoundDiagnostics when ObsConfig asks, else None
 
 
 def bound_objective(e_com: jnp.ndarray, e_var: jnp.ndarray, alpha: float) -> jnp.ndarray:
     """The (P1) objective: (1+α)·e_com + (1+1/α)·e_var."""
     return (1.0 + alpha) * e_com + (1.0 + 1.0 / alpha) * e_var
+
+
+class RoundDiagnostics(NamedTuple):
+    """Cheap per-round scalar taps computed INSIDE the compiled program.
+
+    Carried as an extra record-pytree subtree when
+    ``ObsConfig(diagnostics=True)`` — a handful of reductions over (N,)
+    vectors per round, negligible next to the (N, D) gradient work. ``None``
+    (diagnostics off) flattens to an empty subtree, so the off-path record
+    pytree has exactly the seed's leaves.
+    """
+
+    noise_eff: jnp.ndarray        # V_g σ_z² / a² — per-entry noise power the
+    #                               model update actually absorbs after the
+    #                               Eq. 8 denoise/denormalize reweighting
+    sched_entropy: jnp.ndarray    # -Σ p log p of the scheduling distribution
+    eps_clamps: jnp.ndarray       # how many EPS guard sites sat at the floor
+    grad_norm_spread: jnp.ndarray  # std_i ||g_i|| — device gradient dispersion
+
+
+def diagnostics_taps(
+    probs: jnp.ndarray,
+    grad_norms: jnp.ndarray,
+    v_g: jnp.ndarray,
+    a_scalar: jnp.ndarray,
+    h_abs: jnp.ndarray,
+    tx_power: float,
+    noise_power,
+) -> RoundDiagnostics:
+    """Compute the :class:`RoundDiagnostics` taps from round intermediates.
+
+    ``noise_eff`` inverts the aggregation reweighting: the receiver noise
+    ``z`` enters the model update as ``sqrt(V_g)·z/a`` (Eq. 8), so its
+    effective per-entry power is ``V_g σ_z² / a²`` — the distortion Eq. 15
+    divided by D, realized rather than worst-case. ``eps_clamps`` counts
+    guard sites at the :data:`~repro.core.numerics.EPS` floor this round
+    (deep-fade channels, underflowed probabilities, degenerate V_g): a
+    persistently non-zero count means the run is riding the numerical
+    guards, not the physics.
+    """
+    a_sq = jnp.maximum(a_scalar * a_scalar, EPS)
+    noise_eff = safe_div(jnp.maximum(v_g, EPS) * noise_power, a_sq)
+    p = probs / jnp.maximum(jnp.sum(probs), EPS)
+    sched_entropy = -jnp.sum(jnp.where(p > 0.0, p * jnp.log(jnp.maximum(p, EPS)), 0.0))
+    eps_clamps = (
+        jnp.sum((tx_power * h_abs * h_abs <= EPS).astype(jnp.float32))
+        + jnp.sum((probs <= EPS).astype(jnp.float32))
+        + (v_g <= EPS).astype(jnp.float32)
+    )
+    grad_norm_spread = jnp.std(grad_norms)
+    return RoundDiagnostics(
+        noise_eff=noise_eff,
+        sched_entropy=sched_entropy,
+        eps_clamps=eps_clamps,
+        grad_norm_spread=grad_norm_spread,
+    )

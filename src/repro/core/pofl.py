@@ -48,7 +48,7 @@ from jax.flatten_util import ravel_pytree
 
 from repro.core import aircomp, scheduling
 from repro.core.channel import ChannelConfig, ChannelState
-from repro.core.metrics import RoundMetrics
+from repro.core.metrics import RoundMetrics, diagnostics_taps
 from repro.core.numerics import safe_div
 
 
@@ -197,12 +197,16 @@ def scheduling_stage(
     k_sched: jax.Array,
     avail: jnp.ndarray | None = None,
     policy_id: jnp.ndarray | None = None,
-) -> tuple[jnp.ndarray, jnp.ndarray]:
+    return_probs: bool = False,
+) -> tuple[jnp.ndarray, ...]:
     """Step 4: p_i^t (Eq. 34/Remark 2) → draw S^t → weights ρ (Eq. 37/HT).
 
     Returns ``(rho, mask)`` — per-device aggregation weights and the 0/1
-    scheduled indicator. ``avail`` (sim dropout/churn) zeroes unavailable
-    devices' probabilities before the draw.
+    scheduled indicator — or ``(rho, mask, probs)`` when ``return_probs``
+    (the obs diagnostics tap needs the scheduling distribution; the extra
+    output changes no arithmetic on the default path). ``avail`` (sim
+    dropout/churn) zeroes unavailable devices' probabilities before the
+    draw.
 
     ``policy_id`` (a traced int32, ``scheduling.POLICY_IDS`` order) switches
     the stage to the FUSED dispatch the policy-vmapped lattice compiles: the
@@ -244,7 +248,7 @@ def scheduling_stage(
             )
             rho = scheduling.aggregation_weights(sched, probs, data_frac, cfg.n_scheduled)
             mask = sched.mask
-        return rho, mask
+        return (rho, mask, probs) if return_probs else (rho, mask)
 
     # fused dispatch: the policy is data, so the deterministic-vs-stochastic
     # weight rule is a select over values computed from the SAME draw (the
@@ -264,7 +268,7 @@ def scheduling_stage(
         )
         rho = jnp.where(is_det, rho_det, rho_seq)
         mask = sched.mask
-    return rho, mask
+    return (rho, mask, probs) if return_probs else (rho, mask)
 
 
 def aggregation_stage(
@@ -336,6 +340,7 @@ def round_algorithm(
     alpha: jnp.ndarray | float | None = None,
     avail: jnp.ndarray | None = None,
     policy_id: jnp.ndarray | None = None,
+    diagnostics: bool = False,
 ) -> tuple[Any, RoundMetrics]:
     """Steps 2–6 of Algorithm 1 for one round, given this round's channel ``h``.
 
@@ -353,6 +358,11 @@ def round_algorithm(
     round. ``None`` (the default, and the only value the legacy path ever
     passes) skips the masking entirely, keeping the static-scenario
     trajectory bit-identical to the seed implementation.
+
+    ``diagnostics`` (static, driven by ``ObsConfig.diagnostics``) adds the
+    cheap per-round taps of :class:`repro.core.metrics.RoundDiagnostics` to
+    the returned metrics. Off — the default — the traced program is
+    bit-identical to the seed: no extra ops, ``metrics.diag is None``.
     """
     noise_power = cfg.noise_power if noise_power is None else noise_power
     alpha = cfg.alpha if alpha is None else alpha
@@ -379,10 +389,11 @@ def round_algorithm(
 
     # -- step 4: scheduling -------------------------------------------
     h_abs = jnp.abs(h)
-    rho, mask = scheduling_stage(
+    sched_out = scheduling_stage(
         cfg, stats, h_abs, data_frac, dim, alpha, noise_power, k_sched,
-        avail=avail, policy_id=policy_id,
+        avail=avail, policy_id=policy_id, return_probs=diagnostics,
     )
+    rho, mask = sched_out[0], sched_out[1]
 
     # -- steps 5-6: AirComp aggregation + model update ----------------
     y_hat, e_com = aggregation_stage(
@@ -393,6 +404,13 @@ def round_algorithm(
     new_params = apply_update_stage(cfg, params, y_hat, t)
 
     a = aircomp.denoise_scalar(rho, h_abs, mask, cfg.tx_power)
+    diag = None
+    if diagnostics:
+        _, v_g = aircomp.global_stats(stats, rho, mask)
+        diag = diagnostics_taps(
+            sched_out[2], stats.norm, v_g, a, h_abs, cfg.tx_power,
+            agg_noise_power,
+        )
     metrics = RoundMetrics(
         loss=jnp.zeros(()),  # filled by caller's eval if desired
         e_com=e_com,
@@ -400,6 +418,7 @@ def round_algorithm(
         grad_norm=jnp.linalg.norm(y_hat),
         n_scheduled=jnp.sum(mask),
         a_scalar=a,
+        diag=diag,
     )
     return new_params, metrics
 

@@ -17,6 +17,13 @@ deployments export the same three variables per host instead):
     REPRO_DIST_NUM_PROCESSES total process count
     REPRO_DIST_PROCESS_ID    this process's rank
 
+Observability: the worker env copies the launcher's ``os.environ``, so a
+``REPRO_OBS_DIR`` (``repro.obs``) set on the launcher is inherited by every
+worker — each writes its own ``events-p<rank>of<count>-<pid>.jsonl`` into
+the shared sink directory (the rank stamp comes from the same
+``REPRO_DIST_*`` contract above), and ``python -m repro.obs.report <dir>``
+summarizes the whole topology.
+
 Usage (CPU CI / laptop):
 
     # built-in parity workload: 2 hosts × 4 fake devices, records → npz
@@ -55,8 +62,11 @@ from repro.sim.multihost import (
     ENV_PROCESS_ID,
 )
 
-# the canonical per-round record fields (one source: the engine's RoundRecord)
-_RECORD_FIELDS = RoundRecord._fields
+# the canonical per-round ARRAY record fields (one source: the engine's
+# RoundRecord, minus the optional `diag` pytree subtree — the npz parity
+# serialization and cross-process comparisons cover the flat arrays; obs
+# diagnostics travel through the REPRO_OBS_DIR JSONL sink instead)
+_RECORD_FIELDS = tuple(f for f in RoundRecord._fields if f != "diag")
 _DEVICE_COUNT_FLAG = re.compile(r"--xla_force_host_platform_device_count=\S+\s*")
 
 

@@ -1,0 +1,68 @@
+"""repro.obs — the unified flight-recorder.
+
+Three layers, all opt-in and zero-cost when off:
+
+  * host side (:mod:`repro.obs.spans`, :mod:`repro.obs.registry`): timing
+    spans and a typed counter/gauge registry that the engine's scattered
+    ad-hoc counters collapsed into, streaming JSONL events per process via
+    ``REPRO_OBS_DIR`` (:mod:`repro.obs.sink`);
+  * in-trace (:class:`ObsConfig` + :class:`repro.core.metrics.RoundDiagnostics`):
+    cheap per-round scalar taps computed INSIDE the compiled lattice program,
+    gated by a static flag that joins the engine cache key;
+  * reporting (:mod:`repro.obs.report`, :mod:`repro.obs.profile`):
+    ``python -m repro.obs.report`` renders a run's JSONL into summary tables
+    and CI gates; ``REPRO_OBS_PROFILE=1`` captures ``jax.profiler`` traces.
+
+No module here imports jax at import time — obs sits below ``repro.sim`` in
+the layering and stays safe to import before distributed backend init.
+"""
+from repro.obs.config import DEFAULT_OBS, ObsConfig
+from repro.obs.profile import maybe_profile, profiling_enabled
+from repro.obs.registry import (
+    Counter,
+    Gauge,
+    counter,
+    counter_add,
+    gauge,
+    gauge_set,
+    metric_value,
+    metrics_snapshot,
+    reset_metrics,
+)
+from repro.obs.sink import (
+    ENV_OBS_DIR,
+    ENV_OBS_PROFILE,
+    close_sink,
+    emit,
+    event_files,
+    obs_dir,
+    process_coords,
+    read_events,
+)
+from repro.obs.spans import span, span_totals
+
+__all__ = [
+    "ObsConfig",
+    "DEFAULT_OBS",
+    "span",
+    "span_totals",
+    "Counter",
+    "Gauge",
+    "counter",
+    "gauge",
+    "counter_add",
+    "gauge_set",
+    "metric_value",
+    "metrics_snapshot",
+    "reset_metrics",
+    "emit",
+    "obs_dir",
+    "process_coords",
+    "read_events",
+    "event_files",
+    "close_sink",
+    "maybe_profile",
+    "profiling_enabled",
+    "ENV_OBS_DIR",
+    "ENV_OBS_PROFILE",
+]

@@ -1,0 +1,33 @@
+"""Static observability configuration for the traced engine programs.
+
+:class:`ObsConfig` is hashable and frozen because it is part of the engine
+cache key (``repro.sim.engine.cached_engine``): flipping ``diagnostics``
+selects a DIFFERENT traced program (extra per-round tap ops and extra
+record leaves), so it must never replay a trace built under the other
+setting. With ``diagnostics=False`` — the default everywhere — the engine
+compiles exactly the same program as before this subsystem existed: zero
+new ops, bit-identical pinned trajectories.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ObsConfig:
+    """What the traced engine programs record beyond the base round record.
+
+    diagnostics: compute the cheap per-round scalar taps
+      (:class:`repro.core.metrics.RoundDiagnostics` — aggregation noise
+      power after reweighting, scheduling-probability entropy, eps-guard
+      clamp count, gradient-norm spread) inside the compiled program and
+      carry them in the record pytree. Off (default): the record pytree and
+      the program are bit-identical to the uninstrumented engine.
+    """
+
+    diagnostics: bool = False
+
+
+# the default (everything off) — module-level so identity comparisons and
+# cache keys share one object
+DEFAULT_OBS = ObsConfig()

@@ -1,0 +1,50 @@
+"""Opt-in ``jax.profiler`` capture around lattice dispatches.
+
+``REPRO_OBS_PROFILE=1`` (any value but ``0``/empty) makes
+:func:`maybe_profile` wrap its block in ``jax.profiler.trace``, writing the
+capture under ``$REPRO_OBS_DIR/profile/<tag>/`` (or ``./repro-obs/profile``
+when no sink dir is set) and emitting a ``profile`` event pointing at it.
+Off — the default — it is a zero-cost passthrough: no jax import, no env
+beyond one lookup.
+
+The engine wraps :meth:`SimEngine.run_lattice_cells` with this, so a single
+
+    REPRO_OBS_PROFILE=1 REPRO_OBS_DIR=/tmp/obs python examples/sim_lattice.py
+
+yields a TensorBoard-loadable trace of the real lattice program alongside
+the JSONL events describing the same run.
+"""
+from __future__ import annotations
+
+import os
+from contextlib import contextmanager
+
+from repro.obs.sink import ENV_OBS_PROFILE, emit, obs_dir
+
+
+def profiling_enabled() -> bool:
+    """True when ``REPRO_OBS_PROFILE`` asks for profiler captures."""
+    return os.environ.get(ENV_OBS_PROFILE, "") not in ("", "0")
+
+
+@contextmanager
+def maybe_profile(tag: str):
+    """Capture a ``jax.profiler`` trace of the block when enabled; no-op
+    otherwise. Never raises out of profiler setup — a broken profiler must
+    not take the actual computation down with it."""
+    if not profiling_enabled():
+        yield
+        return
+    base = obs_dir() or os.path.abspath("repro-obs")
+    trace_dir = os.path.join(base, "profile", tag)
+    os.makedirs(trace_dir, exist_ok=True)
+    import jax
+
+    try:
+        ctx = jax.profiler.trace(trace_dir)
+    except Exception:  # pragma: no cover - profiler unavailable
+        yield
+        return
+    with ctx:
+        yield
+    emit("profile", tag, trace_dir=trace_dir)

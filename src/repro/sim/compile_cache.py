@@ -37,17 +37,21 @@ from typing import Any
 
 import jax
 
+from repro.obs.registry import counter_add, metric_value
+
 ENV_CACHE_DIR = "REPRO_COMPILE_CACHE"
 
-_COUNTERS = {"hits": 0, "misses": 0}
+# hit/miss counts live in the obs registry under ``compile_cache.`` —
+# PROCESS-LIFETIME counters (the CI warm-run guard reads them at session
+# end), so nothing may reset that namespace mid-process
 _LISTENER_INSTALLED = False
 
 
 def _count_cache_events(event: str, **kwargs: Any) -> None:
     if event == "/jax/compilation_cache/cache_hits":
-        _COUNTERS["hits"] += 1
+        counter_add("compile_cache.hits")
     elif event == "/jax/compilation_cache/cache_misses":
-        _COUNTERS["misses"] += 1
+        counter_add("compile_cache.misses")
 
 
 def _install_listener() -> None:
@@ -91,8 +95,14 @@ def _apply_config(name: str, value) -> None:
 
 
 def persistent_cache_counters() -> dict:
-    """This process's persistent-cache hit/miss counts (since enable)."""
-    return dict(_COUNTERS)
+    """This process's persistent-cache hit/miss counts (since enable).
+
+    Thin shim over the obs registry (``compile_cache.hits`` / ``.misses``).
+    """
+    return {
+        "hits": int(metric_value("compile_cache.hits")),
+        "misses": int(metric_value("compile_cache.misses")),
+    }
 
 
 def cache_dir_entries(path: str | None = None) -> int:

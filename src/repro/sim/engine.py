@@ -48,7 +48,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.channel import ChannelConfig
+from repro.core.metrics import RoundDiagnostics
 from repro.core.pofl import DeviceData, History, POFLConfig, round_algorithm
+from repro.obs.config import DEFAULT_OBS, ObsConfig
+from repro.obs.profile import maybe_profile, profiling_enabled
+from repro.obs.registry import counter_add, metric_value, reset_metrics
+from repro.obs.spans import span
 from repro.sim.scenario import make_channel_process
 
 # per-engine cap on cached AOT lattice executables (LRU eviction)
@@ -71,7 +76,15 @@ class SimState(NamedTuple):
 
 
 class RoundRecord(NamedTuple):
-    """Per-round on-device metric record (stacked over rounds by the scan)."""
+    """Per-round on-device metric record (stacked over rounds by the scan).
+
+    ``diag`` is the :class:`~repro.core.metrics.RoundDiagnostics` subtree
+    when the engine's :class:`~repro.obs.config.ObsConfig` asks for
+    diagnostics, else ``None`` — which flattens to an EMPTY pytree subtree,
+    so the off-path record has exactly the seed's leaves (pinned
+    trajectories, ``launch.distributed`` serialization, and the gather
+    programs all see an unchanged structure).
+    """
 
     e_com: jnp.ndarray        # Eq. 15 closed-form communication distortion
     e_var: jnp.ndarray        # realized global update variance (Thm. 1)
@@ -79,10 +92,22 @@ class RoundRecord(NamedTuple):
     n_scheduled: jnp.ndarray  # realized |S^t|
     loss: jnp.ndarray         # eval loss (0 where not evaluated)
     acc: jnp.ndarray          # eval accuracy (0 where not evaluated)
+    diag: Any = None          # RoundDiagnostics taps, or None (default)
 
 
-def _zero_record() -> RoundRecord:
-    return RoundRecord(*(jnp.zeros((), jnp.float32) for _ in RoundRecord._fields))
+def _zero_record(diagnostics: bool = False) -> RoundRecord:
+    """A zero record matching the engine's record pytree (the inactive
+    ``lax.cond`` branch must mirror ``round_body``'s structure exactly)."""
+    scalars = [
+        jnp.zeros((), jnp.float32)
+        for _ in range(len(RoundRecord._fields) - 1)  # all but diag
+    ]
+    diag = None
+    if diagnostics:
+        diag = RoundDiagnostics(
+            *(jnp.zeros((), jnp.float32) for _ in RoundDiagnostics._fields)
+        )
+    return RoundRecord(*scalars, diag=diag)
 
 
 def _default_channel_cfg(cfg: POFLConfig) -> ChannelConfig:
@@ -133,6 +158,7 @@ class SimEngine:
         scenario_params: dict | None = None,
         eval_fn: Callable | None = None,
         mesh: Any | None = None,
+        obs: ObsConfig | None = None,
     ):
         self.loss_fn = loss_fn
         self.data = data
@@ -143,6 +169,10 @@ class SimEngine:
         )
         self.eval_fn = eval_fn
         self.mesh = mesh
+        # static observability config: flipping `diagnostics` selects a
+        # different traced program, so it keys the engine cache (a
+        # diagnostics engine never shares jit traces with the plain one)
+        self.obs = obs or DEFAULT_OBS
         self.n_traces = 0  # chunk-scan trace counter (see class docstring)
         self.n_lattice_traces = 0  # lattice-program trace counter
         self.n_compiles = 0  # AOT lattice compiles (one per arg signature)
@@ -214,6 +244,7 @@ class SimEngine:
                 # bit-identical to the legacy static path
                 avail=avail if self.process.can_drop else None,
                 policy_id=policy_id,
+                diagnostics=self.obs.diagnostics,
             )
             if self.eval_fn is None:
                 loss = acc = jnp.zeros(())
@@ -228,7 +259,7 @@ class SimEngine:
                 )
             rec = RoundRecord(
                 e_com=m.e_com, e_var=m.e_var, grad_norm=m.grad_norm,
-                n_scheduled=m.n_scheduled, loss=loss, acc=acc,
+                n_scheduled=m.n_scheduled, loss=loss, acc=acc, diag=m.diag,
             )
             return SimState(params=params, key=key, chan=chan), rec
 
@@ -246,7 +277,7 @@ class SimEngine:
                 return jax.lax.cond(
                     act,
                     lambda s: round_body(s, t_int, ev),
-                    lambda s: (s, _zero_record()),
+                    lambda s: (s, _zero_record(self.obs.diagnostics)),
                     st,
                 )
 
@@ -258,6 +289,7 @@ class SimEngine:
 
     def _lattice_cell(self, params0, t_ints, do_eval, noise_power, alpha, seed):
         self.n_lattice_traces += 1  # Python body runs only when (re)tracing
+        counter_add("engine.lattice_traces")
         state = self.init(params0, seed)
         _, recs = self.scan_rounds(
             state, t_ints, do_eval, noise_power=noise_power, alpha=alpha
@@ -268,6 +300,7 @@ class SimEngine:
         self, params0, t_ints, do_eval, noise_power, alpha, seed, policy_id
     ):
         self.n_lattice_traces += 1  # Python body runs only when (re)tracing
+        counter_add("engine.lattice_traces")
         state = self.init(params0, seed)
         _, recs = self.scan_rounds(
             state, t_ints, do_eval, noise_power=noise_power, alpha=alpha,
@@ -310,9 +343,13 @@ class SimEngine:
         if compiled is None:
             fn = self._fused_lattice_jit if fused else self._lattice_jit
             t0 = time.perf_counter()
-            compiled = fn.lower(*args).compile()
-            self.compile_seconds += time.perf_counter() - t0
+            with span("lattice.compile", fused=fused):
+                compiled = fn.lower(*args).compile()
+            dt = time.perf_counter() - t0
+            self.compile_seconds += dt
             self.n_compiles += 1
+            counter_add("lattice.n_compiles")
+            counter_add("lattice.compile_seconds", dt, emit_event=False)
             self._lattice_executables[key] = compiled
             while len(self._lattice_executables) > _LATTICE_EXECUTABLES_MAX:
                 self._lattice_executables.popitem(last=False)
@@ -347,7 +384,20 @@ class SimEngine:
         fused = policy_b is not None
         if fused:
             args = args + (policy_b,)
-        return self._aot_lattice_executable(fused, args)(*args)
+        compiled = self._aot_lattice_executable(fused, args)
+        n_cells = int(np.shape(seed_b)[0]) if np.ndim(seed_b) else 1
+        # the dispatch span measures HOST dispatch wall only (jax dispatch is
+        # async — device execution completes under the caller's
+        # block_until_ready / device_get, covered by the lattice.sweep span).
+        # Under REPRO_OBS_PROFILE the dispatch blocks inside the profiler
+        # context so the capture contains the device execution too.
+        with maybe_profile("lattice"), span(
+            "lattice.dispatch", fused=fused, cells=n_cells
+        ):
+            out = compiled(*args)
+            if profiling_enabled():
+                out = jax.block_until_ready(out)
+            return out
 
     def lattice_cost_analysis(self) -> dict:
         """XLA ``cost_analysis`` (flops/bytes) of the most recent lattice
@@ -373,6 +423,7 @@ class SimEngine:
 
     def _chunk(self, state: SimState, t0, n_active, n_steps: int):
         self.n_traces += 1  # Python body runs only when (re)tracing
+        counter_add("engine.traces")
         steps = jnp.arange(n_steps, dtype=jnp.int32)
         t_ints = t0 + steps
         do_eval = jnp.zeros((n_steps,), bool)
@@ -452,7 +503,8 @@ class SimEngine:
 
 _ENGINE_CACHE: OrderedDict[tuple, SimEngine] = OrderedDict()
 _ENGINE_CACHE_MAX = 64
-_CACHE_STATS = {"hits": 0, "misses": 0}
+# hit/miss counters live in the obs registry under ``engine_cache.`` —
+# :func:`engine_cache_stats` stays as the thin shim the tests/benchmarks use
 
 
 def _data_key(data: DeviceData) -> tuple:
@@ -520,20 +572,25 @@ def cached_engine(
     scenario_params: dict | None = None,
     eval_fn: Callable | None = None,
     mesh: Any | None = None,
+    obs: ObsConfig | None = None,
 ) -> SimEngine:
     """Return a (possibly shared) :class:`SimEngine` for this task + config.
 
     The key is ``(loss_fn, data identity, cfg with seed zeroed — including
     the aggregation backend — channel_cfg, scenario, eval_fn identity, mesh
-    identity, process topology)``: calls that differ only by seed share one
-    engine and therefore every jit trace it has already paid for. A
+    identity, process topology, obs config)``: calls that differ only by seed
+    share one engine and therefore every jit trace it has already paid for. A
     mesh-keyed engine never collides with the unsharded one (or with a
     differently-shaped mesh, or one spanning a different ``jax.distributed``
     process set), so per-engine trace counters stay meaningful under
-    sharding. The
+    sharding. An ``obs`` with diagnostics on is a SECOND cache key for the
+    same task — the taps change the traced program, so the diagnostics
+    engine accumulates its own traces/executables; repeat diagnostics calls
+    still re-trace zero times. The
     cache is a bounded LRU (evicts least recently used); entries pin their
     ``data`` arrays alive, which is the point — eviction releases them.
     """
+    obs = obs or DEFAULT_OBS
     key = (
         loss_fn,
         _data_key(data),
@@ -544,16 +601,17 @@ def cached_engine(
         eval_fn,
         _mesh_key(mesh),
         _process_topology_key(),
+        obs,
         # the fused backend's dispatch reads this env var at trace time, so
         # toggling it must not replay a stale trace (parity tests flip it)
         os.environ.get("REPRO_PALLAS_INTERPRET", ""),
     )
     engine = _ENGINE_CACHE.get(key)
     if engine is not None:
-        _CACHE_STATS["hits"] += 1
+        counter_add("engine_cache.hits")
         _ENGINE_CACHE.move_to_end(key)
         return engine
-    _CACHE_STATS["misses"] += 1
+    counter_add("engine_cache.misses")
     engine = SimEngine(
         loss_fn, data, cfg,
         channel_cfg=channel_cfg,
@@ -561,6 +619,7 @@ def cached_engine(
         scenario_params=scenario_params,
         eval_fn=eval_fn,
         mesh=mesh,
+        obs=obs,
     )
     _ENGINE_CACHE[key] = engine
     while len(_ENGINE_CACHE) > _ENGINE_CACHE_MAX:
@@ -569,8 +628,16 @@ def cached_engine(
 
 
 def engine_cache_stats() -> dict:
-    """Snapshot of the cross-call engine cache: hits/misses/size."""
-    return {**_CACHE_STATS, "size": len(_ENGINE_CACHE)}
+    """Snapshot of the cross-call engine cache: hits/misses/size.
+
+    Thin shim over the obs registry (``engine_cache.hits`` / ``.misses``) —
+    kept so every historical caller and test keeps working unchanged.
+    """
+    return {
+        "hits": int(metric_value("engine_cache.hits")),
+        "misses": int(metric_value("engine_cache.misses")),
+        "size": len(_ENGINE_CACHE),
+    }
 
 
 def lattice_compile_stats() -> dict:
@@ -586,6 +653,11 @@ def lattice_compile_stats() -> dict:
 
 
 def reset_engine_cache() -> None:
-    """Drop every cached engine and zero the hit/miss counters."""
+    """Drop every cached engine and zero the hit/miss counters.
+
+    Scoped: resets exactly the ``engine_cache.`` registry namespace —
+    never the persistent-compile-cache counters (a CI warm-run guard reads
+    those across the whole process lifetime) or span totals.
+    """
     _ENGINE_CACHE.clear()
-    _CACHE_STATS.update(hits=0, misses=0)
+    reset_metrics("engine_cache.")

@@ -66,6 +66,9 @@ from jax.sharding import NamedSharding, PartitionSpec
 from repro.core import scheduling
 from repro.core.channel import ChannelConfig
 from repro.core.pofl import DeviceData, POFLConfig
+from repro.obs.config import ObsConfig
+from repro.obs.sink import emit
+from repro.obs.spans import span
 from repro.sim.engine import FUSED_POLICY, cached_engine
 from repro.sim.multihost import (
     cells_mesh_over,
@@ -134,6 +137,8 @@ class LatticeRecords(NamedTuple):
     loss: np.ndarray      # (P, Nn, Na, Ns, E)
     acc: np.ndarray       # (P, Nn, Na, Ns, E)
     eval_rounds: np.ndarray  # (E,)
+    diag: Any = None      # RoundDiagnostics of (P, Nn, Na, Ns, T) taps when
+    #                       the lattice ran with ObsConfig(diagnostics=True)
 
     def cell(self, **coords) -> dict:
         """Select one sub-array per field by axis coordinates, e.g.
@@ -165,6 +170,7 @@ def run_lattice(
     scenario_params: dict | None = None,
     mesh: jax.sharding.Mesh | int | None = None,
     fuse_policies: bool = True,
+    obs: ObsConfig | None = None,
 ) -> LatticeRecords:
     """Run the full lattice; ONE compiled (vmap ∘ scan) program for the spec.
 
@@ -195,6 +201,14 @@ def run_lattice(
         (smaller) program over the same traced-dispatch cell body with a
         constant ``policy_id`` axis, so records are bit-identical to the
         fused path; kept as the debugging/fallback route.
+      obs: observability config. ``ObsConfig(diagnostics=True)`` compiles
+        the cheap per-round taps (:class:`repro.core.metrics.RoundDiagnostics`)
+        into every cell and returns them as ``LatticeRecords.diag``; it keys
+        a SECOND engine-cache entry, so repeat diagnostics sweeps still
+        re-trace zero times. ``None``/default: program and records identical
+        to before obs existed. Every sweep also times itself
+        (``span("lattice.sweep")``) and emits one ``lattice`` JSONL event per
+        engine dispatch when ``REPRO_OBS_DIR`` is set.
     """
     base_cfg = base_cfg or POFLConfig(n_devices=data.n_devices)
     if isinstance(mesh, int):
@@ -262,25 +276,66 @@ def run_lattice(
             scenario_params=scenario_params,
             eval_fn=eval_fn,
             mesh=mesh,
+            obs=obs,
         )
+
+    def _emit_run(eng, warm: bool, tr0: int, co0: int, **fields) -> None:
+        """One ``lattice`` JSONL event per engine dispatch — the raw material
+        of the ``repro.obs.report`` warm-retrace gate."""
+        emit(
+            "lattice", "lattice.run",
+            cells=n_real, n_rounds=spec.n_rounds, multihost=multihost,
+            warm=warm,
+            trace_delta=eng.n_lattice_traces - tr0,
+            compile_delta=eng.n_compiles - co0,
+            engine_compiles=eng.n_compiles,
+            **fields,
+        )
+
+    def _grid_diag(tap_arrays) -> Any:
+        """Reshape flat (P·B, T) tap leaves to the (P, Nn, Na, Ns, T) grid."""
+        from repro.core.metrics import RoundDiagnostics
+
+        shaped = RoundDiagnostics(*(
+            np.asarray(a).reshape(
+                (len(spec.policies),) + grid_shape + (spec.n_rounds,)
+            )
+            for a in tap_arrays
+        ))
+        emit(
+            "diag", "lattice.diagnostics",
+            cells=n_real, n_rounds=spec.n_rounds,
+            taps={
+                f: np.mean(getattr(shaped, f), axis=(0, 1, 2, 3)).tolist()
+                for f in shaped._fields
+            },
+        )
+        return shaped
 
     if fuse_policies:
         noise_b, alpha_b, seed_b, policy_b = cells_b
         cfg = dataclasses.replace(
             base_cfg, policy=FUSED_POLICY, n_devices=data.n_devices
         )
-        recs = one_engine(cfg).run_lattice_cells(
-            params0, t_ints, do_eval, noise_b, alpha_b, seed_b,
-            policy_b=policy_b,
-        )
-        if multihost:
-            # drain the (collective-free) compute before the gather's single
-            # collective program launches anywhere — overlapping launches are
-            # what the CPU gloo runtime cannot be trusted with
-            jax.block_until_ready(recs)
-        # single stream-out: device → host exactly once for the whole
-        # lattice, dropping any dead padding cells
-        recs = gather_records(recs, mesh) if multihost else jax.device_get(recs)
+        eng = one_engine(cfg)
+        warm, tr0, co0 = eng.n_lattice_traces > 0, eng.n_lattice_traces, eng.n_compiles
+        with span(
+            "lattice.sweep", cells=n_real, fused=True,
+            policies=len(spec.policies), multihost=multihost,
+        ):
+            recs = eng.run_lattice_cells(
+                params0, t_ints, do_eval, noise_b, alpha_b, seed_b,
+                policy_b=policy_b,
+            )
+            if multihost:
+                # drain the (collective-free) compute before the gather's single
+                # collective program launches anywhere — overlapping launches are
+                # what the CPU gloo runtime cannot be trusted with
+                jax.block_until_ready(recs)
+            # single stream-out: device → host exactly once for the whole
+            # lattice, dropping any dead padding cells
+            recs = gather_records(recs, mesh) if multihost else jax.device_get(recs)
+        _emit_run(eng, warm, tr0, co0, fused=True)
         recs = jax.tree.map(lambda a: a[:n_real], recs)
 
         def gather(field: str, eval_only: bool) -> np.ndarray:
@@ -290,32 +345,42 @@ def run_lattice(
             )
             return stacked[..., do_eval] if eval_only else stacked
 
-        return _assemble_records(spec, gather, eval_rounds)
+        diag = None if recs.diag is None else _grid_diag(list(recs.diag))
+        return _assemble_records(spec, gather, eval_rounds, diag=diag)
 
     noise_b, alpha_b, seed_b = cells_b
     per_policy = []
-    for policy in spec.policies:
-        # same traced-dispatch cell program, constant policy axis — one
-        # (smaller) compile per policy, per-cell values bit-identical to the
-        # fused program's lanes
-        policy_b = place(
-            np.full((n_padded,), scheduling.policy_id(policy), np.int32)
-        )
-        cfg = dataclasses.replace(base_cfg, policy=policy, n_devices=data.n_devices)
-        recs = one_engine(cfg).run_lattice_cells(
-            params0, t_ints, do_eval, noise_b, alpha_b, seed_b,
-            policy_b=policy_b,
-        )
-        if multihost:
-            jax.block_until_ready(recs)
-        per_policy.append(recs)  # stays on device until the final stream-out
+    with span(
+        "lattice.sweep", cells=n_real, fused=False,
+        policies=len(spec.policies), multihost=multihost,
+    ):
+        for policy in spec.policies:
+            # same traced-dispatch cell program, constant policy axis — one
+            # (smaller) compile per policy, per-cell values bit-identical to the
+            # fused program's lanes
+            policy_b = place(
+                np.full((n_padded,), scheduling.policy_id(policy), np.int32)
+            )
+            cfg = dataclasses.replace(base_cfg, policy=policy, n_devices=data.n_devices)
+            eng = one_engine(cfg)
+            warm, tr0, co0 = (
+                eng.n_lattice_traces > 0, eng.n_lattice_traces, eng.n_compiles
+            )
+            recs = eng.run_lattice_cells(
+                params0, t_ints, do_eval, noise_b, alpha_b, seed_b,
+                policy_b=policy_b,
+            )
+            _emit_run(eng, warm, tr0, co0, fused=False, policy=policy)
+            if multihost:
+                jax.block_until_ready(recs)
+            per_policy.append(recs)  # stays on device until the final stream-out
 
-    # single stream-out: device → host exactly once for the whole lattice,
-    # dropping any dead padding cells (multi-host: a tiled allgather first —
-    # no process can address the other hosts' record shards directly)
-    per_policy = (
-        gather_records(per_policy, mesh) if multihost else jax.device_get(per_policy)
-    )
+        # single stream-out: device → host exactly once for the whole lattice,
+        # dropping any dead padding cells (multi-host: a tiled allgather first —
+        # no process can address the other hosts' record shards directly)
+        per_policy = (
+            gather_records(per_policy, mesh) if multihost else jax.device_get(per_policy)
+        )
     per_policy = jax.tree.map(lambda a: a[:n_real], per_policy)
 
     def gather(field: str, eval_only: bool) -> np.ndarray:
@@ -323,10 +388,18 @@ def run_lattice(
         stacked = stacked.reshape((len(spec.policies),) + grid_shape + (spec.n_rounds,))
         return stacked[..., do_eval] if eval_only else stacked
 
-    return _assemble_records(spec, gather, eval_rounds)
+    diag = None
+    if per_policy and per_policy[0].diag is not None:
+        diag = _grid_diag([
+            np.stack([np.asarray(getattr(r.diag, f)) for r in per_policy])
+            for f in per_policy[0].diag._fields
+        ])
+    return _assemble_records(spec, gather, eval_rounds, diag=diag)
 
 
-def _assemble_records(spec: LatticeSpec, gather, eval_rounds) -> LatticeRecords:
+def _assemble_records(
+    spec: LatticeSpec, gather, eval_rounds, diag=None
+) -> LatticeRecords:
     return LatticeRecords(
         axes={
             "policy": list(spec.policies),
@@ -341,4 +414,5 @@ def _assemble_records(spec: LatticeSpec, gather, eval_rounds) -> LatticeRecords:
         loss=gather("loss", True),
         acc=gather("acc", True),
         eval_rounds=eval_rounds,
+        diag=diag,
     )

@@ -45,6 +45,7 @@ from typing import Any
 import jax
 import numpy as np
 
+from repro.obs.spans import span
 from repro.sim.engine import _mesh_key
 
 ENV_COORDINATOR = "REPRO_DIST_COORDINATOR"
@@ -231,7 +232,8 @@ def gather_records(tree, mesh=None):
             _GATHER_JITS.popitem(last=False)
     else:
         _GATHER_JITS.move_to_end(key)
-    gathered = jax.block_until_ready(gather(leaves))
+    with span("multihost.gather", leaves=len(leaves)):
+        gathered = jax.block_until_ready(gather(leaves))
     return jax.tree.unflatten(
         treedef, [np.asarray(g.addressable_data(0)) for g in gathered]
     )

@@ -19,6 +19,7 @@ import os
 
 import pytest
 
+from repro.obs import close_sink, reset_metrics
 from repro.sim import (
     enable_compile_cache,
     engine_cache_stats,
@@ -42,9 +43,19 @@ def _engine_cache_clean_at_session_start():
 
 @pytest.fixture(autouse=True)
 def _fresh_engine_cache():
-    """Order-independence: every test sees an empty engine cache."""
-    reset_engine_cache()
+    """Order-independence: every test sees an empty engine cache and zeroed
+    obs span/engine/lattice counters.
+
+    PREFIX resets only: the ``compile_cache.`` registry namespace is
+    process-lifetime — the ``REPRO_COMPILE_CACHE_EXPECT_HITS`` session-end
+    guard below reads it across the whole run, so no per-test reset (or
+    unscoped ``reset_metrics()``) may touch it.
+    """
+    reset_engine_cache()  # clears engines + the engine_cache. namespace
+    for prefix in ("span.", "engine.", "lattice.", "multihost."):
+        reset_metrics(prefix)
     yield
+    close_sink()  # drop per-dir handles so tmp sink dirs can be removed
 
 
 @pytest.fixture(scope="session", autouse=True)
