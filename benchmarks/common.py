@@ -50,18 +50,26 @@ def build_task(
     n_train: int = 6000,
     n_test: int = 1000,
     seed: int = 0,
+    dim: int | None = None,
 ) -> Task:
-    """kind: 'mnist' (logreg) or 'cifar' (cnn)."""
+    """kind: 'mnist' (logreg) or 'cifar' (cnn).
+
+    ``dim`` overrides the mnist task's flat feature dimension (the
+    ``--dim`` benchmark axis: D scales the gradients/aggregation working
+    set, which is what the 2-D model-sharded mesh shrinks per device).
+    ``None`` keeps the historical 784 bit-identically.
+    """
     key = jax.random.PRNGKey(seed)
     k_train, k_test, k_init = jax.random.split(key, 3)
     ds = "mnist_like" if kind == "mnist" else "cifar_like"
-    x_tr, y_tr = make_classification_dataset(ds, n_train, k_train)
-    x_te, y_te = make_classification_dataset(ds, n_test, k_test)
+    ds_kw = {"dim": dim} if (dim is not None and kind == "mnist") else {}
+    x_tr, y_tr = make_classification_dataset(ds, n_train, k_train, **ds_kw)
+    x_te, y_te = make_classification_dataset(ds, n_test, k_test, **ds_kw)
     data = partition_noniid_shards(
         x_tr, y_tr, n_devices, shards_per_device=classes_per_device, seed=seed
     )
     if kind == "mnist":
-        params0 = small.init_logreg(k_init)
+        params0 = small.init_logreg(k_init, dim=784 if dim is None else dim)
         loss_fn = small.logreg_loss
         eval_fn = small.make_eval_fn(small.logreg_logits, loss_fn, x_te, y_te)
     else:
@@ -166,9 +174,11 @@ def run_policies(
 BENCH_SWEEP_KW = dict(n_rounds=30, n_trials=3, n_scheduled=10, eval_every=10)
 
 
-def bench_task() -> Task:
-    """The task the sim-lattice throughput bench runs on."""
-    return build_task("mnist", n_devices=20, n_train=2000)
+def bench_task(dim: int | None = None) -> Task:
+    """The task the sim-lattice throughput bench runs on. ``dim`` overrides
+    the flat feature dimension (the ``--dim`` D-scaling axis); ``None``
+    keeps the historical 784-dim task bit-identically."""
+    return build_task("mnist", n_devices=20, n_train=2000, dim=dim)
 
 
 def bench_sweep(

@@ -90,6 +90,54 @@ def history_table(entries) -> str:
     return "\n".join(lines)
 
 
+def _gate_key(e: dict) -> tuple:
+    """The comparability key of a bench entry: only entries measuring the
+    same workload on the same topology may be compared by the perf gate.
+    ``mesh_shape``/``dim`` are absent in pre-2-D-mesh history — ``None``
+    there matches only other legacy entries."""
+    return (
+        e.get("backend"), e.get("mesh_shape", None),
+        e.get("mesh_devices"), e.get("n_hosts"), e.get("dim", None),
+        e.get("cells"), e.get("n_rounds"),
+    )
+
+
+def gate_regression(
+    entries: list[dict], max_regress: float = 0.2
+) -> tuple[bool, str]:
+    """Perf regression gate over the bench trajectory.
+
+    Compares the LAST history entry's ``steady_cells_per_sec`` against the
+    most recent PRIOR entry with the same :func:`_gate_key` (backend, mesh
+    shape, host count, dim, sweep size). Returns ``(ok, message)`` — ok is
+    False when throughput regressed by more than ``max_regress`` (fraction,
+    default 20%). Passes trivially when there is no comparable prior entry
+    (first run on a new configuration) or fewer than two entries total.
+    """
+    if len(entries) < 2:
+        return True, "perf gate: <2 history entries, nothing to compare"
+    last = entries[-1]
+    cur = last.get("steady_cells_per_sec")
+    if cur is None:
+        return True, "perf gate: last entry has no steady_cells_per_sec"
+    key = _gate_key(last)
+    prior = next(
+        (e for e in reversed(entries[:-1]) if _gate_key(e) == key), None
+    )
+    if prior is None or not prior.get("steady_cells_per_sec"):
+        return True, (
+            f"perf gate: no prior entry for {key}, passing trivially"
+        )
+    ref = float(prior["steady_cells_per_sec"])
+    cur = float(cur)
+    drop = (ref - cur) / ref
+    msg = (
+        f"perf gate: steady_cells_per_sec {cur:.3f} vs prior {ref:.3f} "
+        f"({-drop:+.1%}; threshold -{max_regress:.0%}; key={key})"
+    )
+    return drop <= max_regress, msg
+
+
 def main(path=DEFAULT_JSON, history_path=HISTORY_PATH):
     if os.path.exists(path):
         recs = sorted(
@@ -111,8 +159,27 @@ def main(path=DEFAULT_JSON, history_path=HISTORY_PATH):
 
 
 if __name__ == "__main__":
+    import sys
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default=DEFAULT_JSON)
     ap.add_argument("--history", default=HISTORY_PATH)
+    ap.add_argument(
+        "--gate", action="store_true",
+        help="perf regression gate: exit 1 when the last BENCH_history.jsonl "
+        "entry's steady_cells_per_sec regressed more than --max-regress vs "
+        "the most recent prior entry on the same backend/mesh shape "
+        "(passes trivially with no comparable prior)",
+    )
+    ap.add_argument(
+        "--max-regress", type=float, default=0.2, metavar="FRAC",
+        help="allowed fractional throughput drop for --gate (default 0.2)",
+    )
     args = ap.parse_args()
+    if args.gate:
+        ok, msg = gate_regression(
+            load_history(args.history), max_regress=args.max_regress
+        )
+        print(msg)
+        sys.exit(0 if ok else 1)
     main(args.json, args.history)

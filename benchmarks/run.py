@@ -14,6 +14,24 @@ overwrite (``python -m benchmarks.report`` renders it).
   mesh_devices                     — devices the cell axis was sharded over
                                      (1 = unsharded run; with --hosts N this
                                      is the GLOBAL process-spanning count)
+  mesh_shape                       — "CxM" string of the (cells, model) mesh
+                                     the lattice ran on ("1x1" = unsharded,
+                                     "Nx1" = the 1-D cell sharding, "CxM"
+                                     with M > 1 = the 2-D model-sharded
+                                     mesh); the perf-gate key alongside
+                                     backend
+  per_device_hbm_bytes             — argument+output+temp bytes of the
+                                     compiled lattice program PER DEVICE
+                                     (XLA ``memory_analysis`` via
+                                     ``sim.engine.lattice_memory_stats``;
+                                     0 when unavailable, e.g. --hosts > 1).
+                                     Shrinks as the model axis grows at
+                                     fixed D — the 2-D mesh's headline
+                                     number
+  dim                              — flat model dimension D of the bench
+                                     task's params (7850 for the default
+                                     784-dim logreg; --dim overrides the
+                                     feature dimension)
   n_hosts                          — jax.distributed process count the
                                      lattice ran across (1 = single-host)
   lattice_seconds / loop_seconds   — COLD lattice (trace + compile + run) vs
@@ -57,9 +75,13 @@ deserialization cost).
 ``--backend {jnp,pallas_fused}`` selects the aggregation backend and
 ``--mesh N`` shards the lattice's cell axis over the first N local devices
 (on CPU, export ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
-first), both threaded through benchmarks/common.py. ``--mesh N`` exceeding
-the visible local device count is a HARD ERROR (exit 2) — never a silent
-fall back to fewer devices.
+first), both threaded through benchmarks/common.py. ``--mesh CxM`` (e.g.
+``--mesh 4x2``) builds the 2-D ``("cells", "model")`` mesh instead — C
+cell shards × M model shards per cell (``sim.lattice.make_cell_model_mesh``).
+A ``--mesh`` exceeding the visible local device count is a HARD ERROR
+(exit 2) — never a silent fall back to fewer devices. ``--dim D`` overrides
+the bench task's feature dimension (D-scaling axis; 0 = the default 784)
+and ``--sim-only`` runs just the sim-lattice bench (the perf-gate CI step).
 
 ``--hosts H`` (H > 1) measures the MULTI-HOST lattice instead: the sweep is
 dispatched through ``repro.launch.distributed`` as H coordinated
@@ -164,7 +186,13 @@ def _kernel_micro():
     return f"max_abs_err={max(err_a, err_f, err_s):.2e}"
 
 
-def _bench_sim(backend: str = "jnp", mesh_devices: int = 0, n_hosts: int = 1):
+def _bench_sim(
+    backend: str = "jnp",
+    mesh_devices: int = 0,
+    n_hosts: int = 1,
+    model_shards: int = 1,
+    dim: int = 0,
+):
     """Reduced fig4-style sweep (5 policies × 3 trials) through sim.lattice
     vs the cached-engine one-run_pofl-per-cell loop → BENCH_sim.json.
 
@@ -174,20 +202,34 @@ def _bench_sim(backend: str = "jnp", mesh_devices: int = 0, n_hosts: int = 1):
     PR-2 optimized wrapper (engine cache + single-static-length active-mask
     scan), so ``speedup`` is the honest steady-lattice-vs-loop number and
     ``cold_speedup`` the old blended one. ``mesh_devices > 0`` shards the
-    lattice's cell axis over that many local devices; ``n_hosts > 1``
-    instead runs the lattice across that many coordinated
-    ``jax.distributed`` processes via the ``repro.launch.distributed``
-    launcher (``mesh_devices`` then counts the GLOBAL devices). The loop
-    baseline always runs single-host, unsharded.
+    lattice's cell axis over that many local devices; ``model_shards > 1``
+    additionally shards the model dimension (``--mesh CxM`` → a 2-D
+    ``make_cell_model_mesh(C, M)`` mesh). ``dim > 0`` overrides the bench
+    task's feature dimension. ``n_hosts > 1`` instead runs the lattice
+    across that many coordinated ``jax.distributed`` processes via the
+    ``repro.launch.distributed`` launcher (``mesh_devices`` then counts the
+    GLOBAL devices; 1-D only). The loop baseline always runs single-host,
+    unsharded.
     """
     from benchmarks.common import (
         BENCH_SWEEP_KW, POLICIES, bench_sweep, bench_task, run_policies_loop,
         timed,
     )
-    from repro.sim import engine_cache_stats, make_cell_mesh, reset_engine_cache
+    from repro.sim import (
+        engine_cache_stats,
+        lattice_memory_stats,
+        make_cell_mesh,
+        make_cell_model_mesh,
+        reset_engine_cache,
+    )
 
     n_rounds = BENCH_SWEEP_KW["n_rounds"]
-    task = bench_task()  # shared between the lattice sweep and loop baseline
+    # shared between the lattice sweep and loop baseline
+    task = bench_task(dim=dim or None)
+    from jax.flatten_util import ravel_pytree
+
+    flat_dim = int(ravel_pytree(task.params0)[0].size)
+    mem_stats = {"per_device_hbm_bytes": 0}
     if n_hosts > 1:
         from repro.launch.distributed import run_bench
 
@@ -210,11 +252,24 @@ def _bench_sim(backend: str = "jnp", mesh_devices: int = 0, n_hosts: int = 1):
         }
         cells = worker["cells"]
         n_mesh = worker["mesh_devices"]
+        mesh_shape = f"{n_mesh}x1"
     else:
-        mesh = make_cell_mesh(mesh_devices) if mesh_devices else None
+        if model_shards > 1:
+            cells_ax = mesh_devices // model_shards
+            mesh = make_cell_model_mesh(cells_ax, model_shards)
+            mesh_shape = f"{cells_ax}x{model_shards}"
+        elif mesh_devices:
+            mesh = make_cell_mesh(mesh_devices)
+            mesh_shape = f"{mesh_devices}x1"
+        else:
+            mesh = None
+            mesh_shape = "1x1"
         n_mesh = 1 if mesh is None else mesh_devices
         _, timings, cells = bench_sweep(backend=backend, mesh=mesh, task=task)
         lattice_cache = engine_cache_stats()
+        # capture the per-device HBM footprint BEFORE the cache reset below
+        # evicts the engines holding the compiled executables
+        mem_stats = lattice_memory_stats()
     t_cold = timings["cold_seconds"]
     t_steady = timings["steady_seconds"]
     reset_engine_cache()
@@ -227,6 +282,9 @@ def _bench_sim(backend: str = "jnp", mesh_devices: int = 0, n_hosts: int = 1):
         "n_devices": 20,
         "backend": backend,
         "mesh_devices": n_mesh,
+        "mesh_shape": mesh_shape,
+        "per_device_hbm_bytes": int(mem_stats["per_device_hbm_bytes"]),
+        "dim": flat_dim,
         "n_hosts": n_hosts,
         "lattice_seconds": round(t_cold, 3),
         "steady_seconds": round(t_steady, 3),
@@ -264,11 +322,25 @@ def main(argv: list[str] | None = None) -> None:
         help="aggregation backend for the sim-lattice bench",
     )
     parser.add_argument(
-        "--mesh", type=int, default=0, metavar="N",
+        "--mesh", type=str, default="0", metavar="N|CxM",
         help="shard the sim-lattice bench's cell axis over the first N local "
-        "devices (0 = unsharded; on CPU set "
-        "XLA_FLAGS=--xla_force_host_platform_device_count=N first); with "
-        "--hosts H this is the GLOBAL device count split H ways",
+        "devices, or over a 2-D CxM (cells × model) mesh, e.g. --mesh 4x2 "
+        "(0 = unsharded; on CPU set "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=<total> first); "
+        "with --hosts H this is the GLOBAL device count split H ways (1-D "
+        "only)",
+    )
+    parser.add_argument(
+        "--dim", type=int, default=0, metavar="D",
+        help="override the bench task's feature dimension (0 = the default "
+        "784-dim task; the flat model dimension lands in BENCH_sim.json "
+        "as `dim`)",
+    )
+    parser.add_argument(
+        "--sim-only", action="store_true",
+        help="run only the sim-lattice bench (the perf-gate CI step): "
+        "writes BENCH_sim.json + BENCH_history.jsonl and skips the "
+        "figure/kernel/roofline benches",
     )
     parser.add_argument(
         "--hosts", type=int, default=1, metavar="H",
@@ -282,19 +354,33 @@ def main(argv: list[str] | None = None) -> None:
     # every other benchmark silently proceeds without BENCH_sim.json
     if args.hosts < 1:
         parser.error(f"--hosts must be >= 1 (got {args.hosts})")
-    if args.mesh < 0:
+    try:
+        if "x" in args.mesh:
+            cells_s, model_s = args.mesh.split("x")
+            mesh_total, model_shards = int(cells_s) * int(model_s), int(model_s)
+            if int(cells_s) < 1 or model_shards < 1:
+                raise ValueError(args.mesh)
+        else:
+            mesh_total, model_shards = int(args.mesh), 1
+    except ValueError:
+        parser.error(f"--mesh must be an integer N or CxM (got {args.mesh!r})")
+    if mesh_total < 0:
         parser.error(f"--mesh must be >= 0 (got {args.mesh})")
-    if args.hosts == 1 and args.mesh:
+    if args.dim < 0:
+        parser.error(f"--dim must be >= 0 (got {args.dim})")
+    if model_shards > 1 and args.hosts > 1:
+        parser.error("--mesh CxM (model sharding) is single-host only")
+    if args.hosts == 1 and mesh_total:
         import jax
 
         n_local = len(jax.devices())
-        if args.mesh > n_local:
+        if mesh_total > n_local:
             parser.error(
-                f"--mesh {args.mesh} exceeds the {n_local} visible local "
-                "device(s); on CPU set "
-                f"XLA_FLAGS=--xla_force_host_platform_device_count={args.mesh}"
+                f"--mesh {args.mesh} needs {mesh_total} devices but only "
+                f"{n_local} local device(s) are visible; on CPU set "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count={mesh_total}"
             )
-    if args.hosts > 1 and (args.mesh or args.hosts) % args.hosts:
+    if args.hosts > 1 and (mesh_total or args.hosts) % args.hosts:
         parser.error(
             f"--mesh {args.mesh} must divide evenly across --hosts {args.hosts}"
         )
@@ -309,21 +395,27 @@ def main(argv: list[str] | None = None) -> None:
         table1_alpha,
     )
 
-    _run("kernels_microbench", _kernel_micro, lambda d: d)
+    if not args.sim_only:
+        _run("kernels_microbench", _kernel_micro, lambda d: d)
     _run(
         "sim_lattice",
         lambda: _bench_sim(
-            backend=args.backend, mesh_devices=args.mesh, n_hosts=args.hosts
+            backend=args.backend, mesh_devices=mesh_total,
+            n_hosts=args.hosts, model_shards=model_shards, dim=args.dim,
         ),
         lambda d: (
             "steady_cells/s=%.2f cold_cells/s=%.2f compile_s=%.1f "
-            "n_compiles=%d speedup=%.1fx backend=%s mesh=%d hosts=%d" % (
+            "n_compiles=%d speedup=%.1fx backend=%s mesh=%s hbm/dev=%d "
+            "dim=%d hosts=%d" % (
                 d["steady_cells_per_sec"], d["cells_per_sec"],
                 d["compile_seconds"], d["n_compiles"], d["speedup"],
-                d["backend"], d["mesh_devices"], d["n_hosts"],
+                d["backend"], d["mesh_shape"], d["per_device_hbm_bytes"],
+                d["dim"], d["n_hosts"],
             )
         ),
     )
+    if args.sim_only:
+        return
     _run(
         "fig3_single_device", fig3_single_device.main,
         lambda r: "pofl=%.3f noisefree=%.3f chan=%.3f" % (

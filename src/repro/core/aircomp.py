@@ -79,6 +79,41 @@ def distortion_closed_form(
     return dim * noise_power * v_g / tx_power * jnp.max(ratio)
 
 
+def combine_given_stats(
+    g: jnp.ndarray,
+    rho: jnp.ndarray,
+    h: jnp.ndarray,
+    mask: jnp.ndarray,
+    z: jnp.ndarray,
+    m_g: jnp.ndarray,
+    v_g: jnp.ndarray,
+    a: jnp.ndarray,
+    simulate_physical: bool = True,
+) -> jnp.ndarray:
+    """The D-elementwise tail of the Eq. 5→16 chain, given the precomputed
+    global stats (M_g, V_g), denoise scalar ``a`` and noise draw ``z``.
+
+    Factored out of :func:`aircomp_aggregate` op for op so the model-sharded
+    lattice (``core.pofl.ModelShard``) can run the identical arithmetic on a
+    shard-local ``(n_devices, D_local)`` block inside ``shard_map``: every
+    operation here is elementwise over D (the device-axis reduction stays
+    local to the block), so a D-shard of the output equals the same slice of
+    the unsharded output bitwise.
+    """
+    if simulate_physical:
+        s = normalize(g, m_g, v_g)  # (n_devices, D) symbols
+        b = transmit_scalars(rho, h, a)  # (n_devices,) complex
+        # an empty scheduled set (possible under sim dropout) gives a=inf and
+        # rho=0, so b = 0·inf = NaN; zero unscheduled transmitters *before*
+        # the mask multiply — 0·NaN would stay NaN after it
+        b = jnp.where(mask > 0, b, jnp.zeros((), b.dtype))
+        tx = (mask.astype(h.dtype) * b * h)[:, None] * s.astype(h.dtype)
+        y_tilde = jnp.real(jnp.sum(tx, axis=0)) + z  # superposition (Eq. 7)
+        return jnp.sqrt(eps_guard(v_g)) * y_tilde / a + m_g  # Eq. 8
+    noise = jnp.sqrt(eps_guard(v_g)) / a * z
+    return jnp.sum((mask * rho)[:, None] * g, axis=0) + noise  # Eq. 16
+
+
 def aircomp_aggregate(
     g: jnp.ndarray,
     rho: jnp.ndarray,
@@ -112,19 +147,9 @@ def aircomp_aggregate(
     # (the closed form then matches Monte Carlo exactly — see tests).
     z = jax.random.normal(key, (dim,)) * jnp.sqrt(noise_power)
 
-    if simulate_physical:
-        s = normalize(g, m_g, v_g)  # (n_devices, D) symbols
-        b = transmit_scalars(rho, h, a)  # (n_devices,) complex
-        # an empty scheduled set (possible under sim dropout) gives a=inf and
-        # rho=0, so b = 0·inf = NaN; zero unscheduled transmitters *before*
-        # the mask multiply — 0·NaN would stay NaN after it
-        b = jnp.where(mask > 0, b, jnp.zeros((), b.dtype))
-        tx = (mask.astype(h.dtype) * b * h)[:, None] * s.astype(h.dtype)
-        y_tilde = jnp.real(jnp.sum(tx, axis=0)) + z  # superposition (Eq. 7)
-        y_hat = jnp.sqrt(eps_guard(v_g)) * y_tilde / a + m_g  # Eq. 8
-    else:
-        noise = jnp.sqrt(eps_guard(v_g)) / a * z
-        y_hat = jnp.sum((mask * rho)[:, None] * g, axis=0) + noise  # Eq. 16
+    y_hat = combine_given_stats(
+        g, rho, h, mask, z, m_g, v_g, a, simulate_physical=simulate_physical
+    )
 
     e_com = distortion_closed_form(
         v_g, rho, h_abs, mask, dim, tx_power, noise_power

@@ -44,7 +44,10 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
 from jax.flatten_util import ravel_pytree
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
 from repro.core import aircomp, scheduling
 from repro.core.channel import ChannelConfig, ChannelState
@@ -60,6 +63,153 @@ class AggregationBackend(str, enum.Enum):
 
 
 BACKENDS = tuple(b.value for b in AggregationBackend)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelShard:
+    """Model-dimension sharding context for the round pipeline.
+
+    Built by ``repro.sim.engine.SimEngine`` when its mesh carries a
+    ``"model"`` axis of size > 1 (a 2-D ``("cells", "model")`` mesh from
+    ``repro.sim.lattice.make_cell_model_mesh``). When threaded into
+    :func:`round_algorithm` it reroutes the D-elementwise hot path through
+    ``shard_map`` over the model axis:
+
+      * the flat (N, D) gradient block is zero-padded to a multiple of
+        ``|model| · tile_d`` and constrained to ``P(None, "model")`` — each
+        device holds only its own ``D/|model|`` columns;
+      * the Eq. 5 statistics M_i, V_i, ||g_i|| become small ``psum``\\ s of
+        shard-local partial sums over the model axis (padding columns are
+        masked out, so values match the unsharded stats up to reduction
+        order);
+      * the aggregation stage runs shard-locally on each
+        ``(n_devices, D_local)`` block — the fused Pallas kernel's grid is
+        aligned to the shard (``kernels/aircomp`` clamps its tile to the
+        block), the ``jnp`` reference uses the identical factored-out
+        :func:`repro.core.aircomp.combine_given_stats` — with no collective
+        at all: the device-axis reduction is elementwise over D;
+      * the updated params carry is constrained back to its model-sharded
+        placement (``repro.launch.sharding.param_spec``) so the scan carry
+        keeps a stable sharding across rounds.
+
+    Everything outside that path (scheduling, channel, PRNG discipline,
+    e_com's closed form over the TRUE dim) is untouched, and ``None`` — the
+    default everywhere — leaves the traced program bit-identical to the
+    unsharded engine.
+    """
+
+    mesh: Any          # jax.sharding.Mesh with a "model" axis of size > 1
+    axis: str = "model"
+
+    @property
+    def n_shards(self) -> int:
+        return int(self.mesh.shape[self.axis])
+
+    def padded_dim(self, dim: int) -> int:
+        """D rounded up so every model shard holds a whole number of default
+        kernel tiles (the fused kernel then launches a snug, pad-free grid
+        on its local block)."""
+        from repro.kernels.aircomp import DEFAULT_TILE_D  # late: kernels↔core
+
+        unit = self.n_shards * DEFAULT_TILE_D
+        return -(-dim // unit) * unit
+
+    def pad_features(self, g: jnp.ndarray, dim: int) -> jnp.ndarray:
+        """Zero-pad the trailing (flat-D) axis to :meth:`padded_dim` and
+        constrain it to ``P(None, "model")`` placement."""
+        d_pad = self.padded_dim(dim)
+        if d_pad != dim:
+            g = jnp.pad(g, ((0, 0), (0, d_pad - dim)))
+        return jax.lax.with_sharding_constraint(
+            g, NamedSharding(self.mesh, P(None, self.axis))
+        )
+
+    def leaf_sharding(self, shape) -> NamedSharding:
+        """The params-leaf placement rule (reuses the dormant FSDP machinery:
+        last dim divisible by |model| → "model"; tiny leaves replicated)."""
+        from repro.launch.sharding import param_spec  # late: launch↔core
+
+        return NamedSharding(self.mesh, param_spec(tuple(shape), self.mesh))
+
+
+def _model_sharded_local_stats(
+    ms: ModelShard, g_pad: jnp.ndarray, dim: int
+) -> aircomp.GradStats:
+    """Step-3 statistics over a model-sharded padded gradient block.
+
+    Each shard reduces its own columns; only the three (N,)-sized partial
+    sums cross the model axis (the "small psums" of the 2-D lattice). The
+    zero-padding columns are masked out of every sum — when D divides the
+    shard count the mask is all-ones and the arithmetic is a pure
+    sum-then-divide, matching :func:`aircomp.local_stats` up to the
+    documented cross-program reduction-order wobble.
+    """
+    ax = ms.axis
+
+    def stats_block(gb):
+        d_local = gb.shape[-1]
+        col0 = jax.lax.axis_index(ax) * d_local
+        valid = ((col0 + jnp.arange(d_local)) < dim).astype(gb.dtype)
+        gv = gb * valid
+        mean = jax.lax.psum(jnp.sum(gv, axis=-1), ax) / dim
+        dev = (gb - mean[:, None]) * valid
+        var = jax.lax.psum(jnp.sum(dev * dev, axis=-1), ax) / dim
+        norm = jnp.sqrt(jax.lax.psum(jnp.sum(gv * gv, axis=-1), ax))
+        return mean, var, norm
+
+    mean, var, norm = shard_map(
+        stats_block, mesh=ms.mesh,
+        in_specs=(P(None, ax),), out_specs=(P(), P(), P()),
+        check_rep=False,
+    )(g_pad)
+    return aircomp.GradStats(mean=mean, var=var, norm=norm)
+
+
+def _model_sharded_combine(
+    cfg: "POFLConfig",
+    ms: ModelShard,
+    g_pad: jnp.ndarray,
+    rho: jnp.ndarray,
+    h: jnp.ndarray,
+    mask: jnp.ndarray,
+    z_pad: jnp.ndarray,
+    m_g: jnp.ndarray,
+    v_g: jnp.ndarray,
+    a: jnp.ndarray,
+    use_pallas: str | bool,
+) -> jnp.ndarray:
+    """Shard-local Eq. 5→8 combine: every input except the D-sharded
+    gradient/noise blocks is replicated, the output is the D-sharded ŷ, and
+    no collective runs inside — the device-axis reduction is elementwise
+    over D. The fused kernel launches per shard on its local
+    ``(n_devices, D_local)`` block (its grid aligned to the shard); the jnp
+    backend runs the identical factored-out reference arithmetic."""
+    backend = AggregationBackend(cfg.backend)
+    if backend is AggregationBackend.JNP:
+
+        def agg_block(gb, zb, rho_, h_, mask_, m_g_, v_g_, a_):
+            return aircomp.combine_given_stats(
+                gb, rho_, h_, mask_, zb, m_g_, v_g_, a_,
+                simulate_physical=cfg.simulate_physical,
+            )
+
+    else:
+        from repro.kernels.aircomp import aircomp_aggregate_fused  # late
+
+        def agg_block(gb, zb, rho_, h_, mask_, m_g_, v_g_, a_):
+            coeff = mask_ * rho_  # b_i h_i = ρ_i a exactly (Lemma 1)
+            return aircomp_aggregate_fused(
+                gb, coeff, m_g_, v_g_, a_, zb, use_pallas=use_pallas
+            )
+
+    ax = ms.axis
+    return shard_map(
+        agg_block, mesh=ms.mesh,
+        in_specs=(
+            P(None, ax), P(ax), P(None), P(None), P(None), P(), P(), P(),
+        ),
+        out_specs=P(ax), check_rep=False,
+    )(g_pad, z_pad, rho, h, mask, m_g, v_g, a)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -280,6 +430,9 @@ def aggregation_stage(
     k_noise: jax.Array,
     noise_power,
     use_pallas: str | bool = "auto",
+    model_shard: ModelShard | None = None,
+    stats: aircomp.GradStats | None = None,
+    dim: int | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Steps 5: transmit + AirComp aggregate per ``cfg.backend`` → (ŷ, e_com).
 
@@ -289,25 +442,53 @@ def aggregation_stage(
     (``kernels/aircomp``). Under the lattice's cell vmap the fused
     ``pallas_call`` batches into the trial-batched grid — the
     ``aircomp_fused_batch`` layout — without host-side dispatch.
+
+    ``model_shard`` switches to the D-sharded route: ``g`` is then the
+    padded block (``ModelShard.pad_features``), ``stats`` the psum'd
+    statistics, ``dim`` the TRUE (unpadded) flat dimension — the noise draw
+    stays the full-D draw of the same key (identical values to the
+    unsharded path; only its placement is sharded) and the returned ŷ is
+    still padded (slice ``[:dim]`` at the caller). ``e_com``'s closed form
+    always uses the true ``dim``.
     """
     backend = AggregationBackend(cfg.backend)
-    if backend is AggregationBackend.JNP:
-        return aircomp.aircomp_aggregate(
-            g, rho, h, mask, k_noise, cfg.tx_power, noise_power,
-            simulate_physical=cfg.simulate_physical,
+    if model_shard is None:
+        if backend is AggregationBackend.JNP:
+            return aircomp.aircomp_aggregate(
+                g, rho, h, mask, k_noise, cfg.tx_power, noise_power,
+                simulate_physical=cfg.simulate_physical,
+            )
+
+        from repro.kernels.aircomp import aircomp_aggregate_fused  # late: kernels↔core
+
+        stats = aircomp.local_stats(g)
+        m_g, v_g = aircomp.global_stats(stats, rho, mask)
+        h_abs = jnp.abs(h)
+        a = aircomp.denoise_scalar(rho, h_abs, mask, cfg.tx_power)
+        dim = g.shape[-1]
+        z = jax.random.normal(k_noise, (dim,)) * jnp.sqrt(noise_power)
+        coeff = mask * rho  # b_i h_i = ρ_i a exactly (Lemma-1 channel inversion)
+        y_hat = aircomp_aggregate_fused(
+            g, coeff, m_g, v_g, a, z, use_pallas=use_pallas
         )
+        e_com = aircomp.distortion_closed_form(
+            v_g, rho, h_abs, mask, dim, cfg.tx_power, noise_power
+        )
+        return y_hat, e_com
 
-    from repro.kernels.aircomp import aircomp_aggregate_fused  # late: kernels↔core
-
-    stats = aircomp.local_stats(g)
+    if stats is None or dim is None:
+        raise ValueError("model-sharded aggregation needs precomputed stats + dim")
     m_g, v_g = aircomp.global_stats(stats, rho, mask)
     h_abs = jnp.abs(h)
     a = aircomp.denoise_scalar(rho, h_abs, mask, cfg.tx_power)
-    dim = g.shape[-1]
+    # same draw, same key, same values as the unsharded path — only the
+    # padding tail (zeros) and the placement differ
     z = jax.random.normal(k_noise, (dim,)) * jnp.sqrt(noise_power)
-    coeff = mask * rho  # b_i h_i = ρ_i a exactly (Lemma-1 channel inversion)
-    y_hat = aircomp_aggregate_fused(
-        g, coeff, m_g, v_g, a, z, use_pallas=use_pallas
+    d_pad = g.shape[-1]
+    if d_pad != dim:
+        z = jnp.pad(z, (0, d_pad - dim))
+    y_hat = _model_sharded_combine(
+        cfg, model_shard, g, rho, h, mask, z, m_g, v_g, a, use_pallas
     )
     e_com = aircomp.distortion_closed_form(
         v_g, rho, h_abs, mask, dim, cfg.tx_power, noise_power
@@ -315,10 +496,27 @@ def aggregation_stage(
     return y_hat, e_com
 
 
-def apply_update_stage(cfg: POFLConfig, params, y_hat: jnp.ndarray, t):
-    """Step 6: w^{t+1} = w^t − η^t ŷ^t (flat update, re-raveled)."""
+def apply_update_stage(
+    cfg: POFLConfig, params, y_hat: jnp.ndarray, t,
+    model_shard: ModelShard | None = None,
+):
+    """Step 6: w^{t+1} = w^t − η^t ŷ^t (flat update, re-raveled).
+
+    Under a :class:`ModelShard` each updated leaf is constrained back to its
+    model-sharded placement (``P(None, "model")`` on the last eligible dim)
+    so the scan carry keeps a stable sharding across rounds instead of
+    drifting to whatever layout the flat update left behind.
+    """
     flat_params, unravel_p = ravel_pytree(params)
-    return unravel_p(flat_params - cfg.lr(t) * y_hat)
+    new_params = unravel_p(flat_params - cfg.lr(t) * y_hat)
+    if model_shard is not None:
+        new_params = jax.tree.map(
+            lambda leaf: jax.lax.with_sharding_constraint(
+                leaf, model_shard.leaf_sharding(np.shape(leaf))
+            ),
+            new_params,
+        )
+    return new_params
 
 
 # --------------------------------------------------------------------------
@@ -341,6 +539,7 @@ def round_algorithm(
     avail: jnp.ndarray | None = None,
     policy_id: jnp.ndarray | None = None,
     diagnostics: bool = False,
+    model_shard: ModelShard | None = None,
 ) -> tuple[Any, RoundMetrics]:
     """Steps 2–6 of Algorithm 1 for one round, given this round's channel ``h``.
 
@@ -363,6 +562,11 @@ def round_algorithm(
     cheap per-round taps of :class:`repro.core.metrics.RoundDiagnostics` to
     the returned metrics. Off — the default — the traced program is
     bit-identical to the seed: no extra ops, ``metrics.diag is None``.
+
+    ``model_shard`` (a :class:`ModelShard`, from an engine whose mesh has a
+    ``"model"`` axis > 1) reroutes the D-elementwise hot path — stats,
+    aggregation, params carry — through model-sharded ``shard_map`` blocks;
+    ``None`` keeps the unsharded trace exactly.
     """
     noise_power = cfg.noise_power if noise_power is None else noise_power
     alpha = cfg.alpha if alpha is None else alpha
@@ -385,7 +589,13 @@ def round_algorithm(
     dim = g.shape[-1]
 
     # -- step 3: uploaded scalar statistics ---------------------------
-    stats = aircomp.local_stats(g)
+    if model_shard is not None:
+        # pad D to |model|·tile_d, place P(None, "model"); stats become
+        # masked shard-local reductions + small psums over the model axis
+        g = model_shard.pad_features(g, dim)
+        stats = _model_sharded_local_stats(model_shard, g, dim)
+    else:
+        stats = aircomp.local_stats(g)
 
     # -- step 4: scheduling -------------------------------------------
     h_abs = jnp.abs(h)
@@ -397,11 +607,17 @@ def round_algorithm(
 
     # -- steps 5-6: AirComp aggregation + model update ----------------
     y_hat, e_com = aggregation_stage(
-        cfg, g, rho, h, mask, k_noise, agg_noise_power
+        cfg, g, rho, h, mask, k_noise, agg_noise_power,
+        model_shard=model_shard, stats=stats, dim=dim,
     )
+    if model_shard is not None:
+        # ŷ comes back padded (its tail is sqrt(V_g)/a·0 + M_g, not zero) —
+        # slice to the true D before the update and the norm tap
+        y_hat = y_hat[:dim]
+    # e_var on the padded g is exact: padded columns are zero in every term
     e_var = scheduling.global_update_variance(g, rho, mask, data_frac, cfg.n_scheduled)
 
-    new_params = apply_update_stage(cfg, params, y_hat, t)
+    new_params = apply_update_stage(cfg, params, y_hat, t, model_shard=model_shard)
 
     a = aircomp.denoise_scalar(rho, h_abs, mask, cfg.tx_power)
     diag = None

@@ -20,18 +20,23 @@ def make_classification_dataset(
     n_classes: int = 10,
     noise: float = 0.8,
     proto_seed: int = 42,
+    dim: int | None = None,
 ):
     """Returns (features, labels) with features flattened for 'mnist_like'
     and shaped (n, 32, 32, 3) for 'cifar_like'.
 
     Class prototypes are fixed by ``proto_seed`` (NOT by ``key``) so that
     train/test splits drawn with different sample keys share one underlying
-    distribution.
+    distribution. ``dim`` overrides the flat feature dimension of
+    ``mnist_like`` (the D-scaling benchmark axis; default 784 keeps every
+    historical draw bit-identical); ``cifar_like``'s image shape is fixed.
     """
     if kind == "mnist_like":
-        dim = 784
+        dim = 784 if dim is None else int(dim)
         shape = (dim,)
     elif kind == "cifar_like":
+        if dim is not None:
+            raise ValueError("dim override only supported for mnist_like")
         dim = 32 * 32 * 3
         shape = (32, 32, 3)
     else:

@@ -1,3 +1,4 @@
+from repro.kernels.aircomp.kernel import DEFAULT_TILE_D
 from repro.kernels.aircomp.ops import (
     aircomp_aggregate_fused,
     aircomp_aggregate_fused_batch,
@@ -8,6 +9,7 @@ from repro.kernels.aircomp.ops import (
 )
 
 __all__ = [
+    "DEFAULT_TILE_D",
     "aircomp_aggregate_fused",
     "aircomp_aggregate_fused_batch",
     "aircomp_fused",

@@ -32,6 +32,20 @@ from repro.core.numerics import eps_guard
 
 DEFAULT_TILE_D = 512
 
+# TPU lane width: tiles stay multiples of this when clamping
+_LANE = 128
+
+
+def _clamp_tile(d: int, tile_d: int) -> int:
+    """Clamp an oversized tile down toward D (rounded up to the 128-lane
+    multiple) so a small D — e.g. a shard-local block under the lattice's
+    2-D (cells × model) mesh — pads to one snug tile instead of a mostly
+    dead ``tile_d``-wide grid. A caller-requested tile smaller than the
+    aligned D passes through untouched (tests drive tiny tiles on purpose).
+    """
+    aligned = -(-d // _LANE) * _LANE
+    return min(tile_d, aligned)
+
 
 def _aircomp_kernel(scalars_ref, coeff_ref, g_ref, z_ref, out_ref):
     m_g = scalars_ref[0]
@@ -86,6 +100,7 @@ def aircomp_fused_batch(
     are indexed by the grid position.
     """
     bt, n, d = g.shape
+    tile_d = _clamp_tile(d, tile_d)
     d_pad = ((d + tile_d - 1) // tile_d) * tile_d
     if d_pad != d:
         g = jnp.pad(g, ((0, 0), (0, 0), (0, d_pad - d)))
@@ -127,9 +142,13 @@ def aircomp_fused(
 ) -> jnp.ndarray:
     """Fused Eq. 5→8 aggregation. Returns ŷ of shape (D,).
 
-    D is padded to a multiple of ``tile_d`` internally.
+    D is padded to a multiple of ``tile_d`` internally; a ``tile_d`` wider
+    than (128-lane-aligned) D is clamped first, so shard-local blocks of a
+    model-sharded lattice launch a snug grid rather than padding to the
+    default tile.
     """
     n, d = g.shape
+    tile_d = _clamp_tile(d, tile_d)
     d_pad = ((d + tile_d - 1) // tile_d) * tile_d
     if d_pad != d:
         g = jnp.pad(g, ((0, 0), (0, d_pad - d)))

@@ -46,12 +46,13 @@ def param_spec(shape, mesh, skip_leading: int = 0) -> P:
             model_dim = d
             break
 
-    # FSDP: largest remaining dim over ("pod","data")
+    # FSDP: largest remaining dim over ("pod","data") — meshes without those
+    # axes (e.g. the sim lattice's ("cells", "model")) skip FSDP entirely
     cands = [
         d for d in dims
         if d != model_dim and shape[d] % fsize == 0 and shape[d] >= fsize
     ]
-    if cands:
+    if cands and fax:
         d = max(cands, key=lambda i: shape[i])
         spec[d] = fax if len(fax) > 1 else fax[0]
     return P(*spec)

@@ -30,12 +30,14 @@ from repro.sim.engine import (
     cached_engine,
     engine_cache_stats,
     lattice_compile_stats,
+    lattice_memory_stats,
     reset_engine_cache,
 )
 from repro.sim.lattice import (
     LatticeRecords,
     LatticeSpec,
     make_cell_mesh,
+    make_cell_model_mesh,
     run_lattice,
 )
 from repro.sim.multihost import (
@@ -43,6 +45,7 @@ from repro.sim.multihost import (
     distributed_env,
     initialize_distributed,
     make_global_cell_mesh,
+    make_global_cell_model_mesh,
     mesh_spans_processes,
 )
 from repro.sim.scenario import (
@@ -67,9 +70,12 @@ __all__ = [
     "engine_cache_stats",
     "initialize_distributed",
     "lattice_compile_stats",
+    "lattice_memory_stats",
     "make_cell_mesh",
+    "make_cell_model_mesh",
     "make_channel_process",
     "make_global_cell_mesh",
+    "make_global_cell_model_mesh",
     "make_partition",
     "mesh_spans_processes",
     "persistent_cache_counters",

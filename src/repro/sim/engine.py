@@ -49,7 +49,9 @@ import numpy as np
 
 from repro.core.channel import ChannelConfig
 from repro.core.metrics import RoundDiagnostics
-from repro.core.pofl import DeviceData, History, POFLConfig, round_algorithm
+from repro.core.pofl import (
+    DeviceData, History, ModelShard, POFLConfig, round_algorithm,
+)
 from repro.obs.config import DEFAULT_OBS, ObsConfig
 from repro.obs.profile import maybe_profile, profiling_enabled
 from repro.obs.registry import counter_add, metric_value, reset_metrics
@@ -169,6 +171,19 @@ class SimEngine:
         )
         self.eval_fn = eval_fn
         self.mesh = mesh
+        # A 2-D ("cells", "model") mesh with |model| > 1 switches the round
+        # pipeline to the model-sharded hot path (core.pofl.ModelShard):
+        # explicit shard_map blocks over the model axis, so — unlike the
+        # cells axis, where input placement alone partitions the program —
+        # the engine must know about it. |model| == 1 (incl. the 1-D mesh)
+        # keeps model_shard None and the trace bit-identical to unsharded.
+        self._model_shard = None
+        if (
+            mesh is not None
+            and "model" in getattr(mesh, "axis_names", ())
+            and int(mesh.shape["model"]) > 1
+        ):
+            self._model_shard = ModelShard(mesh=mesh)
         # static observability config: flipping `diagnostics` selects a
         # different traced program, so it keys the engine cache (a
         # diagnostics engine never shares jit traces with the plain one)
@@ -184,12 +199,25 @@ class SimEngine:
             self._chunk, static_argnames=("n_steps",), donate_argnums=donate
         )
         self._donating = bool(donate)
+        # Under a model-sharded mesh the cell vmap must NAME its batch axis
+        # (spmd_axis_name): the shard_map blocks inside the cell body are
+        # manual over BOTH mesh axes, so the vmapped dimension has to map
+        # onto the "cells" axis explicitly. Unsharded/|model|==1 engines
+        # keep the anonymous vmap — the seed's exact trace.
+        vmap_kw = {}
+        if self._model_shard is not None:
+            vmap_kw["spmd_axis_name"] = mesh.axis_names[0]
         self._lattice_jit = jax.jit(
-            jax.vmap(self._lattice_cell, in_axes=(None, None, None, 0, 0, 0))
+            jax.vmap(
+                self._lattice_cell, in_axes=(None, None, None, 0, 0, 0),
+                **vmap_kw,
+            )
         )
         self._fused_lattice_jit = jax.jit(
             jax.vmap(
-                self._fused_lattice_cell, in_axes=(None, None, None, 0, 0, 0, 0)
+                self._fused_lattice_cell,
+                in_axes=(None, None, None, 0, 0, 0, 0),
+                **vmap_kw,
             )
         )
         # AOT ``lower().compile()`` executable cache: arg signature →
@@ -245,6 +273,7 @@ class SimEngine:
                 avail=avail if self.process.can_drop else None,
                 policy_id=policy_id,
                 diagnostics=self.obs.diagnostics,
+                model_shard=self._model_shard,
             )
             if self.eval_fn is None:
                 loss = acc = jnp.zeros(())
@@ -338,7 +367,14 @@ class SimEngine:
         ``memory_analysis`` (see :meth:`lattice_cost_analysis`).
         """
         leaves, treedef = jax.tree.flatten(args)
-        key = (fused, treedef, tuple(self._arg_signature(l) for l in leaves))
+        # mesh identity rides at the END of the key (append-only contract):
+        # the engine cache already separates meshed engines, but the
+        # executables of a shared-signature argset must still never alias
+        # across mesh shapes if an engine is ever built bypassing the cache
+        key = (
+            fused, treedef, tuple(self._arg_signature(l) for l in leaves),
+            _mesh_key(self.mesh),
+        )
         compiled = self._lattice_executables.get(key)
         if compiled is None:
             fn = self._fused_lattice_jit if fused else self._lattice_jit
@@ -638,6 +674,44 @@ def engine_cache_stats() -> dict:
         "misses": int(metric_value("engine_cache.misses")),
         "size": len(_ENGINE_CACHE),
     }
+
+
+def lattice_memory_stats() -> dict:
+    """Per-device HBM footprint of the most recent AOT lattice executable
+    across the cached engines: ``{"per_device_hbm_bytes", "argument_bytes",
+    "output_bytes", "temp_bytes", "mesh_shape"}`` (zeros / None before any
+    compile). XLA's ``memory_analysis`` is already PER-DEVICE under SPMD
+    partitioning, so ``per_device_hbm_bytes = argument + output + temp`` is
+    the number ``BENCH_sim.json`` reports — it shrinks as the model axis
+    grows at fixed D.
+    """
+    stats = {
+        "per_device_hbm_bytes": 0,
+        "argument_bytes": 0,
+        "output_bytes": 0,
+        "temp_bytes": 0,
+        "mesh_shape": None,
+    }
+    # most recently *used* executable across engines: walk engines in cache
+    # (LRU) order, newest last, and take the last one holding an executable
+    for engine in _ENGINE_CACHE.values():
+        mem = engine.lattice_memory_analysis()
+        if mem is None:
+            continue
+        arg_b = int(getattr(mem, "argument_size_in_bytes", 0))
+        out_b = int(getattr(mem, "output_size_in_bytes", 0))
+        tmp_b = int(getattr(mem, "temp_size_in_bytes", 0))
+        stats = {
+            "per_device_hbm_bytes": arg_b + out_b + tmp_b,
+            "argument_bytes": arg_b,
+            "output_bytes": out_b,
+            "temp_bytes": tmp_b,
+            "mesh_shape": (
+                None if engine.mesh is None
+                else tuple(int(engine.mesh.shape[a]) for a in engine.mesh.axis_names)
+            ),
+        }
+    return stats
 
 
 def lattice_compile_stats() -> dict:

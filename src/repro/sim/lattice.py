@@ -71,11 +71,35 @@ from repro.obs.sink import emit
 from repro.obs.spans import span
 from repro.sim.engine import FUSED_POLICY, cached_engine
 from repro.sim.multihost import (
+    cell_model_mesh_over,
     cells_mesh_over,
     gather_records,
     mesh_spans_processes,
     shard_to_global,
 )
+
+_LOCAL_MESH_HINT = "(on CPU, set XLA_FLAGS=--xla_force_host_platform_device_count)"
+
+
+def make_cell_model_mesh(
+    cells: int | None = None, model: int = 1
+) -> jax.sharding.Mesh:
+    """A 2-D ``("cells", "model")`` mesh over the first ``cells × model``
+    LOCAL devices.
+
+    The cells axis shards the flattened lattice grid exactly like the 1-D
+    mesh; a ``model`` axis > 1 additionally shards the flat model dimension
+    D of every cell — gradients, noise draws, params carry and ŷ are placed
+    ``P(None, "model")`` so each device holds only ``D/model`` of every
+    large tensor (see ``core.pofl.ModelShard``). ``cells=None`` takes every
+    full group of ``model`` local devices. Process-spanning meshes come from
+    ``repro.sim.multihost.make_global_cell_model_mesh``; on CPU CI, fake
+    multi-device semantics come from
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+    """
+    return cell_model_mesh_over(
+        jax.local_devices(), cells, model, hint=_LOCAL_MESH_HINT
+    )
 
 
 def make_cell_mesh(n_devices: int | None = None) -> jax.sharding.Mesh:
@@ -91,8 +115,7 @@ def make_cell_mesh(n_devices: int | None = None) -> jax.sharding.Mesh:
     initializes).
     """
     return cells_mesh_over(
-        jax.local_devices(), n_devices,
-        hint="(on CPU, set XLA_FLAGS=--xla_force_host_platform_device_count)",
+        jax.local_devices(), n_devices, hint=_LOCAL_MESH_HINT,
     )
 
 
@@ -168,7 +191,7 @@ def run_lattice(
     channel_cfg: ChannelConfig | None = None,
     scenario: str = "static_rayleigh",
     scenario_params: dict | None = None,
-    mesh: jax.sharding.Mesh | int | None = None,
+    mesh: jax.sharding.Mesh | int | tuple | None = None,
     fuse_policies: bool = True,
     obs: ObsConfig | None = None,
 ) -> LatticeRecords:
@@ -185,13 +208,20 @@ def run_lattice(
         shards (``DeviceData.n_samples``) — the Eq. 34/35/37 weights follow
         the true m_i/M in every cell.
       mesh: shard the flattened cell axis over this ``jax.sharding.Mesh``
-        (axis name irrelevant to callers; inputs are placed with
-        ``NamedSharding(P(<first axis>))``). An int builds
-        ``make_cell_mesh(mesh)``. The grid is padded to a multiple of the
-        mesh size with dead cells that are dropped on unpadding; records,
+        (inputs are placed with ``NamedSharding(P(<first axis>))``). An int
+        builds ``make_cell_mesh(mesh)``; a ``(cells, model)`` tuple builds
+        ``make_cell_model_mesh(cells, model)``. The grid is padded to a
+        multiple of the CELLS axis size (the full device count on a 1-D
+        mesh) with dead cells that are dropped on unpadding; records,
         order, and values are unchanged (a 1-device mesh is bit-identical
-        to ``mesh=None``). A process-spanning mesh
-        (``sim.multihost.make_global_cell_mesh`` under ``jax.distributed``)
+        to ``mesh=None``). A 2-D ``("cells", "model")`` mesh with
+        ``|model| > 1`` additionally shards the flat model dimension: the
+        engine pads D to a multiple of ``|model| · tile_d``, places every
+        flat-D leaf ``P(None, "model")``, and routes stats/aggregation
+        through model-axis ``shard_map`` (``core.pofl.ModelShard``); the
+        initial params are placed by ``launch.sharding.param_spec``.
+        A process-spanning mesh (``sim.multihost.make_global_cell_mesh`` /
+        ``make_global_cell_model_mesh`` under ``jax.distributed``)
         switches input feeding to per-process shard assembly and records to
         an allgather — every host returns the same full records.
       fuse_policies: True (default) folds the policy axis into the traced
@@ -213,6 +243,8 @@ def run_lattice(
     base_cfg = base_cfg or POFLConfig(n_devices=data.n_devices)
     if isinstance(mesh, int):
         mesh = make_cell_mesh(mesh)
+    elif isinstance(mesh, tuple):
+        mesh = make_cell_model_mesh(*mesh)
 
     t_ints = np.arange(spec.n_rounds, dtype=np.int32)
     if eval_fn is not None and spec.n_rounds:
@@ -243,9 +275,11 @@ def run_lattice(
 
     multihost = mesh_spans_processes(mesh)
     if mesh is not None:
-        # pad the cell axis to a multiple of the mesh size with dead cells
-        # (repeats of the last real cell — same shapes, outputs discarded)
-        n_shards = int(np.asarray(mesh.devices).size)
+        # pad the cell axis to a multiple of the CELLS-axis size with dead
+        # cells (repeats of the last real cell — same shapes, outputs
+        # discarded). On a 1-D mesh that is the device count; on a 2-D
+        # (cells, model) mesh only the first axis shards cells.
+        n_shards = int(mesh.shape[mesh.axis_names[0]])
         pad = (-n_real) % n_shards
         if pad:
             cells = [np.concatenate([c, np.repeat(c[-1:], pad)]) for c in cells]
@@ -259,6 +293,20 @@ def run_lattice(
         else:
             def place(c):
                 return jax.device_put(jnp.asarray(c), cell_sharding)
+
+        if "model" in mesh.axis_names and int(mesh.shape["model"]) > 1:
+            # model-sharded lattice: commit the initial params to their
+            # param_spec placement so the very first dispatch — not just the
+            # constrained carry — holds only D/|model| columns per device
+            from repro.launch.sharding import param_spec  # late: launch↔sim
+
+            def place_leaf(leaf):
+                sh = NamedSharding(mesh, param_spec(np.shape(leaf), mesh))
+                if multihost:
+                    return shard_to_global(leaf, sh)
+                return jax.device_put(jnp.asarray(leaf), sh)
+
+            params0 = jax.tree.map(place_leaf, params0)
     else:
         def place(c):
             return jnp.asarray(c)

@@ -157,6 +157,43 @@ def make_global_cell_mesh(n_devices: int | None = None) -> jax.sharding.Mesh:
     )
 
 
+def cell_model_mesh_over(
+    devices, cells: int | None, model: int, hint: str
+) -> jax.sharding.Mesh:
+    """Shared constructor behind the 2-D ``("cells", "model")`` meshes
+    (``sim.lattice.make_cell_model_mesh`` over local devices,
+    :func:`make_global_cell_model_mesh` over global ones): validate counts
+    and reshape the flat device list cells-major, so the first ``model``
+    devices form cell-shard 0 — under ``jax.distributed`` a cell's model
+    group stays within one process whenever ``model`` divides the per-process
+    device count. ``cells=None`` takes every full group of ``model``
+    devices."""
+    if model < 1:
+        raise ValueError(f"model axis must be >= 1, got {model}")
+    if cells is None:
+        cells = len(devices) // model
+    n = cells * model
+    if not (1 <= cells and 1 <= n <= len(devices)):
+        raise ValueError(
+            f"mesh wants {cells}x{model} = {n} devices but only "
+            f"{len(devices)} are visible {hint}"
+        )
+    return jax.sharding.Mesh(
+        np.asarray(devices[:n]).reshape(cells, model), ("cells", "model")
+    )
+
+
+def make_global_cell_model_mesh(
+    cells: int | None = None, model: int = 1
+) -> jax.sharding.Mesh:
+    """A 2-D ``("cells", "model")`` mesh over the GLOBAL device list — the
+    process-spanning counterpart of ``sim.lattice.make_cell_model_mesh``."""
+    return cell_model_mesh_over(
+        jax.devices(), cells, model,
+        hint=f"across {jax.process_count()} process(es)",
+    )
+
+
 def mesh_process_span(mesh) -> tuple[int, ...]:
     """Sorted process indices whose devices participate in ``mesh``."""
     return tuple(sorted({d.process_index for d in np.ravel(np.asarray(mesh.devices))}))

@@ -30,8 +30,22 @@ def test_mesh_exceeding_local_devices_is_hard_error(capsys):
     n_local = len(jax.devices())
     assert _error_code(["--mesh", str(n_local + 1)]) == 2
     err = capsys.readouterr().err
-    assert f"--mesh {n_local + 1} exceeds the {n_local}" in err
+    assert f"needs {n_local + 1} devices but only {n_local}" in err
     assert "xla_force_host_platform_device_count" in err
+
+
+def test_mesh_2d_syntax_guards(capsys):
+    n_local = len(jax.devices())
+    # CxM needing more devices than visible: same hard error
+    assert _error_code(["--mesh", f"{n_local + 1}x1"]) == 2
+    assert "xla_force_host_platform_device_count" in capsys.readouterr().err
+    # malformed CxM strings are parser errors, not tracebacks
+    assert _error_code(["--mesh", "4x"]) == 2
+    assert _error_code(["--mesh", "ax2"]) == 2
+    assert _error_code(["--mesh", "4x0"]) == 2
+    # model sharding is single-host only
+    assert _error_code(["--hosts", "2", "--mesh", "4x2"]) == 2
+    assert "single-host" in capsys.readouterr().err
 
 
 def test_mesh_within_local_devices_passes_guard(monkeypatch):

@@ -7,7 +7,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.aircomp import aircomp_fused, aircomp_fused_ref
+from repro.kernels.aircomp import (
+    aircomp_fused,
+    aircomp_fused_batch,
+    aircomp_fused_batch_ref,
+    aircomp_fused_ref,
+)
+from repro.kernels.aircomp.kernel import DEFAULT_TILE_D, _clamp_tile
 from repro.kernels.attention import flash_attention, mha_ref
 from repro.kernels.ssd import ssd_chunked_ref, ssd_naive, ssd_pallas
 
@@ -38,6 +44,63 @@ def test_aircomp_fused_matches_ref(n, d, dtype):
     np.testing.assert_allclose(
         np.asarray(got, np.float32), np.asarray(want), rtol=tol, atol=tol
     )
+
+
+# D values off the tile grid: not multiples of tile_d, including D < tile_d
+# (a model-mesh shard's local block) where the tile must CLAMP to the
+# 128-lane-aligned D instead of padding a near-empty DEFAULT_TILE_D grid
+_ODD_DIMS = (64, 100, 128, 300, 512 + 1, 981, 2 * 512 + 17)
+
+
+@pytest.mark.parametrize("d", _ODD_DIMS)
+def test_aircomp_fused_padding_property(d):
+    key = jax.random.PRNGKey(d)
+    ks = jax.random.split(key, 4)
+    n = 6
+    g = jax.random.normal(ks[0], (n, d))
+    coeff = jax.random.uniform(ks[1], (n,)) * (
+        jax.random.uniform(ks[2], (n,)) > 0.3
+    )
+    z = jax.random.normal(ks[3], (d,))
+    m_g, v_g, a = jnp.float32(0.21), jnp.float32(0.9), jnp.float32(1.7)
+
+    got = aircomp_fused(g, coeff, m_g, v_g, a, z, interpret=True)
+    want = aircomp_fused_ref(g, coeff, m_g, v_g, a, z)
+    assert got.shape == (d,)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("d", _ODD_DIMS)
+def test_aircomp_fused_batch_padding_property(d):
+    key = jax.random.PRNGKey(1000 + d)
+    ks = jax.random.split(key, 6)
+    bt, n = 3, 5
+    g = jax.random.normal(ks[0], (bt, n, d))
+    coeff = jax.random.uniform(ks[1], (bt, n)) * (
+        jax.random.uniform(ks[2], (bt, n)) > 0.3
+    )
+    z = jax.random.normal(ks[3], (bt, d))
+    m_g = jax.random.normal(ks[4], (bt,)) * 0.1
+    v_g = jax.random.uniform(ks[5], (bt,)) + 0.5
+    a = jnp.full((bt,), 2.0)
+
+    got = aircomp_fused_batch(g, coeff, m_g, v_g, a, z, interpret=True)
+    want = aircomp_fused_batch_ref(g, coeff, m_g, v_g, a, z)
+    assert got.shape == (bt, d)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_clamp_tile_rule():
+    # oversized default tile clamps to the 128-lane-aligned D...
+    assert _clamp_tile(100, DEFAULT_TILE_D) == 128
+    assert _clamp_tile(128, DEFAULT_TILE_D) == 128
+    assert _clamp_tile(300, DEFAULT_TILE_D) == 384
+    # ...never past D's own tile when D is large...
+    assert _clamp_tile(7850, DEFAULT_TILE_D) == DEFAULT_TILE_D
+    assert _clamp_tile(DEFAULT_TILE_D, DEFAULT_TILE_D) == DEFAULT_TILE_D
+    # ...and a caller-requested SMALL tile passes through untouched
+    assert _clamp_tile(512, 8) == 8
+    assert _clamp_tile(4, 8) == 8
 
 
 def test_aircomp_fused_zero_noise_is_weighted_sum():

@@ -1,0 +1,250 @@
+"""2-D (cells × model) mesh parity/property suite (ISSUE 7 tentpole pins).
+
+Contracts pinned here:
+
+  * a ``(C, 1)`` 2-D mesh is BIT-IDENTICAL to the existing 1-D
+    ``P("cells")`` path — the model axis at size 1 must not perturb the
+    traced program (``ModelShard`` only engages at |model| > 1);
+  * a 4×2 mesh on 8 fake CPU devices matches the unsharded run with
+    ``n_scheduled``/``loss``/``acc`` exactly equal and the float error
+    channels (``e_com``/``e_var``/``grad_norm``) within float32 reduction
+    tolerance — measured ~6e-7 max rel; the psum'd Eq. 5 statistics cross
+    program shapes, so ≤1-ULP-per-reduction drift is expected and pinned
+    at rtol 1e-5.  Both the ``jnp`` and ``pallas_fused`` (interpret)
+    backends are covered;
+  * repeat 2-D sweeps re-trace ZERO times and the fused sweep compiles
+    exactly ONE program (``n_compiles == 1``);
+  * engine-cache keys distinguish 2-D-meshed engines from 1-D and
+    unmeshed ones.
+
+The multi-device legs run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the dedicated CI
+job) and skip when fewer devices are visible.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import POFLConfig
+from repro.data import make_classification_dataset, partition_noniid_shards
+from repro.sim import (
+    FUSED_POLICY,
+    LatticeRecords,
+    LatticeSpec,
+    cached_engine,
+    make_cell_mesh,
+    make_cell_model_mesh,
+    run_lattice,
+)
+
+N_VISIBLE = len(jax.devices())
+needs_8_devices = pytest.mark.skipif(
+    N_VISIBLE < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8",
+)
+
+_RECORD_FIELDS = ("e_com", "e_var", "grad_norm", "n_scheduled", "loss", "acc")
+# fields that must stay EXACT across sharding (integers / argmax decisions)
+_EXACT_FIELDS = ("n_scheduled", "loss", "acc")
+# float channels whose reductions cross program shapes under model sharding
+_FLOAT_FIELDS = ("e_com", "e_var", "grad_norm")
+
+
+def _loss_fn(params, x, y):
+    logits = x @ params["w"] + params["b"]
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    key = jax.random.PRNGKey(0)
+    x, y = make_classification_dataset("mnist_like", 640, key)
+    data = partition_noniid_shards(x, y, n_devices=8)
+    params0 = {"w": jnp.zeros((784, 10)), "b": jnp.zeros((10,))}
+
+    def ev(p):
+        logits = x[:200] @ p["w"] + p["b"]
+        return _loss_fn(p, x[:200], y[:200]), jnp.mean(
+            jnp.argmax(logits, -1) == y[:200]
+        )
+
+    return data, params0, ev
+
+
+def _assert_records_equal(a: LatticeRecords, b: LatticeRecords):
+    """Dtype-exact equality of the full structured output, order included."""
+    assert a.axes == b.axes
+    np.testing.assert_array_equal(a.eval_rounds, b.eval_rounds)
+    for f in _RECORD_FIELDS:
+        fa, fb = getattr(a, f), getattr(b, f)
+        assert fa.shape == fb.shape, f
+        assert fa.dtype == fb.dtype, f
+        np.testing.assert_array_equal(fa, fb, err_msg=f)
+
+
+def _assert_records_close(a: LatticeRecords, b: LatticeRecords, rtol=1e-5):
+    """Model-sharded parity: decisions exact, float channels within
+    float32 cross-shape-reduction tolerance (measured ~6e-7 max rel)."""
+    assert a.axes == b.axes
+    np.testing.assert_array_equal(a.eval_rounds, b.eval_rounds)
+    for f in _EXACT_FIELDS:
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f), err_msg=f)
+    for f in _FLOAT_FIELDS:
+        np.testing.assert_allclose(
+            getattr(a, f), getattr(b, f), rtol=rtol, atol=1e-12, err_msg=f
+        )
+
+
+def _sweep(setup, mesh, spec=None, **cfg_kw):
+    data, params0, ev = setup
+    spec = spec or LatticeSpec(
+        policies=("pofl", "channel"),
+        noise_powers=(1e-11, 1e-9),
+        seeds=(0, 1000),
+        n_rounds=4,
+        eval_every=2,
+    )
+    cfg = POFLConfig(n_devices=8, n_scheduled=3, **cfg_kw)
+    return run_lattice(
+        _loss_fn, data, params0, spec, base_cfg=cfg, eval_fn=ev, mesh=mesh
+    )
+
+
+# --------------------------------------------------------------------------
+# mesh constructor contract
+# --------------------------------------------------------------------------
+
+
+def test_make_cell_model_mesh_shapes_and_validation():
+    m = make_cell_model_mesh(1, 1)
+    assert m.axis_names == ("cells", "model")
+    assert dict(m.shape) == {"cells": 1, "model": 1}
+    with pytest.raises(ValueError, match="model"):
+        make_cell_model_mesh(1, 0)
+    with pytest.raises(ValueError, match="devices"):
+        make_cell_model_mesh(N_VISIBLE + 1, 1)
+    if N_VISIBLE >= 2:
+        m = make_cell_model_mesh(None, 2)  # cells inferred from devices
+        assert dict(m.shape)["model"] == 2
+        assert dict(m.shape)["cells"] == N_VISIBLE // 2
+
+
+def test_run_lattice_tuple_shorthand(setup):
+    """``mesh=(C, M)`` is sugar for ``mesh=make_cell_model_mesh(C, M)``."""
+    spec = LatticeSpec(policies=("pofl",), seeds=(0, 1), n_rounds=3)
+    by_tuple = _sweep(setup, mesh=(1, 1), spec=spec)
+    by_mesh = _sweep(setup, mesh=make_cell_model_mesh(1, 1), spec=spec)
+    _assert_records_equal(by_tuple, by_mesh)
+
+
+# --------------------------------------------------------------------------
+# (C, 1) degenerate model axis: bit-identical to the 1-D path
+# --------------------------------------------------------------------------
+
+
+def test_c_by_1_mesh_bit_identical_to_1d(setup):
+    """Acceptance pin: a (C,1) 2-D mesh traces the SAME program as the 1-D
+    P("cells") mesh — records bit-identical."""
+    c = min(8, N_VISIBLE)
+    one_d = _sweep(setup, mesh=make_cell_mesh(c))
+    two_d = _sweep(setup, mesh=make_cell_model_mesh(c, 1))
+    _assert_records_equal(one_d, two_d)
+
+
+# --------------------------------------------------------------------------
+# engine-cache keying
+# --------------------------------------------------------------------------
+
+
+def test_cache_keys_distinguish_2d_meshes(setup):
+    data, _, _ = setup
+    cfg = POFLConfig(n_devices=8, n_scheduled=3)
+    plain = cached_engine(_loss_fn, data, cfg)
+    one_d = cached_engine(_loss_fn, data, cfg, mesh=make_cell_mesh(1))
+    c1 = cached_engine(_loss_fn, data, cfg, mesh=make_cell_model_mesh(1, 1))
+    assert c1 is not plain and c1 is not one_d
+    # a fresh equal 2-D mesh resolves to the SAME engine
+    assert (
+        cached_engine(_loss_fn, data, cfg, mesh=make_cell_model_mesh(1, 1))
+        is c1
+    )
+    if N_VISIBLE >= 2:
+        m12 = cached_engine(
+            _loss_fn, data, cfg, mesh=make_cell_model_mesh(1, 2)
+        )
+        assert m12 is not c1
+
+
+# --------------------------------------------------------------------------
+# model-sharded semantics on 8 fake devices (4 cells × 2 model shards)
+# --------------------------------------------------------------------------
+
+
+@needs_8_devices
+@pytest.mark.parametrize("backend", ["jnp", "pallas_fused"])
+def test_4x2_mesh_matches_unsharded(setup, backend, monkeypatch):
+    """Acceptance pin: the 4×2 model-sharded run matches the unsharded run —
+    decisions exact, float error channels within reduction tolerance — for
+    BOTH aggregation backends (pallas in interpret mode on CPU)."""
+    if backend == "pallas_fused":
+        monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    unsharded = _sweep(setup, mesh=None, backend=backend)
+    sharded = _sweep(setup, mesh=make_cell_model_mesh(4, 2), backend=backend)
+    _assert_records_close(unsharded, sharded)
+
+
+@needs_8_devices
+def test_4x2_vs_8x1_equivalent(setup):
+    """Sharding the model axis instead of more cells changes placement, not
+    semantics: 4×2 matches 8×1 within the same reduction tolerance."""
+    wide = _sweep(setup, mesh=make_cell_model_mesh(8, 1))
+    deep = _sweep(setup, mesh=make_cell_model_mesh(4, 2))
+    _assert_records_close(wide, deep)
+
+
+@needs_8_devices
+def test_repeat_4x2_sweep_zero_retraces_one_compile(setup):
+    """Acceptance pin: repeat 2-D sweeps re-trace zero; the fused sweep
+    compiled exactly one lattice program."""
+    data, params0, ev = setup
+    mesh = make_cell_model_mesh(4, 2)
+    spec = LatticeSpec(policies=("pofl", "channel"), seeds=(0, 1), n_rounds=3)
+    cfg = POFLConfig(n_devices=8, n_scheduled=3)
+
+    first = run_lattice(
+        _loss_fn, data, params0, spec, base_cfg=cfg, eval_fn=ev, mesh=mesh
+    )
+    engine = cached_engine(
+        _loss_fn, data, dataclasses.replace(cfg, policy=FUSED_POLICY),
+        eval_fn=ev, mesh=mesh,
+    )
+    traces, compiles = engine.n_lattice_traces, engine.n_compiles
+    assert compiles == 1  # ONE policy-fused program for the whole sweep
+
+    second = run_lattice(
+        _loss_fn, data, params0, spec, base_cfg=cfg, eval_fn=ev, mesh=mesh
+    )
+    assert engine.n_lattice_traces == traces  # ZERO retraces
+    assert engine.n_compiles == compiles  # ZERO recompiles
+    _assert_records_equal(first, second)
+
+
+@needs_8_devices
+def test_4x2_memory_stats_report_2d_shape(setup):
+    """lattice_memory_stats() reflects the live 2-D engine: mesh_shape
+    (4, 2) and a positive per-device HBM figure."""
+    from repro.sim import lattice_memory_stats, reset_engine_cache
+
+    reset_engine_cache()  # make the 4x2 engine the only live one
+    _sweep(setup, mesh=make_cell_model_mesh(4, 2))
+    stats = lattice_memory_stats()
+    assert stats is not None
+    assert tuple(stats["mesh_shape"]) == (4, 2)
+    assert stats["per_device_hbm_bytes"] > 0
