@@ -96,12 +96,18 @@ def sweep_lattice(
     seed: int = 0,
     backend: str = "jnp",
     mesh=None,
+    algorithms=("fedavg",),
+    local_steps: int = 1,
 ) -> LatticeRecords:
-    """Run a full (policies × noise_powers × alphas × trials) lattice.
+    """Run a full (algorithms × policies × noise_powers × alphas × trials)
+    lattice.
 
     ``mesh`` (a ``jax.sharding.Mesh``, a device count, or None) shards the
     flattened cell axis — see ``repro.sim.lattice.run_lattice``. Results are
-    identical to the unsharded run; only placement changes.
+    identical to the unsharded run; only placement changes. ``algorithms``
+    (``repro.core.local_update.ALGORITHMS`` names) and ``local_steps`` select
+    the local-update axis; the defaults keep the historical single-gradient
+    fedavg round bit-identically.
     """
     spec = LatticeSpec(
         policies=tuple(policies),
@@ -110,12 +116,14 @@ def sweep_lattice(
         seeds=tuple(seed + 1000 * t for t in range(n_trials)),
         n_rounds=n_rounds,
         eval_every=eval_every,
+        algorithms=tuple(algorithms),
     )
     base_cfg = POFLConfig(
         n_devices=task.data.n_devices,
         n_scheduled=n_scheduled,
         lr0=_default_lr0(task, lr0),
         backend=backend,
+        local_steps=local_steps,
     )
     return run_lattice(
         task.loss_fn, task.data, task.params0, spec,
@@ -128,7 +136,9 @@ def sweep_lattice(
 
 def policy_summary(recs: LatticeRecords, policy: str, noise_power, alpha) -> dict:
     c = recs.cell(policy=policy, noise_power=noise_power, alpha=alpha)
-    acc = c["acc"]  # (trials, evals)
+    # (A, trials, evals) — fold the algorithm axis into the trial axis (A == 1
+    # for the historical single-algorithm sweeps, a pure reshape)
+    acc = c["acc"].reshape(-1, c["acc"].shape[-1])
     return {
         "acc": acc,
         "final_acc": float(np.mean(acc[:, -1])),
@@ -152,15 +162,19 @@ def run_policies(
     seed: int = 0,
     backend: str = "jnp",
     mesh=None,
+    algorithms=("fedavg",),
+    local_steps: int = 1,
 ) -> dict:
-    """Returns {policy: {"acc": (trials, evals), "rounds": [...], ...}} —
-    same record layout as the historical run_pofl loop, computed on the
-    sim lattice (all trials of a policy batched into one program, cells
-    optionally sharded over ``mesh``)."""
+    """Returns {policy: {"acc": (algorithms·trials, evals), "rounds": [...],
+    ...}} — same record layout as the historical run_pofl loop, computed on
+    the sim lattice (all trials of a policy batched into one program, cells
+    optionally sharded over ``mesh``; a multi-name ``algorithms`` folds the
+    local-update axis into the same single compile)."""
     recs = sweep_lattice(
         task, policies=policies, noise_powers=(noise_power,), alphas=(alpha,),
         n_rounds=n_rounds, n_trials=n_trials, n_scheduled=n_scheduled,
         lr0=lr0, eval_every=eval_every, seed=seed, backend=backend, mesh=mesh,
+        algorithms=algorithms, local_steps=local_steps,
     )
     return {
         p: policy_summary(recs, p, noise_power, alpha) for p in policies
@@ -182,7 +196,8 @@ def bench_task(dim: int | None = None) -> Task:
 
 
 def bench_sweep(
-    backend: str = "jnp", mesh=None, n_rounds: int | None = None, task=None
+    backend: str = "jnp", mesh=None, n_rounds: int | None = None, task=None,
+    algorithms=("fedavg",), local_steps: int = 1,
 ):
     """Run the reduced benchmark sweep cold + warm → ``(results, timings, cells)``.
 
@@ -204,7 +219,10 @@ def bench_sweep(
     from repro.sim import lattice_compile_stats, reset_engine_cache
 
     task = task or bench_task()
-    kw = dict(BENCH_SWEEP_KW, policies=POLICIES, backend=backend)
+    kw = dict(
+        BENCH_SWEEP_KW, policies=POLICIES, backend=backend,
+        algorithms=tuple(algorithms), local_steps=local_steps,
+    )
     if n_rounds is not None:
         kw["n_rounds"] = n_rounds
     reset_engine_cache()  # scope compile stats (and cold-ness) to this sweep
@@ -215,7 +233,7 @@ def bench_sweep(
         "steady_seconds": steady,
         **lattice_compile_stats(),
     }
-    return out, timings, len(POLICIES) * kw["n_trials"]
+    return out, timings, len(kw["algorithms"]) * len(POLICIES) * kw["n_trials"]
 
 
 def run_policies_loop(
@@ -230,8 +248,11 @@ def run_policies_loop(
     eval_every: int = 5,
     seed: int = 0,
     backend: str = "jnp",
+    algorithms=("fedavg",),
+    local_steps: int = 1,
 ) -> dict:
-    """Historical harness: one ``run_pofl`` call per (policy × trial).
+    """Historical harness: one ``run_pofl`` call per (algorithm × policy ×
+    trial) — algorithms dispatch statically via ``cfg.local_algorithm``.
 
     Kept as the reference implementation and as the baseline the lattice's
     speedup is measured against (benchmarks/run.py → BENCH_sim.json). Since
@@ -243,28 +264,32 @@ def run_policies_loop(
     for policy in policies:
         accs, e_coms, e_vars = [], [], []
         rounds = None
-        for trial in range(n_trials):
-            cfg = POFLConfig(
-                n_devices=task.data.n_devices,
-                n_scheduled=n_scheduled,
-                alpha=alpha,
-                policy=policy,
-                noise_power=noise_power,
-                lr0=lr0,
-                seed=seed + 1000 * trial,
-                backend=backend,
-            )
-            _, hist = run_pofl(
-                task.loss_fn, task.params0, task.data, cfg, n_rounds,
-                eval_fn=task.eval_fn, eval_every=eval_every,
-                channel_cfg=ChannelConfig(
-                    n_devices=task.data.n_devices, noise_power=noise_power
-                ),
-            )
-            accs.append(hist.test_acc)
-            e_coms.append(np.mean(hist.e_com))
-            e_vars.append(np.mean(hist.e_var))
-            rounds = hist.test_round
+        # algorithm-major, matching policy_summary's (A, trials) fold order
+        for algorithm in algorithms:
+            for trial in range(n_trials):
+                cfg = POFLConfig(
+                    n_devices=task.data.n_devices,
+                    n_scheduled=n_scheduled,
+                    alpha=alpha,
+                    policy=policy,
+                    noise_power=noise_power,
+                    lr0=lr0,
+                    seed=seed + 1000 * trial,
+                    backend=backend,
+                    local_algorithm=algorithm,
+                    local_steps=local_steps,
+                )
+                _, hist = run_pofl(
+                    task.loss_fn, task.params0, task.data, cfg, n_rounds,
+                    eval_fn=task.eval_fn, eval_every=eval_every,
+                    channel_cfg=ChannelConfig(
+                        n_devices=task.data.n_devices, noise_power=noise_power
+                    ),
+                )
+                accs.append(hist.test_acc)
+                e_coms.append(np.mean(hist.e_com))
+                e_vars.append(np.mean(hist.e_var))
+                rounds = hist.test_round
         out[policy] = {
             "acc": np.asarray(accs),
             "final_acc": float(np.mean([a[-1] for a in accs])),

@@ -9,8 +9,18 @@ appended — stamped with the git SHA and a UTC timestamp — to
 overwrite (``python -m benchmarks.report`` renders it).
 
 ``BENCH_sim.json`` schema (one flat object):
-  cells, n_rounds, n_devices       — sweep size (cells = policies × trials)
+  cells, n_rounds, n_devices       — sweep size (cells = algorithms ×
+                                     policies × trials)
   backend                          — aggregation backend ("jnp"/"pallas_fused")
+  algorithms                       — local-update algorithms the lattice
+                                     swept (``core.local_update.ALGORITHMS``
+                                     names; ["fedavg"] = the historical
+                                     single-algorithm bench); >1 name folds
+                                     the traced algorithm axis into the same
+                                     single compile (--algorithms a,b)
+  local_steps                      — local SGD steps per device per round
+                                     (1 = the historical single-gradient
+                                     round; --local-steps K)
   mesh_devices                     — devices the cell axis was sharded over
                                      (1 = unsharded run; with --hosts N this
                                      is the GLOBAL process-spanning count)
@@ -192,6 +202,8 @@ def _bench_sim(
     n_hosts: int = 1,
     model_shards: int = 1,
     dim: int = 0,
+    algorithms: tuple = ("fedavg",),
+    local_steps: int = 1,
 ):
     """Reduced fig4-style sweep (5 policies × 3 trials) through sim.lattice
     vs the cached-engine one-run_pofl-per-cell loop → BENCH_sim.json.
@@ -265,7 +277,10 @@ def _bench_sim(
             mesh = None
             mesh_shape = "1x1"
         n_mesh = 1 if mesh is None else mesh_devices
-        _, timings, cells = bench_sweep(backend=backend, mesh=mesh, task=task)
+        _, timings, cells = bench_sweep(
+            backend=backend, mesh=mesh, task=task,
+            algorithms=algorithms, local_steps=local_steps,
+        )
         lattice_cache = engine_cache_stats()
         # capture the per-device HBM footprint BEFORE the cache reset below
         # evicts the engines holding the compiled executables
@@ -273,7 +288,12 @@ def _bench_sim(
     t_cold = timings["cold_seconds"]
     t_steady = timings["steady_seconds"]
     reset_engine_cache()
-    kw = dict(BENCH_SWEEP_KW, policies=POLICIES, backend=backend)
+    # the loop baseline runs the IDENTICAL workload (same algorithms ×
+    # policies × trials grid, same local_steps) so `speedup` stays honest
+    kw = dict(
+        BENCH_SWEEP_KW, policies=POLICIES, backend=backend,
+        algorithms=algorithms, local_steps=local_steps,
+    )
     _, t_loop = timed(run_policies_loop, task, **kw)
 
     payload = {
@@ -281,6 +301,8 @@ def _bench_sim(
         "n_rounds": n_rounds,
         "n_devices": 20,
         "backend": backend,
+        "algorithms": list(algorithms),
+        "local_steps": local_steps,
         "mesh_devices": n_mesh,
         "mesh_shape": mesh_shape,
         "per_device_hbm_bytes": int(mem_stats["per_device_hbm_bytes"]),
@@ -331,6 +353,18 @@ def main(argv: list[str] | None = None) -> None:
         "only)",
     )
     parser.add_argument(
+        "--algorithms", type=str, default="fedavg", metavar="A[,B...]",
+        help="comma-separated local-update algorithms for the sim-lattice "
+        "bench (repro.core.local_update.ALGORITHMS names; >1 name sweeps "
+        "the traced algorithm axis inside the same single compile); "
+        "unknown or empty names are a hard error",
+    )
+    parser.add_argument(
+        "--local-steps", type=int, default=1, metavar="K",
+        help="local SGD steps per device per round for the sim-lattice "
+        "bench (1 = the historical single-gradient round)",
+    )
+    parser.add_argument(
         "--dim", type=int, default=0, metavar="D",
         help="override the bench task's feature dimension (0 = the default "
         "784-dim task; the flat model dimension lands in BENCH_sim.json "
@@ -354,6 +388,22 @@ def main(argv: list[str] | None = None) -> None:
     # every other benchmark silently proceeds without BENCH_sim.json
     if args.hosts < 1:
         parser.error(f"--hosts must be >= 1 (got {args.hosts})")
+    # validate the algorithm axis UP FRONT too: a malformed --algorithms is a
+    # hard parser error (exit 2), never a mid-run CSV ERROR line
+    from repro.core.local_update import ALGORITHMS
+
+    algorithms = tuple(s.strip() for s in args.algorithms.split(","))
+    if not algorithms or any(not a for a in algorithms):
+        parser.error(f"--algorithms must be a,b,... names (got {args.algorithms!r})")
+    for a in algorithms:
+        if a not in ALGORITHMS:
+            parser.error(
+                f"--algorithms: unknown algorithm {a!r}; choose from {ALGORITHMS}"
+            )
+    if args.local_steps < 1:
+        parser.error(f"--local-steps must be >= 1 (got {args.local_steps})")
+    if args.hosts > 1 and (algorithms != ("fedavg",) or args.local_steps != 1):
+        parser.error("--algorithms/--local-steps are single-host only")
     try:
         if "x" in args.mesh:
             cells_s, model_s = args.mesh.split("x")
@@ -402,6 +452,7 @@ def main(argv: list[str] | None = None) -> None:
         lambda: _bench_sim(
             backend=args.backend, mesh_devices=mesh_total,
             n_hosts=args.hosts, model_shards=model_shards, dim=args.dim,
+            algorithms=algorithms, local_steps=args.local_steps,
         ),
         lambda d: (
             "steady_cells/s=%.2f cold_cells/s=%.2f compile_s=%.1f "

@@ -12,6 +12,13 @@ temporally-correlated Gauss–Markov fading with random device dropout
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/sim_lattice.py --mesh 8
 
+``--algorithms a,b`` (``repro.core.local_update.ALGORITHMS`` names) adds a
+traced local-update algorithm axis — still the same single compile — and
+``--local-steps K`` runs K local SGD steps per device per round:
+
+    PYTHONPATH=src python examples/sim_lattice.py \
+        --algorithms fedavg,fedprox --local-steps 3
+
 ``--distributed`` initializes ``jax.distributed`` from the ``REPRO_DIST_*``
 env contract and shards the cell axis over the GLOBAL (process-spanning)
 device list — run it under the local launcher (2 hosts × 4 fake CPU devices
@@ -64,7 +71,19 @@ def main(argv=None):
         "--rounds", type=int, default=30, metavar="T",
         help="rounds per cell (shrink for smoke runs)",
     )
+    parser.add_argument(
+        "--algorithms", type=str, default="fedavg", metavar="A[,B...]",
+        help="comma-separated local-update algorithms "
+        "(repro.core.local_update.ALGORITHMS names); >1 name sweeps the "
+        "traced algorithm axis inside the same single compile",
+    )
+    parser.add_argument(
+        "--local-steps", type=int, default=1, metavar="K",
+        help="local SGD steps per device per round (1 = the classic "
+        "single-gradient round)",
+    )
     args = parser.parse_args(argv)
+    algorithms = tuple(s.strip() for s in args.algorithms.split(","))
 
     # REPRO_COMPILE_CACHE=<dir> persists the lattice's XLA compile across
     # runs (repro.sim.compile_cache); no-op when unset
@@ -94,10 +113,12 @@ def main(argv=None):
         seeds=(0, 1000, 2000, 3000),
         n_rounds=args.rounds,
         eval_every=10,
+        algorithms=algorithms,
     )
     records = run_lattice(
         small.logreg_loss, data, params0, spec,
-        base_cfg=POFLConfig(n_devices=20, n_scheduled=8, backend=args.backend),
+        base_cfg=POFLConfig(n_devices=20, n_scheduled=8, backend=args.backend,
+                            local_steps=args.local_steps),
         eval_fn=eval_fn,
         scenario="dropout",
         scenario_params={"base": "gauss_markov", "corr": 0.9, "p_drop": 0.1},

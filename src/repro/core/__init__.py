@@ -1,5 +1,12 @@
 """PO-FL core: channel model, AirComp signal chain, scheduling, simulator."""
 from repro.core.channel import ChannelConfig, ChannelState
+from repro.core.local_update import (
+    ALGORITHM_IDS,
+    ALGORITHMS,
+    AlgState,
+    algorithm_id,
+    local_update_stage,
+)
 from repro.core.numerics import EPS, eps_guard, safe_div
 from repro.core.pofl import (
     BACKENDS,
@@ -18,7 +25,10 @@ from repro.core.pofl import (
 from repro.core.scheduling import POLICIES, Schedule, scheduling_probs
 
 __all__ = [
+    "ALGORITHM_IDS",
+    "ALGORITHMS",
     "AggregationBackend",
+    "AlgState",
     "BACKENDS",
     "ChannelConfig",
     "ChannelState",
@@ -29,9 +39,11 @@ __all__ = [
     "POLICIES",
     "Schedule",
     "aggregation_stage",
+    "algorithm_id",
     "apply_update_stage",
     "eps_guard",
     "local_gradient_stage",
+    "local_update_stage",
     "make_round_step",
     "round_algorithm",
     "run_pofl",

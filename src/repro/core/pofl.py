@@ -12,8 +12,13 @@ devices). Every step of Algorithm 1 is implemented:
 
 The round body is an explicit **pipeline of composable stages**
 
-    local_gradient_stage → scheduling_stage → aggregation_stage → apply_update_stage
+    local_update_stage → scheduling_stage → aggregation_stage → apply_update_stage
 
+(``core.local_update``'s :func:`~repro.core.local_update.local_update_stage`
+generalizes the historical single-gradient ``local_gradient_stage`` —
+re-exported here unchanged — to ``cfg.local_steps`` local SGD steps under a
+``cfg.local_algorithm`` ∈ {fedavg, fedprox, feddyn, scaffold} branch table;
+the default ``fedavg``/``local_steps=1`` traces the EXACT legacy program)
 composed by :func:`round_algorithm` so that the legacy per-round jit
 (:func:`make_round_step`), the scanned simulation engine
 (``repro.sim.engine``) and the lattice all execute the *same* traced
@@ -51,6 +56,11 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import aircomp, scheduling
 from repro.core.channel import ChannelConfig, ChannelState
+from repro.core.local_update import (  # noqa: F401  (re-exported API)
+    AlgState,
+    local_gradient_stage,
+    local_update_stage,
+)
 from repro.core.metrics import RoundMetrics, diagnostics_taps
 from repro.core.numerics import safe_div
 
@@ -232,6 +242,14 @@ class POFLConfig:
     lr_min: float = 1e-5
     simulate_physical: bool = False  # full Eq.5→8 path vs Eq.16 (same in law)
     backend: str = "jnp"  # AggregationBackend of the aggregation stage
+    # -- local-update algorithm axis (core.local_update) ----------------
+    # The defaults are legacy-equivalent: fedavg at one local step traces
+    # the EXACT historical one-gradient round (bit-identical trajectories).
+    local_algorithm: str = "fedavg"  # ALGORITHMS name (or the lattice's sentinel)
+    local_steps: int = 1             # K local SGD steps per device per round
+    local_lr: float | None = None    # local step size η_l; None → cfg.lr(t)
+    fedprox_mu: float = 0.0          # FedProx proximal coefficient μ
+    feddyn_alpha: float = 0.1        # FedDyn dynamic-regularizer coefficient
     seed: int = 0
 
     def lr(self, t: jnp.ndarray) -> jnp.ndarray:
@@ -281,59 +299,12 @@ class History(NamedTuple):
     test_round: list
 
 
-def _device_gradients(loss_fn, params, feats, labels):
-    """vmap(jax.grad) over the device axis → stacked flat gradients (N, D)."""
-
-    def one(fx, fy):
-        g = jax.grad(loss_fn)(params, fx, fy)
-        flat, _ = ravel_pytree(g)
-        return flat
-
-    return jax.vmap(one)(feats, labels)
-
-
 # --------------------------------------------------------------------------
 # the round pipeline stages
 # --------------------------------------------------------------------------
-
-
-def local_gradient_stage(
-    loss_fn: Callable,
-    data: DeviceData,
-    cfg: POFLConfig,
-    params,
-    k_batch: jax.Array,
-) -> jnp.ndarray:
-    """Step 2: per-device mini-batch draw + vmapped grads → (N, D).
-
-    Equal shards keep the seed's exact ``randint`` draw (bit-identical
-    trajectories); heterogeneous shards draw uniformly over each device's
-    valid prefix so padded rows are never touched.
-    """
-    n = data.n_devices
-    m = data.samples_per_device
-    if data.n_samples is None:
-        idx = jax.random.randint(k_batch, (n, cfg.batch_size), 0, m)
-    else:
-        # n_samples is static partition metadata — reject empty devices at
-        # trace time (idx = min(·, -1) would wrap to the last PADDED row)
-        if (np.asarray(data.n_samples) < 1).any():
-            raise ValueError(
-                "every device needs n_samples >= 1; drop empty devices from "
-                "the partition instead"
-            )
-        ns = jnp.asarray(data.n_samples, jnp.int32)
-        u = jax.random.uniform(k_batch, (n, cfg.batch_size))
-        idx = jnp.minimum(
-            (u * ns[:, None].astype(u.dtype)).astype(jnp.int32), ns[:, None] - 1
-        )
-    feats = jnp.take_along_axis(
-        data.features,
-        idx.reshape((n, cfg.batch_size) + (1,) * (data.features.ndim - 2)),
-        axis=1,
-    )
-    labels = jnp.take_along_axis(data.labels, idx, axis=1)
-    return _device_gradients(loss_fn, params, feats, labels)
+# Step 2 — the local stage — lives in ``core.local_update``:
+# ``local_gradient_stage`` (the legacy single gradient, re-exported above)
+# and ``local_update_stage`` (multi-step deltas under the algorithm axis).
 
 
 def scheduling_stage(
@@ -540,8 +511,20 @@ def round_algorithm(
     policy_id: jnp.ndarray | None = None,
     diagnostics: bool = False,
     model_shard: ModelShard | None = None,
-) -> tuple[Any, RoundMetrics]:
+    alg_state: AlgState | None = None,
+    algorithm_id: jnp.ndarray | None = None,
+) -> tuple[Any, AlgState | None, RoundMetrics]:
     """Steps 2–6 of Algorithm 1 for one round, given this round's channel ``h``.
+
+    Returns ``(new_params, new_alg_state, metrics)``. ``alg_state`` is the
+    per-device local-algorithm state (:class:`~repro.core.local_update.AlgState`
+    in the engine's scan carry; ``None`` — the default and the only value the
+    legacy path ever passes — flattens to an empty subtree and is returned
+    unchanged). ``algorithm_id`` (traced int32, ``local_update.ALGORITHM_IDS``
+    order) switches the local stage to the fused ``lax.switch`` dispatch the
+    multi-algorithm lattice compiles; ``None`` keeps the static
+    ``cfg.local_algorithm`` string dispatch — and the default
+    ``fedavg``/``local_steps=1`` config traces the EXACT legacy program.
 
     Composes the four pipeline stages. ``noise_power`` / ``alpha`` default to
     the (static) config values but may be traced arrays — the simulation
@@ -584,8 +567,11 @@ def round_algorithm(
             policy_id == scheduling.NOISEFREE_ID, 0.0, noise_power
         )
 
-    # -- step 2: local mini-batch gradients ---------------------------
-    g = local_gradient_stage(loss_fn, data, cfg, params, k_batch)  # (N, D)
+    # -- step 2: local updates (K SGD steps per device → delta) -------
+    g, alg_state = local_update_stage(
+        loss_fn, data, cfg, params, k_batch, t,
+        alg_state=alg_state, algorithm_id=algorithm_id,
+    )  # (N, D) — the legacy single gradient when fedavg/local_steps=1
     dim = g.shape[-1]
 
     # -- step 3: uploaded scalar statistics ---------------------------
@@ -636,7 +622,7 @@ def round_algorithm(
         a_scalar=a,
         diag=diag,
     )
-    return new_params, metrics
+    return new_params, alg_state, metrics
 
 
 def make_round_step(
@@ -650,9 +636,10 @@ def make_round_step(
     def round_step(params, key, t):
         k_batch, k_chan, k_sched, k_noise = jax.random.split(key, 4)
         h = channel.sample(k_chan)
-        return round_algorithm(
+        new_params, _, m = round_algorithm(
             loss_fn, data, cfg, params, h, k_batch, k_sched, k_noise, t
         )
+        return new_params, m
 
     return jax.jit(round_step)
 

@@ -9,7 +9,8 @@ Three layers (see ROADMAP.md "sim" section):
   * :mod:`repro.sim.engine`   — the ``lax.scan``-over-rounds round engine
     with a donated carry; ``core.pofl.run_pofl`` is a wrapper over it.
   * :mod:`repro.sim.lattice`  — experiment-lattice specs
-    (policies × noise_powers × alphas × seeds [× n_devices]) compiled into
+    (algorithms × policies × noise_powers × alphas × seeds [× n_devices])
+    compiled into
     one vmapped+scanned program per (policy, shape) group, optionally
     sharded along the cell axis over a ``jax.sharding`` mesh
     (``run_lattice(..., mesh=...)`` / :func:`make_cell_mesh`).
@@ -24,6 +25,7 @@ from repro.sim.compile_cache import (
     persistent_cache_counters,
 )
 from repro.sim.engine import (
+    FUSED_ALGORITHM,
     FUSED_POLICY,
     SimEngine,
     SimState,
@@ -58,6 +60,7 @@ from repro.sim.scenario import (
 __all__ = [
     "CHANNEL_SCENARIOS",
     "DistributedConfig",
+    "FUSED_ALGORITHM",
     "FUSED_POLICY",
     "LatticeRecords",
     "LatticeSpec",

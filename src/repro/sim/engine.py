@@ -47,6 +47,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import local_update
 from repro.core.channel import ChannelConfig
 from repro.core.metrics import RoundDiagnostics
 from repro.core.pofl import (
@@ -68,13 +69,30 @@ _LATTICE_EXECUTABLES_MAX = 8
 # multi-policy lattice ONE cache entry (and one compile).
 FUSED_POLICY = "__fused__"
 
+# The cfg.local_algorithm sentinel of an ALGORITHM-FUSED engine
+# (``repro.sim.lattice`` with a multi-algorithm ``LatticeSpec``): the
+# algorithm is a traced per-cell input (``algorithm_id``), so the engine's
+# static algorithm string is deliberately not a real algorithm — it only
+# keys the engine cache, making the whole multi-algorithm lattice ONE cache
+# entry (and one compile). Same design as :data:`FUSED_POLICY`.
+FUSED_ALGORITHM = "__fused__"
+
 
 class SimState(NamedTuple):
-    """The donated scan carry: everything that evolves across rounds."""
+    """The donated scan carry: everything that evolves across rounds.
+
+    ``alg`` is the per-device local-algorithm state
+    (:class:`~repro.core.local_update.AlgState` — FedDyn h_i / SCAFFOLD c_i);
+    its default ``None`` flattens to an EMPTY pytree subtree, so stateless
+    algorithms (the legacy fedavg path included) keep the carry structure —
+    and every pinned trajectory — bit-identical to the pre-algorithm-axis
+    engine (the PR-6 ``diag=None`` trick).
+    """
 
     params: Any       # model pytree
     key: jax.Array    # PRNG chain
     chan: Any         # channel-process state pytree
+    alg: Any = None   # local-algorithm state (AlgState), or None (stateless)
 
 
 class RoundRecord(NamedTuple):
@@ -171,6 +189,11 @@ class SimEngine:
         )
         self.eval_fn = eval_fn
         self.mesh = mesh
+        # hard error on unknown algorithm names at engine construction (the
+        # FUSED_ALGORITHM sentinel is the lattice's cache-key marker: the
+        # per-cell traced algorithm_id does the real dispatch)
+        if cfg.local_algorithm != FUSED_ALGORITHM:
+            local_update.algorithm_id(cfg.local_algorithm)
         # A 2-D ("cells", "model") mesh with |model| > 1 switches the round
         # pipeline to the model-sharded hot path (core.pofl.ModelShard):
         # explicit shard_map blocks over the model axis, so — unlike the
@@ -220,6 +243,13 @@ class SimEngine:
                 **vmap_kw,
             )
         )
+        self._fused_alg_lattice_jit = jax.jit(
+            jax.vmap(
+                self._fused_alg_lattice_cell,
+                in_axes=(None, None, None, 0, 0, 0, 0, 0),
+                **vmap_kw,
+            )
+        )
         # AOT ``lower().compile()`` executable cache: arg signature →
         # compiled lattice program (see :meth:`_aot_lattice_executable`).
         # Bounded LRU, same rationale as PR 4's gather-jit cache: each entry
@@ -229,12 +259,34 @@ class SimEngine:
 
     # -- state construction -------------------------------------------------
 
-    def init(self, params0, seed) -> SimState:
-        """Initial carry. ``seed`` may be traced (lattice vmaps over it)."""
+    def init(self, params0, seed, fused_algorithms: bool = False) -> SimState:
+        """Initial carry. ``seed`` may be traced (lattice vmaps over it).
+
+        ``fused_algorithms=True`` (the traced-``algorithm_id`` lattice cell)
+        builds the FULL :class:`~repro.core.local_update.AlgState` — every
+        ``lax.switch`` branch is traced, so the carry must hold the union of
+        all algorithms' state. Otherwise the state follows the static
+        ``cfg.local_algorithm`` (``None`` — an empty subtree — for stateless
+        algorithms, keeping the legacy carry structure bitwise)."""
         key = jax.random.PRNGKey(seed)
         k_chan_init, key = jax.random.split(key)
         chan = self.process.init(k_chan_init)
-        return SimState(params=params0, key=key, chan=chan)
+        return SimState(
+            params=params0, key=key, chan=chan,
+            alg=self._init_alg_state(params0, fused_algorithms),
+        )
+
+    def _init_alg_state(self, params0, fused_algorithms: bool):
+        full = fused_algorithms or self.cfg.local_algorithm == FUSED_ALGORITHM
+        if not full and self.cfg.local_algorithm in local_update.STATELESS:
+            return None  # zero new leaves, zero new ops — the legacy carry
+        # static size only (no ravel ops enter the trace for the zeros init)
+        dim = sum(
+            int(np.prod(np.shape(leaf))) for leaf in jax.tree.leaves(params0)
+        )
+        return local_update.init_state(
+            self.cfg.local_algorithm, self.cfg.n_devices, dim, full=full
+        )
 
     # -- the scanned program ------------------------------------------------
 
@@ -247,6 +299,7 @@ class SimEngine:
         alpha=None,                # traced scalar or None → cfg.alpha
         active: jnp.ndarray | None = None,  # (T,) bool — mask padded rounds
         policy_id=None,            # traced int32 or None → cfg.policy string
+        algorithm_id=None,         # traced int32 or None → cfg.local_algorithm
     ) -> tuple[SimState, RoundRecord]:
         """Pure scan over rounds; vmap-safe (xs stay unbatched, so the eval
         ``lax.cond`` remains a genuine branch, not a select).
@@ -264,7 +317,7 @@ class SimEngine:
             key, k_round = jax.random.split(st.key)
             k_batch, k_chan, k_sched, k_noise = jax.random.split(k_round, 4)
             chan, h, avail = self.process.step(st.chan, k_chan)
-            params, m = round_algorithm(
+            params, alg, m = round_algorithm(
                 self.loss_fn, self.data, self.cfg, st.params, h,
                 k_batch, k_sched, k_noise, t,
                 noise_power=noise_power, alpha=alpha,
@@ -274,6 +327,8 @@ class SimEngine:
                 policy_id=policy_id,
                 diagnostics=self.obs.diagnostics,
                 model_shard=self._model_shard,
+                alg_state=st.alg,
+                algorithm_id=algorithm_id,
             )
             if self.eval_fn is None:
                 loss = acc = jnp.zeros(())
@@ -290,7 +345,7 @@ class SimEngine:
                 e_com=m.e_com, e_var=m.e_var, grad_norm=m.grad_norm,
                 n_scheduled=m.n_scheduled, loss=loss, acc=acc, diag=m.diag,
             )
-            return SimState(params=params, key=key, chan=chan), rec
+            return SimState(params=params, key=key, chan=chan, alg=alg), rec
 
         if active is None:
 
@@ -337,6 +392,19 @@ class SimEngine:
         )
         return recs
 
+    def _fused_alg_lattice_cell(
+        self, params0, t_ints, do_eval, noise_power, alpha, seed,
+        policy_id, algorithm_id,
+    ):
+        self.n_lattice_traces += 1  # Python body runs only when (re)tracing
+        counter_add("engine.lattice_traces")
+        state = self.init(params0, seed, fused_algorithms=True)
+        _, recs = self.scan_rounds(
+            state, t_ints, do_eval, noise_power=noise_power, alpha=alpha,
+            policy_id=policy_id, algorithm_id=algorithm_id,
+        )
+        return recs
+
     @staticmethod
     def _arg_signature(leaf) -> tuple:
         """Hashable AOT-dispatch identity of one lattice argument: shape,
@@ -355,8 +423,14 @@ class SimEngine:
             getattr(leaf, "sharding", None),
         )
 
-    def _aot_lattice_executable(self, fused: bool, args: tuple):
+    def _aot_lattice_executable(self, mode, args: tuple):
         """The compiled lattice program for ``args`` — AOT, cached, counted.
+
+        ``mode`` selects the jitted vmap program — ``False`` (plain cells),
+        ``True`` (policy-fused), ``"fused_alg"`` (policy+algorithm-fused) —
+        and leads the executable key. The mode values are APPEND-ONLY (like
+        the signature tuple itself): the historical ``False``/``True``
+        entries keep their exact keys, new program families add new values.
 
         First call for an argument signature pays ``jit.lower(...).compile()``
         ONCE (wall time accumulated in ``compile_seconds``, count in
@@ -372,14 +446,18 @@ class SimEngine:
         # executables of a shared-signature argset must still never alias
         # across mesh shapes if an engine is ever built bypassing the cache
         key = (
-            fused, treedef, tuple(self._arg_signature(l) for l in leaves),
+            mode, treedef, tuple(self._arg_signature(l) for l in leaves),
             _mesh_key(self.mesh),
         )
         compiled = self._lattice_executables.get(key)
         if compiled is None:
-            fn = self._fused_lattice_jit if fused else self._lattice_jit
+            fn = {
+                False: self._lattice_jit,
+                True: self._fused_lattice_jit,
+                "fused_alg": self._fused_alg_lattice_jit,
+            }[mode]
             t0 = time.perf_counter()
-            with span("lattice.compile", fused=fused):
+            with span("lattice.compile", fused=bool(mode)):
                 compiled = fn.lower(*args).compile()
             dt = time.perf_counter() - t0
             self.compile_seconds += dt
@@ -395,7 +473,7 @@ class SimEngine:
 
     def run_lattice_cells(
         self, params0, t_ints, do_eval, noise_b, alpha_b, seed_b,
-        policy_b=None,
+        policy_b=None, algorithm_b=None,
     ) -> RoundRecord:
         """One compiled (vmap-over-cells ∘ scan-over-rounds) dispatch.
 
@@ -406,7 +484,11 @@ class SimEngine:
         needs no sharded/unsharded code split. ``policy_b`` (flattened (B,)
         int32 ``scheduling.POLICY_IDS``) switches to the POLICY-FUSED
         program: the policy becomes one more vmapped cell axis, so a whole
-        multi-policy lattice is ONE compile. Dispatch is AOT
+        multi-policy lattice is ONE compile. ``algorithm_b`` (flattened (B,)
+        int32 ``local_update.ALGORITHM_IDS``, requires ``policy_b``) switches
+        further to the policy+ALGORITHM-fused program — the local-update
+        algorithm joins the vmapped cell axes, so a whole (algorithm × policy
+        × noise × α × seed) lattice is still ONE compile. Dispatch is AOT
         (``lower().compile()`` on first signature, cached executable after),
         so repeat calls through :func:`cached_engine` re-trace zero times
         (``n_lattice_traces`` stays flat) and recompile zero times
@@ -417,10 +499,21 @@ class SimEngine:
             jnp.asarray(t_ints), jnp.asarray(do_eval),
             noise_b, alpha_b, seed_b,
         )
-        fused = policy_b is not None
-        if fused:
+        if algorithm_b is not None:
+            if policy_b is None:
+                raise ValueError(
+                    "algorithm_b requires policy_b: the algorithm-fused "
+                    "program fuses the policy axis too (constant policy_b "
+                    "is fine)"
+                )
+            mode = "fused_alg"
+            args = args + (policy_b, algorithm_b)
+        elif policy_b is not None:
+            mode = True
             args = args + (policy_b,)
-        compiled = self._aot_lattice_executable(fused, args)
+        else:
+            mode = False
+        compiled = self._aot_lattice_executable(mode, args)
         n_cells = int(np.shape(seed_b)[0]) if np.ndim(seed_b) else 1
         # the dispatch span measures HOST dispatch wall only (jax dispatch is
         # async — device execution completes under the caller's
@@ -428,7 +521,7 @@ class SimEngine:
         # Under REPRO_OBS_PROFILE the dispatch blocks inside the profiler
         # context so the capture contains the device execution too.
         with maybe_profile("lattice"), span(
-            "lattice.dispatch", fused=fused, cells=n_cells
+            "lattice.dispatch", fused=bool(mode), cells=n_cells
         ):
             out = compiled(*args)
             if profiling_enabled():

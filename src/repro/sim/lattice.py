@@ -2,15 +2,22 @@
 
 A :class:`LatticeSpec` names the sweep axes
 
-    policies × noise_powers × alphas × seeds        (× n_rounds scanned)
+    algorithms × policies × noise_powers × alphas × seeds   (× n_rounds scanned)
 
 and :func:`run_lattice` compiles the ENTIRE lattice into a single program:
-``vmap`` over the flattened (policy, noise, alpha, seed) grid of the
-engine's ``lax.scan`` over rounds. The policy axis is *traced* — each cell
-carries an int32 ``policy_id`` dispatched by ``lax.switch``
+``vmap`` over the flattened (algorithm, policy, noise, alpha, seed) grid of
+the engine's ``lax.scan`` over rounds. The policy axis is *traced* — each
+cell carries an int32 ``policy_id`` dispatched by ``lax.switch``
 (``core.scheduling.scheduling_probs_by_id``), so a 5-policy sweep pays ONE
 trace and ONE XLA compile instead of five (the engine cache likewise holds
-one entry per lattice, keyed by the ``FUSED_POLICY`` sentinel).
+one entry per lattice, keyed by the ``FUSED_POLICY`` sentinel). The
+local-update algorithm axis is traced the same way — a multi-algorithm
+``spec.algorithms`` gives every cell an int32 ``algorithm_id`` dispatched
+through ``core.local_update``'s append-only branch table (engine cache
+keyed by the ``FUSED_ALGORITHM`` sentinel), so (algorithm × policy × noise
+× α × seed) is STILL one trace and one compile; a single-algorithm spec
+(the default ``("fedavg",)``) keeps the historical static dispatch and
+traces today's exact program.
 ``fuse_policies=False`` keeps the per-policy Python loop (one compile per
 policy, each over the same traced-dispatch cell program with a constant
 ``policy_id``) — pinned bit-identical to the fused path by
@@ -63,13 +70,13 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec
 
-from repro.core import scheduling
+from repro.core import local_update, scheduling
 from repro.core.channel import ChannelConfig
 from repro.core.pofl import DeviceData, POFLConfig
 from repro.obs.config import ObsConfig
 from repro.obs.sink import emit
 from repro.obs.spans import span
-from repro.sim.engine import FUSED_POLICY, cached_engine
+from repro.sim.engine import FUSED_ALGORITHM, FUSED_POLICY, cached_engine
 from repro.sim.multihost import (
     cell_model_mesh_over,
     cells_mesh_over,
@@ -134,11 +141,16 @@ class LatticeSpec:
     seeds: tuple[int, ...] = (0,)
     n_rounds: int = 100
     eval_every: int = 5
+    # local-update algorithms (core.local_update.ALGORITHMS names); the
+    # default single-algorithm tuple keeps the historical static dispatch —
+    # ≥2 names trace an int32 algorithm_id axis into the same fused program
+    algorithms: tuple[str, ...] = ("fedavg",)
 
     @property
     def n_cells(self) -> int:
         return (
-            len(self.policies)
+            len(self.algorithms)
+            * len(self.policies)
             * len(self.noise_powers)
             * len(self.alphas)
             * len(self.seeds)
@@ -146,28 +158,31 @@ class LatticeSpec:
 
 
 class LatticeRecords(NamedTuple):
-    """Structured per-cell records, axes (policy, noise, alpha, seed, ...).
+    """Structured per-cell records, axes (algorithm, policy, noise, alpha,
+    seed, ...).
 
-    ``loss``/``acc`` are sub-sampled at ``eval_rounds`` (empty E axis when
-    the lattice ran without an eval_fn).
+    The algorithm axis LEADS and is always present (size 1 for the default
+    single-algorithm spec — legacy ``[p, n, a, s]`` indexing broadcasts
+    unchanged). ``loss``/``acc`` are sub-sampled at ``eval_rounds`` (empty E
+    axis when the lattice ran without an eval_fn).
     """
 
     axes: dict            # axis name -> coordinate list
-    e_com: np.ndarray     # (P, Nn, Na, Ns, T)
-    e_var: np.ndarray     # (P, Nn, Na, Ns, T)
-    grad_norm: np.ndarray # (P, Nn, Na, Ns, T)
-    n_scheduled: np.ndarray  # (P, Nn, Na, Ns, T)
-    loss: np.ndarray      # (P, Nn, Na, Ns, E)
-    acc: np.ndarray       # (P, Nn, Na, Ns, E)
+    e_com: np.ndarray     # (A, P, Nn, Na, Ns, T)
+    e_var: np.ndarray     # (A, P, Nn, Na, Ns, T)
+    grad_norm: np.ndarray # (A, P, Nn, Na, Ns, T)
+    n_scheduled: np.ndarray  # (A, P, Nn, Na, Ns, T)
+    loss: np.ndarray      # (A, P, Nn, Na, Ns, E)
+    acc: np.ndarray       # (A, P, Nn, Na, Ns, E)
     eval_rounds: np.ndarray  # (E,)
-    diag: Any = None      # RoundDiagnostics of (P, Nn, Na, Ns, T) taps when
+    diag: Any = None      # RoundDiagnostics of (A, P, Nn, Na, Ns, T) taps when
     #                       the lattice ran with ObsConfig(diagnostics=True)
 
     def cell(self, **coords) -> dict:
         """Select one sub-array per field by axis coordinates, e.g.
         ``records.cell(policy="pofl", seed=0)``."""
         idx: list[Any] = []
-        for name in ("policy", "noise_power", "alpha", "seed"):
+        for name in ("algorithm", "policy", "noise_power", "alpha", "seed"):
             if name in coords:
                 idx.append(self.axes[name].index(coords.pop(name)))
             else:
@@ -193,7 +208,9 @@ def run_lattice(
     scenario_params: dict | None = None,
     mesh: jax.sharding.Mesh | int | tuple | None = None,
     fuse_policies: bool = True,
+    fuse_algorithms: bool = True,
     obs: ObsConfig | None = None,
+    _forced_algorithm_axis: bool = False,
 ) -> LatticeRecords:
     """Run the full lattice; ONE compiled (vmap ∘ scan) program for the spec.
 
@@ -201,8 +218,9 @@ def run_lattice(
       eval_fn: traceable ``params -> (loss, acc)`` — evaluated inside the
         scan every ``spec.eval_every`` rounds (and on the last round).
       base_cfg: defaults for everything the spec doesn't sweep; its
-        ``policy``/``noise_power``/``alpha``/``seed`` fields are overridden
-        per cell. ``base_cfg.backend`` selects the aggregation backend for
+        ``policy``/``noise_power``/``alpha``/``seed``/``local_algorithm``
+        fields are overridden per cell (``spec.algorithms`` names the
+        algorithm axis, like ``spec.policies`` names the policy axis). ``base_cfg.backend`` selects the aggregation backend for
         every cell (under the cell vmap the ``pallas_fused`` kernel batches
         into the trial-batched grid), and ``data`` may carry heterogeneous
         shards (``DeviceData.n_samples``) — the Eq. 34/35/37 weights follow
@@ -231,6 +249,18 @@ def run_lattice(
         (smaller) program over the same traced-dispatch cell body with a
         constant ``policy_id`` axis, so records are bit-identical to the
         fused path; kept as the debugging/fallback route.
+      fuse_algorithms: True (default) folds a multi-algorithm
+        ``spec.algorithms`` axis into the traced program the same way —
+        every cell carries an int32 ``algorithm_id`` through
+        ``core.local_update``'s append-only ``lax.switch`` table, so
+        (algorithm × policy × noise × α × seed) is still ONE compile. False
+        loops per algorithm — each algorithm runs its own lattice over the
+        same traced-dispatch cell program with a constant ``algorithm_id``
+        axis (one compile per algorithm), bit-identical to the fused lanes;
+        the debugging/fallback route, mirroring ``fuse_policies=False``.
+        Single-algorithm specs (the default) never trace the algorithm axis:
+        the engine dispatches statically on ``cfg.local_algorithm`` and the
+        default ``("fedavg",)`` spec traces today's exact program.
       obs: observability config. ``ObsConfig(diagnostics=True)`` compiles
         the cheap per-round taps (:class:`repro.core.metrics.RoundDiagnostics`)
         into every cell and returns them as ``LatticeRecords.diag``; it keys
@@ -241,6 +271,37 @@ def run_lattice(
         engine dispatch when ``REPRO_OBS_DIR`` is set.
     """
     base_cfg = base_cfg or POFLConfig(n_devices=data.n_devices)
+    algs = tuple(spec.algorithms)
+    if not algs:
+        raise ValueError("spec.algorithms must name at least one algorithm")
+    for a in algs:
+        local_update.algorithm_id(a)  # fail fast on unknown names
+
+    if len(algs) > 1 and not fuse_algorithms:
+        # per-algorithm Python loop: each algorithm re-enters run_lattice as
+        # a single-algorithm spec FORCED onto the traced-dispatch cell
+        # program (constant algorithm_id axis) — same cell program as the
+        # fused lanes, so records are bit-identical; one compile per
+        # algorithm (mirrors the fuse_policies=False cost model)
+        per_alg = [
+            run_lattice(
+                loss_fn, data, params0,
+                dataclasses.replace(spec, algorithms=(a,)),
+                base_cfg=base_cfg, eval_fn=eval_fn, channel_cfg=channel_cfg,
+                scenario=scenario, scenario_params=scenario_params,
+                mesh=mesh, fuse_policies=fuse_policies, obs=obs,
+                _forced_algorithm_axis=True,
+            )
+            for a in algs
+        ]
+        return _concat_algorithms(algs, per_alg)
+
+    # the algorithm axis is traced iff >1 algorithm (fused) or forced by the
+    # per-algorithm fallback loop; single-algorithm user specs keep the
+    # historical static dispatch (default ("fedavg",) → today's exact program)
+    traced_algs = len(algs) > 1 or _forced_algorithm_axis
+    base_alg = FUSED_ALGORITHM if len(algs) > 1 else algs[0]
+
     if isinstance(mesh, int):
         mesh = make_cell_mesh(mesh)
     elif isinstance(mesh, tuple):
@@ -253,21 +314,43 @@ def run_lattice(
         do_eval = np.zeros(spec.n_rounds, bool)
     eval_rounds = t_ints[do_eval]
 
-    # flattened vmap grid: (policy,) × noise × alpha × seed when fused —
-    # policy-major, so the fused flat order equals the per-policy stack order
+    # flattened vmap grid: (algorithm,) × (policy,) × noise × alpha × seed
+    # when fused — algorithm-major then policy-major, so the fused flat order
+    # equals the per-algorithm/per-policy stack orders
     grid_axes = [
         np.asarray(spec.noise_powers, np.float32),
         np.asarray(spec.alphas, np.float32),
         np.asarray(spec.seeds, np.int32),
     ]
+    alg_ids = np.asarray(
+        [local_update.algorithm_id(a) for a in algs], np.int32
+    )
     if fuse_policies:
         pol_ids = np.asarray(
             [scheduling.policy_id(p) for p in spec.policies], np.int32
         )
-        grid_p, grid_n, grid_a, grid_s = np.meshgrid(
-            pol_ids, *grid_axes, indexing="ij"
+        if traced_algs:
+            grid_al, grid_p, grid_n, grid_a, grid_s = np.meshgrid(
+                alg_ids, pol_ids, *grid_axes, indexing="ij"
+            )
+            cells = [
+                grid_n.ravel(), grid_a.ravel(), grid_s.ravel(),
+                grid_p.ravel(), grid_al.ravel(),
+            ]
+        else:
+            grid_p, grid_n, grid_a, grid_s = np.meshgrid(
+                pol_ids, *grid_axes, indexing="ij"
+            )
+            cells = [
+                grid_n.ravel(), grid_a.ravel(), grid_s.ravel(), grid_p.ravel()
+            ]
+    elif traced_algs:
+        grid_al, grid_n, grid_a, grid_s = np.meshgrid(
+            alg_ids, *grid_axes, indexing="ij"
         )
-        cells = [grid_n.ravel(), grid_a.ravel(), grid_s.ravel(), grid_p.ravel()]
+        cells = [
+            grid_n.ravel(), grid_a.ravel(), grid_s.ravel(), grid_al.ravel()
+        ]
     else:
         grid_n, grid_a, grid_s = np.meshgrid(*grid_axes, indexing="ij")
         cells = [grid_n.ravel(), grid_a.ravel(), grid_s.ravel()]
@@ -316,6 +399,20 @@ def run_lattice(
 
     grid_shape = (len(spec.noise_powers), len(spec.alphas), len(spec.seeds))
 
+    def _shape_flat(a) -> np.ndarray:
+        """Fused flat order (A·P·B, T) → the (A, P, Nn, Na, Ns, T) grid
+        (A == 1 when the algorithm axis isn't traced)."""
+        return np.asarray(a).reshape(
+            (len(algs), len(spec.policies)) + grid_shape + (spec.n_rounds,)
+        )
+
+    def _shape_stacked(a) -> np.ndarray:
+        """Per-policy stack (P, A·B, T) → the (A, P, Nn, Na, Ns, T) grid."""
+        shaped = np.asarray(a).reshape(
+            (len(spec.policies), len(algs)) + grid_shape + (spec.n_rounds,)
+        )
+        return np.moveaxis(shaped, 1, 0)
+
     def one_engine(cfg: POFLConfig):
         return cached_engine(
             loss_fn, data, cfg,
@@ -333,47 +430,51 @@ def run_lattice(
         emit(
             "lattice", "lattice.run",
             cells=n_real, n_rounds=spec.n_rounds, multihost=multihost,
-            warm=warm,
+            algorithms=len(algs), warm=warm,
             trace_delta=eng.n_lattice_traces - tr0,
             compile_delta=eng.n_compiles - co0,
             engine_compiles=eng.n_compiles,
             **fields,
         )
 
-    def _grid_diag(tap_arrays) -> Any:
-        """Reshape flat (P·B, T) tap leaves to the (P, Nn, Na, Ns, T) grid."""
+    def _grid_diag(tap_arrays, shape_fn) -> Any:
+        """Reshape flat tap leaves to the (A, P, Nn, Na, Ns, T) grid."""
         from repro.core.metrics import RoundDiagnostics
 
-        shaped = RoundDiagnostics(*(
-            np.asarray(a).reshape(
-                (len(spec.policies),) + grid_shape + (spec.n_rounds,)
-            )
-            for a in tap_arrays
-        ))
+        shaped = RoundDiagnostics(*(shape_fn(a) for a in tap_arrays))
         emit(
             "diag", "lattice.diagnostics",
             cells=n_real, n_rounds=spec.n_rounds,
             taps={
-                f: np.mean(getattr(shaped, f), axis=(0, 1, 2, 3)).tolist()
+                f: np.mean(
+                    getattr(shaped, f),
+                    axis=tuple(range(getattr(shaped, f).ndim - 1)),
+                ).tolist()
                 for f in shaped._fields
             },
         )
         return shaped
 
     if fuse_policies:
-        noise_b, alpha_b, seed_b, policy_b = cells_b
+        if traced_algs:
+            noise_b, alpha_b, seed_b, policy_b, algorithm_b = cells_b
+        else:
+            noise_b, alpha_b, seed_b, policy_b = cells_b
+            algorithm_b = None
         cfg = dataclasses.replace(
-            base_cfg, policy=FUSED_POLICY, n_devices=data.n_devices
+            base_cfg, policy=FUSED_POLICY, local_algorithm=base_alg,
+            n_devices=data.n_devices,
         )
         eng = one_engine(cfg)
         warm, tr0, co0 = eng.n_lattice_traces > 0, eng.n_lattice_traces, eng.n_compiles
         with span(
             "lattice.sweep", cells=n_real, fused=True,
-            policies=len(spec.policies), multihost=multihost,
+            policies=len(spec.policies), algorithms=len(algs),
+            multihost=multihost,
         ):
             recs = eng.run_lattice_cells(
                 params0, t_ints, do_eval, noise_b, alpha_b, seed_b,
-                policy_b=policy_b,
+                policy_b=policy_b, algorithm_b=algorithm_b,
             )
             if multihost:
                 # drain the (collective-free) compute before the gather's single
@@ -387,20 +488,23 @@ def run_lattice(
         recs = jax.tree.map(lambda a: a[:n_real], recs)
 
         def gather(field: str, eval_only: bool) -> np.ndarray:
-            stacked = np.asarray(getattr(recs, field))  # (P·B, T), policy-major
-            stacked = stacked.reshape(
-                (len(spec.policies),) + grid_shape + (spec.n_rounds,)
-            )
+            # (A·P·B, T) flat, algorithm-major then policy-major
+            stacked = _shape_flat(getattr(recs, field))
             return stacked[..., do_eval] if eval_only else stacked
 
-        diag = None if recs.diag is None else _grid_diag(list(recs.diag))
-        return _assemble_records(spec, gather, eval_rounds, diag=diag)
+        diag = None if recs.diag is None else _grid_diag(list(recs.diag), _shape_flat)
+        return _assemble_records(spec, algs, gather, eval_rounds, diag=diag)
 
-    noise_b, alpha_b, seed_b = cells_b
+    if traced_algs:
+        noise_b, alpha_b, seed_b, algorithm_b = cells_b
+    else:
+        noise_b, alpha_b, seed_b = cells_b
+        algorithm_b = None
     per_policy = []
     with span(
         "lattice.sweep", cells=n_real, fused=False,
-        policies=len(spec.policies), multihost=multihost,
+        policies=len(spec.policies), algorithms=len(algs),
+        multihost=multihost,
     ):
         for policy in spec.policies:
             # same traced-dispatch cell program, constant policy axis — one
@@ -409,14 +513,17 @@ def run_lattice(
             policy_b = place(
                 np.full((n_padded,), scheduling.policy_id(policy), np.int32)
             )
-            cfg = dataclasses.replace(base_cfg, policy=policy, n_devices=data.n_devices)
+            cfg = dataclasses.replace(
+                base_cfg, policy=policy, local_algorithm=base_alg,
+                n_devices=data.n_devices,
+            )
             eng = one_engine(cfg)
             warm, tr0, co0 = (
                 eng.n_lattice_traces > 0, eng.n_lattice_traces, eng.n_compiles
             )
             recs = eng.run_lattice_cells(
                 params0, t_ints, do_eval, noise_b, alpha_b, seed_b,
-                policy_b=policy_b,
+                policy_b=policy_b, algorithm_b=algorithm_b,
             )
             _emit_run(eng, warm, tr0, co0, fused=False, policy=policy)
             if multihost:
@@ -432,8 +539,8 @@ def run_lattice(
     per_policy = jax.tree.map(lambda a: a[:n_real], per_policy)
 
     def gather(field: str, eval_only: bool) -> np.ndarray:
-        stacked = np.stack([getattr(r, field) for r in per_policy])  # (P, B, T)
-        stacked = stacked.reshape((len(spec.policies),) + grid_shape + (spec.n_rounds,))
+        stacked = np.stack([getattr(r, field) for r in per_policy])  # (P, A·B, T)
+        stacked = _shape_stacked(stacked)
         return stacked[..., do_eval] if eval_only else stacked
 
     diag = None
@@ -441,15 +548,40 @@ def run_lattice(
         diag = _grid_diag([
             np.stack([np.asarray(getattr(r.diag, f)) for r in per_policy])
             for f in per_policy[0].diag._fields
-        ])
-    return _assemble_records(spec, gather, eval_rounds, diag=diag)
+        ], _shape_stacked)
+    return _assemble_records(spec, algs, gather, eval_rounds, diag=diag)
+
+
+def _concat_algorithms(
+    algs: tuple[str, ...], per_alg: list[LatticeRecords]
+) -> LatticeRecords:
+    """Stitch per-algorithm (1, P, ...) records back into one (A, P, ...)
+    lattice — the ``fuse_algorithms=False`` assembly."""
+    first = per_alg[0]
+    cat = {
+        f: np.concatenate([np.asarray(getattr(r, f)) for r in per_alg], axis=0)
+        for f in ("e_com", "e_var", "grad_norm", "n_scheduled", "loss", "acc")
+    }
+    diag = None
+    if first.diag is not None:
+        diag = type(first.diag)(*(
+            np.concatenate([np.asarray(getattr(r.diag, f)) for r in per_alg], axis=0)
+            for f in first.diag._fields
+        ))
+    return LatticeRecords(
+        axes={**first.axes, "algorithm": list(algs)},
+        eval_rounds=first.eval_rounds,
+        diag=diag,
+        **cat,
+    )
 
 
 def _assemble_records(
-    spec: LatticeSpec, gather, eval_rounds, diag=None
+    spec: LatticeSpec, algs, gather, eval_rounds, diag=None
 ) -> LatticeRecords:
     return LatticeRecords(
         axes={
+            "algorithm": list(algs),
             "policy": list(spec.policies),
             "noise_power": list(spec.noise_powers),
             "alpha": list(spec.alphas),

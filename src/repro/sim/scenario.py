@@ -13,7 +13,12 @@ lattice cells. All processes are frozen dataclasses (static config hashes
 into the jit cache); all state is arrays. Processes with ``can_drop=False``
 always return all-ones availability, and the engine skips the scheduling
 masking entirely for them — keeping the static path bit-identical to the
-seed ``run_pofl``.
+seed ``run_pofl``. Availability only gates SCHEDULING (which Δ_i reach the
+air), never local computation: under a multi-step ``cfg.local_steps`` round
+(``core.local_update``), unavailable devices still advance their local
+state (FedDyn h_i / SCAFFOLD c_i) that round — the Lemma-2 reweighting
+``Δ_i/π_i`` stays unbiased over whatever deltas the devices hold
+(tests/test_local_update.py).
 
 Registered channel scenarios (``make_channel_process(name, cfg, **params)``):
 

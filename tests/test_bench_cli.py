@@ -66,3 +66,31 @@ def test_mesh_must_divide_across_hosts(capsys):
 
 def test_negative_mesh_rejected():
     assert _error_code(["--mesh", "-2"]) == 2
+
+
+def test_unknown_algorithm_is_hard_error(capsys):
+    assert _error_code(["--algorithms", "fedavg,fedsgd"]) == 2
+    err = capsys.readouterr().err
+    assert "unknown algorithm" in err and "fedsgd" in err
+
+
+def test_empty_algorithm_name_is_hard_error():
+    assert _error_code(["--algorithms", "fedavg,,fedprox"]) == 2
+    assert _error_code(["--algorithms", ""]) == 2
+
+
+def test_local_steps_must_be_positive():
+    assert _error_code(["--local-steps", "0"]) == 2
+
+
+def test_algorithm_axis_is_single_host_only(capsys):
+    assert _error_code(["--hosts", "2", "--algorithms", "fedavg,fedprox"]) == 2
+    assert "single-host" in capsys.readouterr().err
+    assert _error_code(["--hosts", "2", "--local-steps", "3"]) == 2
+
+
+def test_valid_algorithm_axis_passes_guard(monkeypatch):
+    """A well-formed multi-algorithm sweep must NOT trip the guards (the
+    benchmarks themselves are stubbed out)."""
+    monkeypatch.setattr(bench_run, "_run", lambda *a, **k: None)
+    bench_run.main(["--algorithms", "fedavg,fedprox", "--local-steps", "2"])

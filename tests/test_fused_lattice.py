@@ -36,6 +36,7 @@ from repro.core import POFLConfig
 from repro.core.scheduling import POLICY_IDS
 from repro.data import make_classification_dataset, partition_noniid_shards
 from repro.sim import (
+    FUSED_ALGORITHM,
     FUSED_POLICY,
     LatticeSpec,
     cached_engine,
@@ -60,6 +61,19 @@ MULTI_POLICY_SPEC = LatticeSpec(
     n_rounds=3,
     eval_every=2,
 )
+
+# the ISSUE-8 acceptance grid: (2 algorithms × 2 policies × noise × seeds)
+MULTI_ALG_SPEC = LatticeSpec(
+    policies=("pofl", "channel"),
+    noise_powers=(1e-11, 1e-9),
+    seeds=(0, 1000),
+    n_rounds=3,
+    eval_every=2,
+    algorithms=("fedavg", "fedprox"),
+)
+# multi-step + a real proximal pull so the two algorithm lanes genuinely
+# diverge (fedprox ≡ fedavg at local_steps=1 / μ→0 would hide a wiring bug)
+MULTI_ALG_CFG = dict(local_steps=2, fedprox_mu=0.05)
 
 
 def _loss_fn(params, x, y):
@@ -100,18 +114,28 @@ def _assert_bit_identical(a, b, ulp_fields=()):
             np.testing.assert_array_equal(fa, fb, err_msg=f)
 
 
-def _sweep(setup, mesh=None, spec=MULTI_POLICY_SPEC, fuse=True, **cfg_kw):
+def _sweep(setup, mesh=None, spec=MULTI_POLICY_SPEC, fuse=True, fuse_algs=True,
+           **cfg_kw):
     data, params0, ev = setup
     cfg = POFLConfig(n_devices=8, n_scheduled=3, **cfg_kw)
     return run_lattice(
         _loss_fn, data, params0, spec, base_cfg=cfg, eval_fn=ev, mesh=mesh,
-        fuse_policies=fuse,
+        fuse_policies=fuse, fuse_algorithms=fuse_algs,
     )
 
 
 def _fused_engine(setup, mesh=None, **cfg_kw):
     data, _, ev = setup
     cfg = POFLConfig(n_devices=8, n_scheduled=3, policy=FUSED_POLICY, **cfg_kw)
+    return cached_engine(_loss_fn, data, cfg, eval_fn=ev, mesh=mesh)
+
+
+def _fused_alg_engine(setup, mesh=None, **cfg_kw):
+    data, _, ev = setup
+    cfg = POFLConfig(
+        n_devices=8, n_scheduled=3, policy=FUSED_POLICY,
+        local_algorithm=FUSED_ALGORITHM, **cfg_kw,
+    )
     return cached_engine(_loss_fn, data, cfg, eval_fn=ev, mesh=mesh)
 
 
@@ -267,6 +291,87 @@ def test_aot_exposes_cost_and_memory_analysis(setup):
     mem = engine.lattice_memory_analysis()
     assert mem is not None and mem.output_size_in_bytes > 0
     assert engine.compile_seconds > 0.0 and engine.n_compiles == 1
+
+
+# --------------------------------------------------------------------------
+# traced local_algorithm axis (ISSUE 8): one compile, fallback parity
+# --------------------------------------------------------------------------
+
+
+def test_multi_algorithm_lattice_compiles_once(setup):
+    """Acceptance: the (2 algorithms × 2 policies × 2 noise × 2 seeds)
+    lattice is ONE engine-cache miss (the FUSED_ALGORITHM + FUSED_POLICY
+    sentinels), ONE trace, ONE XLA compile — and the repeat call adds none
+    of the three, returning bit-identical records."""
+    first = _sweep(setup, spec=MULTI_ALG_SPEC, **MULTI_ALG_CFG)
+    assert engine_cache_stats()["misses"] == 1
+    engine = _fused_alg_engine(setup, **MULTI_ALG_CFG)
+    assert engine.n_lattice_traces == 1
+    assert engine.n_compiles == 1
+    assert lattice_compile_stats()["n_compiles"] == 1
+
+    repeat = _sweep(setup, spec=MULTI_ALG_SPEC, **MULTI_ALG_CFG)
+    assert engine.n_lattice_traces == 1  # ZERO retraces
+    assert engine.n_compiles == 1        # ZERO recompiles
+    assert engine_cache_stats()["misses"] == 1
+    _assert_bit_identical(first, repeat)
+    assert first.axes["algorithm"] == ["fedavg", "fedprox"]
+    assert first.e_com.shape == (2, 2, 2, 1, 2, MULTI_ALG_SPEC.n_rounds)
+    # the two algorithm lanes genuinely diverge (μ > 0, 2 local steps)
+    assert not np.array_equal(first.grad_norm[0], first.grad_norm[1])
+
+
+def test_fused_algorithms_match_fallback_unmeshed(setup):
+    """fuse_algorithms=False re-runs each algorithm as a forced
+    single-algorithm lattice over the SAME traced-dispatch cell program
+    (constant algorithm_id) — one engine + one compile per algorithm, records
+    bit-identical to the fused lanes."""
+    fused = _sweep(setup, spec=MULTI_ALG_SPEC, **MULTI_ALG_CFG)
+    fallback = _sweep(setup, spec=MULTI_ALG_SPEC, fuse_algs=False,
+                      **MULTI_ALG_CFG)
+    _assert_bit_identical(fused, fallback)
+    # fused engine + one per-algorithm engine each → 1 + len(algorithms)
+    assert engine_cache_stats()["misses"] == 1 + len(MULTI_ALG_SPEC.algorithms)
+
+
+def test_fused_algorithms_match_fallback_pallas_interpret(setup, monkeypatch):
+    """The pallas_fused aggregation backend (interpret-mode kernel on CPU)
+    composes with the traced algorithm dispatch: fused ≡ fallback bitwise."""
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    spec = dataclasses.replace(MULTI_ALG_SPEC, seeds=(0,))
+    fused = _sweep(setup, spec=spec, backend="pallas_fused", **MULTI_ALG_CFG)
+    fallback = _sweep(setup, spec=spec, fuse_algs=False,
+                      backend="pallas_fused", **MULTI_ALG_CFG)
+    _assert_bit_identical(fused, fallback)
+
+
+def test_fused_algorithms_one_device_mesh(setup):
+    """(C, 1) mesh leg: the algorithm-spanning cell axis on a 1-device mesh
+    is bit-identical to the unmeshed run, fused and fallback alike."""
+    mesh = make_cell_mesh(1)
+    fused = _sweep(setup, spec=MULTI_ALG_SPEC, mesh=mesh, **MULTI_ALG_CFG)
+    _assert_bit_identical(
+        fused,
+        _sweep(setup, spec=MULTI_ALG_SPEC, mesh=mesh, fuse_algs=False,
+               **MULTI_ALG_CFG),
+    )
+    _assert_bit_identical(fused, _sweep(setup, spec=MULTI_ALG_SPEC,
+                                        **MULTI_ALG_CFG))
+
+
+@needs_8_devices
+def test_fused_algorithms_eight_device_mesh(setup):
+    """8-fake-device leg: 16 real cells sharded over 8 devices — fused ≡
+    fallback ≡ unmeshed-fused, bit for bit."""
+    mesh = make_cell_mesh(8)
+    fused = _sweep(setup, spec=MULTI_ALG_SPEC, mesh=mesh, **MULTI_ALG_CFG)
+    _assert_bit_identical(
+        fused,
+        _sweep(setup, spec=MULTI_ALG_SPEC, mesh=mesh, fuse_algs=False,
+               **MULTI_ALG_CFG),
+    )
+    _assert_bit_identical(fused, _sweep(setup, spec=MULTI_ALG_SPEC,
+                                        **MULTI_ALG_CFG))
 
 
 def test_aot_cache_distinguishes_signatures(setup):

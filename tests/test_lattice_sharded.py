@@ -195,7 +195,7 @@ def test_non_divisible_grids_roundtrip_padding(setup, n_seeds):
     )
     unsharded = _sweep(setup, mesh=None, spec=spec)
     sharded = _sweep(setup, mesh=make_cell_mesh(8), spec=spec)
-    assert sharded.e_com.shape == (1, 1, 1, n_seeds, 3)
+    assert sharded.e_com.shape == (1, 1, 1, 1, n_seeds, 3)
     _assert_records_equal(unsharded, sharded)
 
 

@@ -259,7 +259,7 @@ def test_diagnostics_taps_values_and_unchanged_base_records():
         )
     d = on.diag
     assert isinstance(d, RoundDiagnostics)
-    grid_shape = (len(spec.policies), 1, 1, 2, spec.n_rounds)
+    grid_shape = (1, len(spec.policies), 1, 1, 2, spec.n_rounds)
     for f in d._fields:
         tap = np.asarray(getattr(d, f))
         assert tap.shape == grid_shape, f

@@ -321,14 +321,14 @@ def test_lattice_record_shapes_and_axes(setup):
         base_cfg=POFLConfig(n_devices=12, n_scheduled=4),
         eval_fn=ev,
     )
-    assert recs.e_com.shape == (2, 2, 2, 3, 6)
+    assert recs.e_com.shape == (1, 2, 2, 2, 3, 6)  # leading algorithm axis
     np.testing.assert_array_equal(recs.eval_rounds, [0, 2, 4, 5])
-    assert recs.acc.shape == (2, 2, 2, 3, 4)
+    assert recs.acc.shape == (1, 2, 2, 2, 3, 4)
     assert np.isfinite(recs.e_com).all() and np.isfinite(recs.acc).all()
     assert (recs.n_scheduled >= 1).all()
 
     c = recs.cell(policy="pofl", noise_power=1e-9, alpha=1.0)
-    assert c["acc"].shape == (3, 4)
+    assert c["acc"].shape == (1, 3, 4)  # un-named algorithm axis stays (size 1)
     with pytest.raises(ValueError):
         recs.cell(nonsense=3)
 
@@ -348,10 +348,10 @@ def test_lattice_single_cell_matches_run_pofl(setup):
     _, hist = run_pofl(_loss_fn, params0, data, cfg, 6, eval_fn=jax.jit(ev), eval_every=2)
     np.testing.assert_array_equal(recs.eval_rounds, hist.test_round)
     np.testing.assert_allclose(
-        recs.acc[0, 0, 0, 0], hist.test_acc, rtol=1e-5, atol=1e-6
+        recs.acc[0, 0, 0, 0, 0], hist.test_acc, rtol=1e-5, atol=1e-6
     )
     np.testing.assert_allclose(
-        recs.e_com[0, 0, 0, 0], hist.e_com, rtol=1e-5
+        recs.e_com[0, 0, 0, 0, 0], hist.e_com, rtol=1e-5
     )
 
 
@@ -363,7 +363,7 @@ def test_lattice_gauss_markov_runs(setup):
         base_cfg=POFLConfig(n_devices=12, n_scheduled=4),
         scenario="gauss_markov", scenario_params={"corr": 0.95},
     )
-    assert recs.e_com.shape == (1, 1, 1, 2, 4)
+    assert recs.e_com.shape == (1, 1, 1, 1, 2, 4)
     assert np.isfinite(recs.e_com).all()
     assert recs.acc.shape[-1] == 0  # no eval_fn → empty eval axis
 
@@ -574,7 +574,7 @@ def test_hetero_lattice_end_to_end(setup):
         _loss_fn, data, params0, spec,
         base_cfg=POFLConfig(n_devices=12, n_scheduled=4), eval_fn=ev,
     )
-    assert recs.e_com.shape == (2, 1, 1, 2, 6)
+    assert recs.e_com.shape == (1, 2, 1, 1, 2, 6)
     assert np.isfinite(recs.e_com).all() and np.isfinite(recs.acc).all()
     assert (recs.n_scheduled >= 1).all()
 
@@ -805,7 +805,7 @@ def test_churn_dirichlet_mixed_golden_trajectory():
         scenario="churn",
         scenario_params={"p_depart": 0.3, "p_arrive": 0.2},
     )
-    cell = {f: np.asarray(getattr(recs, f)[0, 0, 0, 0]) for f in
+    cell = {f: np.asarray(getattr(recs, f)[0, 0, 0, 0, 0]) for f in
             ("e_com", "e_var", "grad_norm", "n_scheduled")}
     np.testing.assert_array_equal(
         cell["n_scheduled"], [2.0, 1.0, 4.0, 3.0, 4.0, 4.0]
