@@ -57,8 +57,11 @@ def build_task(
     ``dim`` overrides the mnist task's flat feature dimension (the
     ``--dim`` benchmark axis: D scales the gradients/aggregation working
     set, which is what the 2-D model-sharded mesh shrinks per device).
-    ``None`` keeps the historical 784 bit-identically.
+    ``None`` keeps the historical 784 bit-identically; the CNN's D is
+    fixed by its architecture, so ``dim`` with ``kind="cifar"`` raises.
     """
+    if dim is not None and kind == "cifar":
+        raise ValueError("dim override only supported for the mnist task")
     key = jax.random.PRNGKey(seed)
     k_train, k_test, k_init = jax.random.split(key, 3)
     ds = "mnist_like" if kind == "mnist" else "cifar_like"
@@ -188,10 +191,15 @@ def run_policies(
 BENCH_SWEEP_KW = dict(n_rounds=30, n_trials=3, n_scheduled=10, eval_every=10)
 
 
-def bench_task(dim: int | None = None) -> Task:
+def bench_task(dim: int | None = None, kind: str = "mnist") -> Task:
     """The task the sim-lattice throughput bench runs on. ``dim`` overrides
     the flat feature dimension (the ``--dim`` D-scaling axis); ``None``
-    keeps the historical 784-dim task bit-identically."""
+    keeps the historical 784-dim task bit-identically. ``kind`` selects the
+    model (``benchmarks.run --task``): ``"mnist"`` is the historical logreg
+    bench, ``"cifar"`` the 4-conv CNN (D ≈ 2.6×10⁵, smaller train set —
+    throughput entries for the two tasks are never gate-compared)."""
+    if kind == "cifar":
+        return build_task("cifar", n_devices=20, n_train=1000, dim=dim)
     return build_task("mnist", n_devices=20, n_train=2000, dim=dim)
 
 

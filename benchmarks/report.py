@@ -95,7 +95,9 @@ def _gate_key(e: dict) -> tuple:
     same workload on the same topology may be compared by the perf gate.
     ``mesh_shape``/``dim`` are absent in pre-2-D-mesh history — ``None``
     there matches only other legacy entries (likewise
-    ``algorithms``/``local_steps``, absent before the local-update axis)."""
+    ``algorithms``/``local_steps``, absent before the local-update axis,
+    and ``task``, absent before the model-task axis — a CNN entry never
+    gate-compares against a logreg or legacy synthetic-task entry)."""
     algs = e.get("algorithms", None)
     return (
         e.get("backend"), e.get("mesh_shape", None),
@@ -103,6 +105,7 @@ def _gate_key(e: dict) -> tuple:
         e.get("cells"), e.get("n_rounds"),
         tuple(algs) if algs is not None else None,
         e.get("local_steps", None),
+        e.get("task", None),
     )
 
 
@@ -113,7 +116,8 @@ def gate_regression(
 
     Compares the LAST history entry's ``steady_cells_per_sec`` against the
     most recent PRIOR entry with the same :func:`_gate_key` (backend, mesh
-    shape, host count, dim, sweep size, algorithms, local_steps). Returns ``(ok, message)`` — ok is
+    shape, host count, dim, sweep size, algorithms, local_steps, task).
+    Returns ``(ok, message)`` — ok is
     False when throughput regressed by more than ``max_regress`` (fraction,
     default 20%). Passes trivially when there is no comparable prior entry
     (first run on a new configuration) or fewer than two entries total.

@@ -12,6 +12,14 @@ overwrite (``python -m benchmarks.report`` renders it).
   cells, n_rounds, n_devices       — sweep size (cells = algorithms ×
                                      policies × trials)
   backend                          — aggregation backend ("jnp"/"pallas_fused")
+  task                             — model the lattice trained ("logreg" =
+                                     the historical MNIST-shaped logistic
+                                     regression; "cnn" = the CIFAR-shaped
+                                     4-conv CNN, --task cnn). Part of the
+                                     perf-gate key: CNN throughput is never
+                                     compared against logreg entries (legacy
+                                     history rows without the field gate
+                                     only against each other)
   algorithms                       — local-update algorithms the lattice
                                      swept (``core.local_update.ALGORITHMS``
                                      names; ["fedavg"] = the historical
@@ -204,9 +212,15 @@ def _bench_sim(
     dim: int = 0,
     algorithms: tuple = ("fedavg",),
     local_steps: int = 1,
+    task_name: str = "logreg",
 ):
     """Reduced fig4-style sweep (5 policies × 3 trials) through sim.lattice
     vs the cached-engine one-run_pofl-per-cell loop → BENCH_sim.json.
+
+    ``task_name`` selects the model trained in every cell (``--task``):
+    ``"logreg"`` is the historical 784-dim bench, ``"cnn"`` the CIFAR-shaped
+    4-conv CNN — it lands in the payload (and so in the perf-gate key), so
+    the two workloads' throughput trajectories never cross-compare.
 
     The lattice runs TWICE (cold, then an identical warm repeat), splitting
     ``lattice_seconds``/``compile_seconds`` from ``steady_seconds`` so
@@ -237,7 +251,8 @@ def _bench_sim(
 
     n_rounds = BENCH_SWEEP_KW["n_rounds"]
     # shared between the lattice sweep and loop baseline
-    task = bench_task(dim=dim or None)
+    task_kind = {"logreg": "mnist", "cnn": "cifar"}[task_name]
+    task = bench_task(dim=dim or None, kind=task_kind)
     from jax.flatten_util import ravel_pytree
 
     flat_dim = int(ravel_pytree(task.params0)[0].size)
@@ -301,6 +316,7 @@ def _bench_sim(
         "n_rounds": n_rounds,
         "n_devices": 20,
         "backend": backend,
+        "task": task_name,
         "algorithms": list(algorithms),
         "local_steps": local_steps,
         "mesh_devices": n_mesh,
@@ -365,6 +381,13 @@ def main(argv: list[str] | None = None) -> None:
         "bench (1 = the historical single-gradient round)",
     )
     parser.add_argument(
+        "--task", default="logreg", choices=("logreg", "cnn"),
+        help="model the sim-lattice bench trains: logreg (the historical "
+        "784-dim task) or cnn (CIFAR-shaped 4-conv CNN, D≈2.6e5); recorded "
+        "as `task` in BENCH_sim.json / BENCH_history.jsonl so the perf gate "
+        "never compares the two workloads",
+    )
+    parser.add_argument(
         "--dim", type=int, default=0, metavar="D",
         help="override the bench task's feature dimension (0 = the default "
         "784-dim task; the flat model dimension lands in BENCH_sim.json "
@@ -418,6 +441,10 @@ def main(argv: list[str] | None = None) -> None:
         parser.error(f"--mesh must be >= 0 (got {args.mesh})")
     if args.dim < 0:
         parser.error(f"--dim must be >= 0 (got {args.dim})")
+    if args.task == "cnn" and args.dim:
+        parser.error("--dim only applies to the logreg task (cnn input shape is fixed)")
+    if args.task == "cnn" and args.hosts > 1:
+        parser.error("--task cnn is single-host only")
     if model_shards > 1 and args.hosts > 1:
         parser.error("--mesh CxM (model sharding) is single-host only")
     if args.hosts == 1 and mesh_total:
@@ -453,15 +480,16 @@ def main(argv: list[str] | None = None) -> None:
             backend=args.backend, mesh_devices=mesh_total,
             n_hosts=args.hosts, model_shards=model_shards, dim=args.dim,
             algorithms=algorithms, local_steps=args.local_steps,
+            task_name=args.task,
         ),
         lambda d: (
             "steady_cells/s=%.2f cold_cells/s=%.2f compile_s=%.1f "
-            "n_compiles=%d speedup=%.1fx backend=%s mesh=%s hbm/dev=%d "
-            "dim=%d hosts=%d" % (
+            "n_compiles=%d speedup=%.1fx backend=%s task=%s mesh=%s "
+            "hbm/dev=%d dim=%d hosts=%d" % (
                 d["steady_cells_per_sec"], d["cells_per_sec"],
                 d["compile_seconds"], d["n_compiles"], d["speedup"],
-                d["backend"], d["mesh_shape"], d["per_device_hbm_bytes"],
-                d["dim"], d["n_hosts"],
+                d["backend"], d["task"], d["mesh_shape"],
+                d["per_device_hbm_bytes"], d["dim"], d["n_hosts"],
             )
         ),
     )

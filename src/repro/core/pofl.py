@@ -265,7 +265,11 @@ class DeviceData(NamedTuple):
     partitions): every shard is padded to a common ``m_max`` and
     ``n_samples[i] ≤ m_max`` marks device i's valid prefix — padded rows are
     never sampled, and the m_i/M fractions in the scheduling/weight math
-    follow the true counts.
+    follow the true counts. ``features`` may be flat ``(N, m, d)`` vectors or
+    image-shaped ``(N, m, H, W, C)`` batches (the model tasks' CNN case) —
+    every stage treats the trailing dims opaquely. Eval-side padded test
+    sets follow the same valid-prefix contract via
+    ``repro.sim.tasks.TaskEval`` / ``models.small.make_eval_fn(n_valid=...)``.
     """
 
     features: jnp.ndarray  # (N, m_max, ...)
@@ -292,6 +296,17 @@ class DeviceData(NamedTuple):
 
 
 class History(NamedTuple):
+    """Host-side metric record of the ``run_pofl`` driver.
+
+    ``loss``/``test_acc`` come from the caller's ``eval_fn`` — any Python
+    ``params -> (loss, acc)`` callable, including a model task's
+    ``repro.sim.tasks.TaskEval`` (whose pad-masked eval counts only the true
+    test rows of a padded set). The richer on-device record schema — the
+    per-round ``RoundRecord`` with its optional ``diag``/``eval`` subtrees —
+    lives in ``repro.sim.engine``; this NamedTuple is the stable legacy
+    surface and its fields are append-only.
+    """
+
     loss: list
     e_com: list
     e_var: list

@@ -21,6 +21,7 @@ def make_classification_dataset(
     noise: float = 0.8,
     proto_seed: int = 42,
     dim: int | None = None,
+    channel_bias: float = 0.0,
 ):
     """Returns (features, labels) with features flattened for 'mnist_like'
     and shaped (n, 32, 32, 3) for 'cifar_like'.
@@ -30,6 +31,16 @@ def make_classification_dataset(
     distribution. ``dim`` overrides the flat feature dimension of
     ``mnist_like`` (the D-scaling benchmark axis; default 784 keeps every
     historical draw bit-identical); ``cifar_like``'s image shape is fixed.
+
+    ``channel_bias`` (``cifar_like`` only) adds a per-class per-CHANNEL
+    offset — broadcast over the spatial grid, fixed by ``proto_seed`` — so
+    classes also differ in low-frequency color statistics, the way real
+    image classes do. The per-pixel prototypes alone have near-zero spatial
+    mean, which a global-average-pooling CNN cannot see until its conv
+    stack has learned spatial features; the channel offset survives any
+    spatial pooling, making the task learnable by such a CNN in few SGD
+    steps. Default 0.0 skips the op entirely — every historical draw stays
+    bit-identical.
     """
     if kind == "mnist_like":
         dim = 784 if dim is None else int(dim)
@@ -51,7 +62,36 @@ def make_classification_dataset(
     scale = 1.0 + 0.3 * jax.random.normal(k_scale, (n_samples, 1))
     feats = scale * (prototypes[labels] + noise * eps)
     feats = feats.reshape((n_samples,) + shape)
+    if channel_bias:
+        if kind != "cifar_like":
+            raise ValueError(
+                "channel_bias is an image-channel feature (cifar_like only)"
+            )
+        k_bias = jax.random.split(k_proto)[1]
+        bias = jax.random.normal(k_bias, (n_classes, shape[-1]))
+        feats = feats + channel_bias * bias[labels][:, None, None, :]
     return feats.astype(jnp.float32), labels.astype(jnp.int32)
+
+
+def pad_with_wrong_labels(features, labels, n_pad: int, n_classes: int = 10):
+    """Append ``n_pad`` pad rows whose labels are deliberately WRONG.
+
+    The pad rows cycle the real features (so they look like genuine inputs)
+    but carry labels shifted by +1 mod ``n_classes`` — a model that predicts
+    the true class gets every pad row "wrong". An eval that leaks pad rows
+    into its accuracy therefore shifts measurably; one that honors the
+    valid-prefix contract (``n_valid = len(labels)``) is unaffected. Test
+    scaffolding for the padded-shard eval-masking regression.
+    """
+    feats = jnp.asarray(features)
+    labs = jnp.asarray(labels)
+    idx = jnp.arange(n_pad) % feats.shape[0]
+    pad_feats = feats[idx]
+    pad_labs = (labs[idx] + 1) % n_classes
+    return (
+        jnp.concatenate([feats, pad_feats], axis=0),
+        jnp.concatenate([labs, pad_labs], axis=0),
+    )
 
 
 def make_token_dataset(

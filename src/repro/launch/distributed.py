@@ -63,10 +63,15 @@ from repro.sim.multihost import (
 )
 
 # the canonical per-round ARRAY record fields (one source: the engine's
-# RoundRecord, minus the optional `diag` pytree subtree — the npz parity
-# serialization and cross-process comparisons cover the flat arrays; obs
-# diagnostics travel through the REPRO_OBS_DIR JSONL sink instead)
-_RECORD_FIELDS = tuple(f for f in RoundRecord._fields if f != "diag")
+# RoundRecord, minus the optional pytree subtrees `diag` and `eval` — the
+# npz parity serialization and cross-process comparisons cover the flat
+# arrays only; obs diagnostics travel through the REPRO_OBS_DIR JSONL sink
+# and eval curves through the in-process LatticeRecords/run_with_history
+# paths instead. np.savez would pickle a None subtree as an object array
+# (unreadable under allow_pickle=False) and collapse a NamedTuple leaf.)
+_RECORD_FIELDS = tuple(
+    f for f in RoundRecord._fields if f not in ("diag", "eval")
+)
 _DEVICE_COUNT_FLAG = re.compile(r"--xla_force_host_platform_device_count=\S+\s*")
 
 

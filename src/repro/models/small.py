@@ -104,12 +104,29 @@ def cnn_loss(params, x, y):
 # --------------------------------------------------------------------------
 
 
-def make_eval_fn(logits_fn, loss_fn, x_test, y_test, batch: int = 1000):
+def make_eval_fn(
+    logits_fn, loss_fn, x_test, y_test, batch: int = 1000,
+    n_valid: int | None = None,
+):
+    """Jitted ``params -> (loss, acc)`` over (up to) ``batch`` test rows.
+
+    ``n_valid`` marks the TRUE-sample prefix of a padded test set (the same
+    valid-prefix contract as ``core.pofl.DeviceData.n_samples``): rows at
+    and past ``n_valid`` are padding and must not count toward loss or
+    accuracy, so the eval window is ``min(batch, n_valid)`` rows. ``None``
+    (the historical default) treats every row as valid — bit-identical to
+    the pre-``n_valid`` eval.
+    """
+    n_rows = int(jnp.shape(y_test)[0])
+    n = min(batch, n_rows) if n_valid is None else min(batch, int(n_valid))
+    if not 0 < n <= n_rows:
+        raise ValueError(f"n_valid must be in [1, {n_rows}] (got {n_valid})")
+
     @jax.jit
     def _eval(params):
-        logits = logits_fn(params, x_test[:batch])
-        acc = jnp.mean(jnp.argmax(logits, -1) == y_test[:batch])
-        loss = loss_fn(params, x_test[:batch], y_test[:batch])
+        logits = logits_fn(params, x_test[:n])
+        acc = jnp.mean(jnp.argmax(logits, -1) == y_test[:n])
+        loss = loss_fn(params, x_test[:n], y_test[:n])
         return loss, acc
 
     return _eval

@@ -14,6 +14,11 @@ Three layers (see ROADMAP.md "sim" section):
     one vmapped+scanned program per (policy, shape) group, optionally
     sharded along the cell axis over a ``jax.sharding`` mesh
     (``run_lattice(..., mesh=...)`` / :func:`make_cell_mesh`).
+  * :mod:`repro.sim.tasks`    — real-model federated tasks
+    (:func:`make_model_task`: the paper's logreg / 4-conv CNN over synthetic
+    MNIST-/CIFAR-shaped data) with pad-masked :class:`TaskEval` evals that
+    surface accuracy/loss curves as the ``LatticeRecords.eval`` subtree
+    (OFF — an empty pytree — for any other eval_fn).
   * :mod:`repro.sim.multihost` — the process-spanning half of the lattice
     sharding story: ``jax.distributed`` init from the ``REPRO_DIST_*`` env
     contract (:func:`initialize_distributed`), global-device cell meshes
@@ -56,17 +61,28 @@ from repro.sim.scenario import (
     make_channel_process,
     make_partition,
 )
+from repro.sim.tasks import (
+    TASKS,
+    EvalRecord,
+    ModelTask,
+    TaskEval,
+    make_model_task,
+)
 
 __all__ = [
     "CHANNEL_SCENARIOS",
     "DistributedConfig",
+    "EvalRecord",
     "FUSED_ALGORITHM",
     "FUSED_POLICY",
     "LatticeRecords",
     "LatticeSpec",
+    "ModelTask",
     "PARTITIONS",
     "SimEngine",
     "SimState",
+    "TASKS",
+    "TaskEval",
     "cached_engine",
     "distributed_env",
     "enable_compile_cache",
@@ -79,6 +95,7 @@ __all__ = [
     "make_channel_process",
     "make_global_cell_mesh",
     "make_global_cell_model_mesh",
+    "make_model_task",
     "make_partition",
     "mesh_spans_processes",
     "persistent_cache_counters",

@@ -58,6 +58,7 @@ from repro.obs.profile import maybe_profile, profiling_enabled
 from repro.obs.registry import counter_add, metric_value, reset_metrics
 from repro.obs.spans import span
 from repro.sim.scenario import make_channel_process
+from repro.sim.tasks import TaskEval, zero_eval_record
 
 # per-engine cap on cached AOT lattice executables (LRU eviction)
 _LATTICE_EXECUTABLES_MAX = 8
@@ -104,6 +105,13 @@ class RoundRecord(NamedTuple):
     so the off-path record has exactly the seed's leaves (pinned
     trajectories, ``launch.distributed`` serialization, and the gather
     programs all see an unchanged structure).
+
+    ``eval`` applies the same trick to the model-task eval curves
+    (``repro.sim.tasks``): it is the structured
+    :class:`~repro.sim.tasks.EvalRecord` when the engine's ``eval_fn`` is a
+    :class:`~repro.sim.tasks.TaskEval`, else ``None`` (OFF by default) —
+    legacy tuple eval_fns and eval-less runs keep the seed's exact record
+    pytree, so every pre-existing pinned trajectory stays bitwise unchanged.
     """
 
     e_com: jnp.ndarray        # Eq. 15 closed-form communication distortion
@@ -113,21 +121,27 @@ class RoundRecord(NamedTuple):
     loss: jnp.ndarray         # eval loss (0 where not evaluated)
     acc: jnp.ndarray          # eval accuracy (0 where not evaluated)
     diag: Any = None          # RoundDiagnostics taps, or None (default)
+    eval: Any = None          # tasks.EvalRecord subtree, or None (default)
 
 
-def _zero_record(diagnostics: bool = False) -> RoundRecord:
+# the always-present scalar record fields (diag/eval are optional subtrees)
+_RECORD_SCALARS = ("e_com", "e_var", "grad_norm", "n_scheduled", "loss", "acc")
+
+
+def _zero_record(
+    diagnostics: bool = False, task_eval: bool = False
+) -> RoundRecord:
     """A zero record matching the engine's record pytree (the inactive
     ``lax.cond`` branch must mirror ``round_body``'s structure exactly)."""
-    scalars = [
-        jnp.zeros((), jnp.float32)
-        for _ in range(len(RoundRecord._fields) - 1)  # all but diag
-    ]
+    scalars = [jnp.zeros((), jnp.float32) for _ in _RECORD_SCALARS]
     diag = None
     if diagnostics:
         diag = RoundDiagnostics(
             *(jnp.zeros((), jnp.float32) for _ in RoundDiagnostics._fields)
         )
-    return RoundRecord(*scalars, diag=diag)
+    return RoundRecord(
+        *scalars, diag=diag, eval=zero_eval_record() if task_eval else None
+    )
 
 
 def _default_channel_cfg(cfg: POFLConfig) -> ChannelConfig:
@@ -188,6 +202,10 @@ class SimEngine:
             scenario, self.channel_cfg, **(scenario_params or {})
         )
         self.eval_fn = eval_fn
+        # A TaskEval (repro.sim.tasks) upgrades the record pytree with the
+        # structured ``eval`` subtree; any other eval_fn keeps it None (the
+        # empty-subtree OFF default — pinned trajectories stay bitwise).
+        self._task_eval = eval_fn if isinstance(eval_fn, TaskEval) else None
         self.mesh = mesh
         # hard error on unknown algorithm names at engine construction (the
         # FUSED_ALGORITHM sentinel is the lattice's cache-key marker: the
@@ -330,8 +348,19 @@ class SimEngine:
                 alg_state=st.alg,
                 algorithm_id=algorithm_id,
             )
+            ev_rec = None
             if self.eval_fn is None:
                 loss = acc = jnp.zeros(())
+            elif self._task_eval is not None:
+                # model-task eval: one cond produces the full EvalRecord; its
+                # loss/acc also fill the legacy always-present record fields
+                ev_rec = jax.lax.cond(
+                    ev,
+                    self._task_eval.record,
+                    lambda p: zero_eval_record(),
+                    params,
+                )
+                loss, acc = ev_rec.loss, ev_rec.acc
             else:
                 loss, acc = jax.lax.cond(
                     ev,
@@ -344,6 +373,7 @@ class SimEngine:
             rec = RoundRecord(
                 e_com=m.e_com, e_var=m.e_var, grad_norm=m.grad_norm,
                 n_scheduled=m.n_scheduled, loss=loss, acc=acc, diag=m.diag,
+                eval=ev_rec,
             )
             return SimState(params=params, key=key, chan=chan, alg=alg), rec
 
@@ -361,7 +391,12 @@ class SimEngine:
                 return jax.lax.cond(
                     act,
                     lambda s: round_body(s, t_int, ev),
-                    lambda s: (s, _zero_record(self.obs.diagnostics)),
+                    lambda s: (
+                        s,
+                        _zero_record(
+                            self.obs.diagnostics, self._task_eval is not None
+                        ),
+                    ),
                     st,
                 )
 
@@ -708,7 +743,11 @@ def cached_engine(
     The key is ``(loss_fn, data identity, cfg with seed zeroed — including
     the aggregation backend — channel_cfg, scenario, eval_fn identity, mesh
     identity, process topology, obs config)``: calls that differ only by seed
-    share one engine and therefore every jit trace it has already paid for. A
+    share one engine and therefore every jit trace it has already paid for.
+    Model tasks (``repro.sim.tasks``) key by the same identities — a
+    :func:`~repro.sim.tasks.make_model_task` task is memoized, so its
+    ``loss_fn``/``data``/``TaskEval`` objects (and hence this cache entry)
+    are stable across rebuilds of the same task arguments. A
     mesh-keyed engine never collides with the unsharded one (or with a
     differently-shaped mesh, or one spanning a different ``jax.distributed``
     process set), so per-engine trace counters stay meaningful under

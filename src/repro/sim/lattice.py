@@ -165,6 +165,13 @@ class LatticeRecords(NamedTuple):
     single-algorithm spec — legacy ``[p, n, a, s]`` indexing broadcasts
     unchanged). ``loss``/``acc`` are sub-sampled at ``eval_rounds`` (empty E
     axis when the lattice ran without an eval_fn).
+
+    ``eval`` is the model-task eval subtree: a
+    :class:`~repro.sim.tasks.EvalRecord` of ``(A, P, Nn, Na, Ns, E)`` curves
+    when the lattice ran with a :class:`~repro.sim.tasks.TaskEval` eval_fn,
+    else ``None`` — which flattens to an EMPTY pytree, so eval-off (and
+    legacy-eval) records keep exactly the historical leaves (the ``diag``
+    contract, applied to accuracy/loss curves).
     """
 
     axes: dict            # axis name -> coordinate list
@@ -177,6 +184,8 @@ class LatticeRecords(NamedTuple):
     eval_rounds: np.ndarray  # (E,)
     diag: Any = None      # RoundDiagnostics of (A, P, Nn, Na, Ns, T) taps when
     #                       the lattice ran with ObsConfig(diagnostics=True)
+    eval: Any = None      # tasks.EvalRecord of (A, P, Nn, Na, Ns, E) curves
+    #                       when eval_fn was a tasks.TaskEval, else None
 
     def cell(self, **coords) -> dict:
         """Select one sub-array per field by axis coordinates, e.g.
@@ -437,6 +446,13 @@ def run_lattice(
             **fields,
         )
 
+    def _grid_eval(ev, shape_fn) -> Any:
+        """Reshape the flat model-task eval subtree (tasks.EvalRecord of
+        (cells, T) leaves) to (A, P, Nn, Na, Ns, E) curves."""
+        return type(ev)(
+            *(shape_fn(np.asarray(a))[..., do_eval] for a in ev)
+        )
+
     def _grid_diag(tap_arrays, shape_fn) -> Any:
         """Reshape flat tap leaves to the (A, P, Nn, Na, Ns, T) grid."""
         from repro.core.metrics import RoundDiagnostics
@@ -493,7 +509,10 @@ def run_lattice(
             return stacked[..., do_eval] if eval_only else stacked
 
         diag = None if recs.diag is None else _grid_diag(list(recs.diag), _shape_flat)
-        return _assemble_records(spec, algs, gather, eval_rounds, diag=diag)
+        ev = None if recs.eval is None else _grid_eval(recs.eval, _shape_flat)
+        return _assemble_records(
+            spec, algs, gather, eval_rounds, diag=diag, eval=ev
+        )
 
     if traced_algs:
         noise_b, alpha_b, seed_b, algorithm_b = cells_b
@@ -549,7 +568,19 @@ def run_lattice(
             np.stack([np.asarray(getattr(r.diag, f)) for r in per_policy])
             for f in per_policy[0].diag._fields
         ], _shape_stacked)
-    return _assemble_records(spec, algs, gather, eval_rounds, diag=diag)
+    ev = None
+    if per_policy and per_policy[0].eval is not None:
+        first_ev = per_policy[0].eval
+        ev = _grid_eval(
+            type(first_ev)(*(
+                np.stack([np.asarray(getattr(r.eval, f)) for r in per_policy])
+                for f in first_ev._fields
+            )),
+            _shape_stacked,
+        )
+    return _assemble_records(
+        spec, algs, gather, eval_rounds, diag=diag, eval=ev
+    )
 
 
 def _concat_algorithms(
@@ -568,16 +599,23 @@ def _concat_algorithms(
             np.concatenate([np.asarray(getattr(r.diag, f)) for r in per_alg], axis=0)
             for f in first.diag._fields
         ))
+    ev = None
+    if first.eval is not None:
+        ev = type(first.eval)(*(
+            np.concatenate([np.asarray(getattr(r.eval, f)) for r in per_alg], axis=0)
+            for f in first.eval._fields
+        ))
     return LatticeRecords(
         axes={**first.axes, "algorithm": list(algs)},
         eval_rounds=first.eval_rounds,
         diag=diag,
+        eval=ev,
         **cat,
     )
 
 
 def _assemble_records(
-    spec: LatticeSpec, algs, gather, eval_rounds, diag=None
+    spec: LatticeSpec, algs, gather, eval_rounds, diag=None, eval=None
 ) -> LatticeRecords:
     return LatticeRecords(
         axes={
@@ -595,4 +633,5 @@ def _assemble_records(
         acc=gather("acc", True),
         eval_rounds=eval_rounds,
         diag=diag,
+        eval=eval,
     )

@@ -285,7 +285,16 @@ PARTITIONS = ("iid", "shards", "dirichlet", "dirichlet_sized", "dirichlet_mixed"
 
 
 def make_partition(name: str, features, labels, n_devices: int, seed: int = 0, **kw):
-    """Partition (features, labels) into stacked per-device shards."""
+    """Partition (features, labels) into stacked per-device shards.
+
+    ``features`` may be flat ``(n, d)`` vectors or image-shaped
+    ``(n, H, W, C)`` batches (the CNN model task) — every preset indexes
+    along axis 0 only, so the device axis stacks in front of whatever sample
+    shape the model consumes. The sized/mixed Dirichlet presets wrap-pad
+    shards to a common length and record true counts in
+    ``DeviceData.n_samples`` (the valid-prefix contract minibatch draws and
+    ``repro.sim.tasks.TaskEval`` both honor).
+    """
     if name == "iid":
         return partition_iid(features, labels, n_devices, seed=seed)
     if name == "shards":

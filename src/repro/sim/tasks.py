@@ -1,0 +1,276 @@
+"""Real-model federated tasks for the lattice engine (paper Sec. V-A).
+
+``models/small.py`` implements the paper's two evaluation models — 784-dim
+logistic regression (convex) and the 4-conv CNN (non-convex, ~2.6×10⁵
+raveled params) — as pure (init, loss) pytree triples. This module wires
+them into the simulation stack as first-class **tasks**:
+
+  * :class:`ModelTask` — bundles the dict-pytree ``params0``, the
+    jax-traceable ``loss_fn(params, x, y)`` closure (the exact signature
+    ``core.local_update``'s K-step local SGD consumes; per-device minibatch
+    draws and the flat-D ravel/unravel happen inside the round pipeline),
+    the partitioned train shards (:class:`~repro.core.pofl.DeviceData`), and
+    a :class:`TaskEval`. ``ravel``/``unravel`` expose the
+    ``jax.flatten_util.ravel_pytree`` bijection between the pytree and the
+    engine's flat-D vector (``dim`` is its length), and ``flat_loss_fn``
+    is the same loss over the flat vector for code that works in D-space.
+  * :class:`TaskEval` — a *traceable* eval closure over a fixed test set.
+    Calling it returns the legacy ``(loss, acc)`` pair (drop-in for every
+    ``eval_fn`` seam: ``SimEngine``, ``run_pofl``'s host-side eval,
+    ``run_lattice``); :meth:`TaskEval.record` returns the structured
+    :class:`EvalRecord` the engine stacks into the ``RoundRecord.eval`` /
+    ``LatticeRecords.eval`` subtree. Pad discipline: ``n_valid`` marks the
+    true-sample prefix of a padded test set, and BOTH loss and accuracy are
+    computed over exactly those rows — pad rows (e.g. the wrap-padding of
+    ``data.partition``'s sized shards) never count (the same valid-prefix
+    contract as ``local_update.draw_minibatch``).
+  * :func:`make_model_task` — the memoized factory: repeat calls with the
+    same arguments return the SAME task object, so ``loss_fn``/``eval_fn``
+    identity — which keys :func:`~repro.sim.engine.cached_engine` — is
+    stable and a repeat sweep over a rebuilt task re-traces ZERO times.
+
+Record contract (the PR-6 ``diag=None`` trick, third application): a lattice
+run whose ``eval_fn`` is a :class:`TaskEval` grows an ``eval`` subtree on
+``RoundRecord``/``LatticeRecords``; any other eval_fn (or none) leaves the
+field ``None``, which flattens to an EMPTY pytree — the compiled program and
+every pre-existing pinned trajectory stay bitwise unchanged.
+
+Datasets are the seeded synthetic MNIST-/CIFAR-shaped generators from
+``repro.data.synthetic`` (offline container — CI needs no downloads).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.flatten_util import ravel_pytree
+
+from repro.core.pofl import DeviceData
+from repro.data.synthetic import make_classification_dataset
+from repro.models import small
+from repro.sim.scenario import PARTITIONS, make_partition
+
+# task registry: name -> (dataset kind, init/loss/logits triple). Append-only
+# (like the policy/algorithm tables): positions and names are forever.
+TASKS = ("logreg", "cnn")
+
+
+class EvalRecord(NamedTuple):
+    """One structured eval point (the ``RoundRecord.eval`` subtree leaves).
+
+    Scalars inside the engine's scan; the lattice stacks them to
+    ``(A, P, Nn, Na, Ns, E)`` arrays on ``LatticeRecords.eval``. ``n_correct``
+    is the raw correct-prediction count over the VALID test rows — alongside
+    ``acc`` it pins the denominator, so a pad-row leak (counting padded test
+    rows) is visible as ``acc != n_correct / n_valid``.
+    """
+
+    loss: jnp.ndarray       # mean NLL over the valid test rows
+    acc: jnp.ndarray        # fraction of valid rows predicted correctly
+    n_correct: jnp.ndarray  # correct predictions among the valid rows
+
+
+def zero_eval_record() -> EvalRecord:
+    """The inactive-branch / not-an-eval-round record (all-zero scalars) —
+    must mirror :meth:`TaskEval.record`'s structure exactly."""
+    return EvalRecord(*(jnp.zeros((), jnp.float32) for _ in EvalRecord._fields))
+
+
+class TaskEval:
+    """Traceable pad-masked classification eval over a fixed test set.
+
+    Args:
+      logits_fn: ``(params, x) -> (B, n_classes)`` logits (jax-traceable).
+      x_test, y_test: the full (possibly padded) test arrays.
+      n_valid: number of TRUE test rows (the valid prefix); rows at and past
+        ``n_valid`` are padding and are excluded from loss, accuracy, and the
+        correct count. ``None`` means the whole set is valid.
+      batch: cap on rows evaluated (static slice, like the historical
+        ``small.make_eval_fn``); the effective row count is
+        ``min(batch, n_valid, len(y_test))``.
+
+    ``__call__`` returns the legacy ``(loss, acc)`` pair; :meth:`record`
+    returns the full :class:`EvalRecord`. Instances hash by identity, so a
+    ``TaskEval`` is a valid ``cached_engine`` key component (task identity).
+    """
+
+    def __init__(
+        self,
+        logits_fn: Callable,
+        x_test,
+        y_test,
+        n_valid: int | None = None,
+        batch: int = 1000,
+    ):
+        self.logits_fn = logits_fn
+        self.x_test = jnp.asarray(x_test)
+        self.y_test = jnp.asarray(y_test)
+        n_rows = int(self.y_test.shape[0])
+        n_valid = n_rows if n_valid is None else int(n_valid)
+        if not 0 < n_valid <= n_rows:
+            raise ValueError(
+                f"n_valid must be in [1, {n_rows}] (got {n_valid})"
+            )
+        # static: the pad contract is valid-PREFIX (same as DeviceData), so
+        # the masked mean is exactly a static slice — no traced select ops
+        self.n_valid = min(n_valid, int(batch))
+
+    def record(self, params) -> EvalRecord:
+        n = self.n_valid
+        x, y = self.x_test[:n], self.y_test[:n]
+        logits = self.logits_fn(params, x)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        loss = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+        n_correct = jnp.sum(
+            (jnp.argmax(logits, axis=-1) == y).astype(jnp.float32)
+        )
+        return EvalRecord(
+            loss=jnp.asarray(loss, jnp.float32),
+            acc=n_correct / jnp.float32(n),
+            n_correct=n_correct,
+        )
+
+    def __call__(self, params) -> tuple[jnp.ndarray, jnp.ndarray]:
+        rec = self.record(params)
+        return rec.loss, rec.acc
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ModelTask:
+    """A real-model federated task: everything one ``run_lattice`` /
+    ``run_pofl`` call needs, plus the pytree ↔ flat-D bijection.
+
+    ``eq=False``: tasks compare (and hash) by identity — the engine cache
+    keys on the ``loss_fn``/``eval`` objects this task carries, and
+    :func:`make_model_task` memoizes construction so equal arguments yield
+    the identical object.
+    """
+
+    name: str                 # TASKS entry ("logreg" | "cnn")
+    loss_fn: Callable         # (params pytree, x, y) -> scalar mean NLL
+    logits_fn: Callable       # (params pytree, x) -> logits
+    params0: Any              # dict-pytree initial parameters
+    data: DeviceData          # partitioned (possibly padded) train shards
+    eval: TaskEval            # pad-masked test-set eval
+    dim: int                  # raveled flat model dimension D
+    unravel: Callable         # flat (D,) -> params pytree
+
+    def ravel(self, params) -> jnp.ndarray:
+        """Params pytree -> the engine's flat (D,) float vector."""
+        return ravel_pytree(params)[0]
+
+    def flat_loss_fn(self) -> Callable:
+        """The same loss over a flat (D,) weight vector — the D-space view
+        ``core.local_update`` uses internally for per-device weights."""
+
+        def loss(flat_w, x, y):
+            return self.loss_fn(self.unravel(flat_w), x, y)
+
+        return loss
+
+
+def _build_model_task(
+    kind: str,
+    n_devices: int,
+    partition: str,
+    n_train: int,
+    n_test: int,
+    seed: int,
+    dim: int | None,
+    beta: float,
+    classes_per_device: int,
+    channel_bias: float,
+) -> ModelTask:
+    if kind not in TASKS:
+        raise ValueError(f"unknown task {kind!r}; known: {TASKS}")
+    key = jax.random.PRNGKey(seed)
+    k_train, k_test, k_init = jax.random.split(key, 3)
+    ds = "mnist_like" if kind == "logreg" else "cifar_like"
+    ds_kw: dict = {"dim": dim} if (dim is not None and kind == "logreg") else {}
+    if dim is not None and kind == "cnn":
+        raise ValueError("dim override only supported for the logreg task")
+    if channel_bias:
+        if kind != "cnn":
+            raise ValueError("channel_bias only applies to the cnn task")
+        ds_kw["channel_bias"] = channel_bias
+    x_tr, y_tr = make_classification_dataset(ds, n_train, k_train, **ds_kw)
+    x_te, y_te = make_classification_dataset(ds, n_test, k_test, **ds_kw)
+
+    part_kw: dict = {}
+    if partition == "shards":
+        part_kw["shards_per_device"] = classes_per_device
+    elif partition.startswith("dirichlet"):
+        part_kw["beta"] = beta
+    data = make_partition(
+        partition, np.asarray(x_tr), np.asarray(y_tr), n_devices,
+        seed=seed, **part_kw,
+    )
+
+    if kind == "logreg":
+        params0 = small.init_logreg(k_init, dim=int(x_tr.shape[-1]))
+        loss_fn, logits_fn = small.logreg_loss, small.logreg_logits
+    else:
+        params0 = small.init_cnn(k_init)
+        loss_fn, logits_fn = small.cnn_loss, small.cnn_logits
+
+    flat, unravel = ravel_pytree(params0)
+    return ModelTask(
+        name=kind,
+        loss_fn=loss_fn,
+        logits_fn=logits_fn,
+        params0=params0,
+        data=data,
+        eval=TaskEval(logits_fn, x_te, y_te, batch=n_test),
+        dim=int(flat.size),
+        unravel=unravel,
+    )
+
+
+@functools.lru_cache(maxsize=16)
+def make_model_task(
+    kind: str = "logreg",
+    n_devices: int = 8,
+    partition: str = "shards",
+    n_train: int = 1024,
+    n_test: int = 256,
+    seed: int = 0,
+    dim: int | None = None,
+    beta: float = 0.4,
+    classes_per_device: int = 2,
+    channel_bias: float = 0.0,
+) -> ModelTask:
+    """Build (or return the memoized) :class:`ModelTask`.
+
+    Args:
+      kind: ``"logreg"`` (MNIST-shaped, convex) or ``"cnn"`` (CIFAR-shaped
+        4-conv CNN, non-convex, D ≈ 2.6×10⁵).
+      n_devices: federated devices to partition the train set over.
+      partition: any ``sim.scenario.PARTITIONS`` name; the sized/mixed
+        Dirichlet presets produce PADDED heterogeneous shards
+        (``DeviceData.n_samples``) over the image-shaped features.
+      n_train, n_test: synthetic train/test sample counts.
+      seed: data draw + init seed (class prototypes stay fixed by the
+        dataset's ``proto_seed``, so train/test share one distribution).
+      dim: logreg-only flat feature-dimension override (the D-scaling axis).
+      beta: Dirichlet concentration for the ``dirichlet*`` partitions.
+      classes_per_device: label shards per device for ``"shards"``.
+      channel_bias: cnn-only per-class channel offset strength (see
+        ``data.synthetic.make_classification_dataset``) — gives the GAP-CNN
+        a pooling-survivable class signal so few-round runs show learning.
+
+    Memoized on the full argument tuple: a repeat call is the SAME object,
+    so engines cached against its ``loss_fn``/``eval`` are re-used (zero
+    re-traces on repeat sweeps over a rebuilt task).
+    """
+    if partition not in PARTITIONS:
+        raise ValueError(
+            f"unknown partition {partition!r}; known: {PARTITIONS}"
+        )
+    return _build_model_task(
+        kind, n_devices, partition, n_train, n_test, seed, dim, beta,
+        classes_per_device, channel_bias,
+    )

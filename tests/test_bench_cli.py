@@ -94,3 +94,50 @@ def test_valid_algorithm_axis_passes_guard(monkeypatch):
     benchmarks themselves are stubbed out)."""
     monkeypatch.setattr(bench_run, "_run", lambda *a, **k: None)
     bench_run.main(["--algorithms", "fedavg,fedprox", "--local-steps", "2"])
+
+
+def test_task_cli_guards(capsys, monkeypatch):
+    """--task guards (ISSUE 9 satellite): the CNN's input shape is fixed
+    (no --dim) and it is single-host only; unknown names are parser errors;
+    a well-formed --task cnn passes the guards."""
+    assert _error_code(["--task", "cnn", "--dim", "64"]) == 2
+    assert "--dim only applies to the logreg task" in capsys.readouterr().err
+    assert _error_code(["--task", "cnn", "--hosts", "2"]) == 2
+    assert "single-host" in capsys.readouterr().err
+    assert _error_code(["--task", "mlp"]) == 2
+    monkeypatch.setattr(bench_run, "_run", lambda *a, **k: None)
+    bench_run.main(["--task", "cnn"])  # no SystemExit
+
+
+def test_bench_task_rejects_dim_for_cifar():
+    """Direct (non-CLI) callers get a hard error, not a silent no-op: the
+    CNN's input shape is fixed by its architecture, so a ``dim`` override
+    with ``kind='cifar'`` must raise instead of being dropped on the floor
+    (the CLI guard above only protects ``--task cnn --dim``)."""
+    from benchmarks.common import bench_task
+
+    with pytest.raises(ValueError, match="dim override"):
+        bench_task(dim=64, kind="cifar")
+
+
+def test_gate_key_splits_on_task():
+    """The perf gate never compares across model tasks: a CNN entry with an
+    otherwise-identical topology passes trivially against logreg history
+    (and legacy entries WITHOUT the field only match each other)."""
+    from benchmarks.report import _gate_key, gate_regression
+
+    base = dict(backend="jnp", mesh_shape=None, mesh_devices=1, n_hosts=1,
+                dim=7850, cells=8, n_rounds=10, steady_cells_per_sec=10.0)
+    logreg = dict(base, task="logreg")
+    cnn = dict(base, task="cnn", dim=258634)
+    legacy = dict(base)  # pre-model-task history: no `task` field
+    assert _gate_key(logreg) != _gate_key(cnn)
+    assert _gate_key(legacy) != _gate_key(logreg)
+
+    ok, msg = gate_regression([logreg, dict(cnn, steady_cells_per_sec=0.1)])
+    assert ok and "no prior entry" in msg
+    # same task DOES compare (and a 99% drop fails the gate)
+    ok, _ = gate_regression(
+        [logreg, dict(logreg, steady_cells_per_sec=0.1)]
+    )
+    assert not ok

@@ -46,6 +46,7 @@ from repro.sim import (
     SimState,
     cached_engine,
     make_channel_process,
+    make_model_task,
     run_lattice,
 )
 
@@ -236,7 +237,7 @@ def test_dispatch_error_contracts():
 
 
 # -------------------------------------------- Lemma 2 over multi-step deltas
-def _check_lemma2(algorithm, policy, seed, scenario, local_steps):
+def _check_lemma2(algorithm, policy, seed, scenario, local_steps, task=None):
     """Lemma 2 transfers verbatim from gradients to multi-step deltas:
     conditional on the realized availability mask, BOTH reweighted
     aggregates — the Eq. 37 sequential draw (|S|=1 exact enumeration) and
@@ -244,23 +245,33 @@ def _check_lemma2(algorithm, policy, seed, scenario, local_steps):
     the available-population target Σ_{i avail} (m_i/M)·Δ_i, where Δ_i is
     the REAL K-step delta ``local_update_stage`` uploads. Every algorithm ×
     every policy in POLICY_IDS × dropout/churn × dirichlet_sized shards;
-    exact expectations, no Monte Carlo."""
-    n = N_DEV
+    exact expectations, no Monte Carlo.
+
+    ``task`` (a ``repro.sim.tasks.ModelTask``) swaps the toy regression for a
+    real dict-pytree model — the deltas are then the RAVELED pytree deltas
+    the model-task battery uploads, and the same unbiasedness must hold.
+    """
     key = jax.random.PRNGKey(seed)
     k_batch, k_ch, k_roll = jax.random.split(key, 3)
 
-    data, params = _toy_task(seed % 100000)
+    if task is None:
+        data, params = _toy_task(seed % 100000)
+        loss_fn, dim = _sq_loss, DIM
+    else:
+        data, params = task.data, task.params0
+        loss_fn, dim = task.loss_fn, task.dim
+    n = data.n_devices
     cfg = POFLConfig(
         n_devices=n, n_scheduled=1, batch_size=4,
         local_algorithm=algorithm, local_steps=local_steps, local_lr=0.05,
         fedprox_mu=0.1, feddyn_alpha=0.2,
     )
     delta, _ = local_update_stage(
-        _sq_loss, data, cfg, params, k_batch, t=0,
-        alg_state=init_state(algorithm, n, DIM),
+        loss_fn, data, cfg, params, k_batch, t=0,
+        alg_state=init_state(algorithm, n, dim),
     )
     delta = np.asarray(delta)
-    assert delta.shape == (n, DIM) and np.isfinite(delta).all()
+    assert delta.shape == (n, dim) and np.isfinite(delta).all()
 
     params_ch = (
         {"p_drop": 0.4} if scenario == "dropout"
@@ -277,7 +288,7 @@ def _check_lemma2(algorithm, policy, seed, scenario, local_steps):
     norms = jnp.linalg.norm(jnp.asarray(delta, np.float32), axis=1) + 1e-3
     probs = scheduling.scheduling_probs(
         policy, jnp.asarray(norms), jnp.ones(n), jnp.abs(h), frac,
-        DIM, 0.1, 1.0, 1e-9,
+        dim, 0.1, 1.0, 1e-9,
     )
     masked = probs * avail
     probs_a = safe_div(masked, jnp.sum(masked))
@@ -291,7 +302,7 @@ def _check_lemma2(algorithm, policy, seed, scenario, local_steps):
         return
 
     # Eq. 37 with |S| = 1: exact enumeration over the (available) draw
-    est = np.zeros(DIM)
+    est = np.zeros(dim)
     for i in range(n):
         if float(probs_a[i]) == 0.0:
             continue  # unavailable → never drafted (sampler masks prob 0)
@@ -349,6 +360,23 @@ else:
         algorithm, policy, seed, scenario, local_steps
     ):
         _check_lemma2(algorithm, policy, seed, scenario, local_steps)
+
+
+@pytest.mark.parametrize("policy", sorted(scheduling.POLICY_IDS))
+@pytest.mark.parametrize("algorithm", ALGORITHMS)
+def test_lemma2_unbiased_over_model_task_deltas(algorithm, policy):
+    """Lemma 2 on REAL model deltas: the uploaded (n, D) matrix is now the
+    raveled dict-pytree delta of a logistic-regression task on Dirichlet-sized
+    (padded heterogeneous) shards — the exact vectors the model-task battery
+    feeds the aggregation stage. Unbiasedness must be model-agnostic: the toy
+    quadratic above and the pytree task here share one assertion body."""
+    task = make_model_task(
+        "logreg", n_devices=6, partition="dirichlet_sized",
+        n_train=120, n_test=32, seed=5, dim=16,
+    )
+    assert task.dim == 16 * 10 + 10  # small D keeps the enumeration cheap
+    _check_lemma2(algorithm, policy, seed=7, scenario="dropout",
+                  local_steps=2, task=task)
 
 
 # ------------------------------------------------- seed-pinned goldens

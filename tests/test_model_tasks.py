@@ -1,0 +1,511 @@
+"""Model-task battery (ISSUE 9 tentpole pin): real pytree models as
+first-class lattice tasks.
+
+Contracts pinned here:
+
+  * ``jax.flatten_util.ravel_pytree`` round-trips BOTH task pytrees (logreg
+    dict, 4-conv CNN nested dict) bit-identically, and ``ModelTask.dim``
+    is the raveled length (CNN ≈ 2.6×10⁵ — the paper-scale model).
+  * ``make_model_task`` is memoized: equal arguments return the SAME object,
+    so task identity keys the engine cache and a rebuilt task re-traces ZERO
+    times on a repeat sweep.
+  * Seed-pinned golden accuracy/loss trajectories for the logreg task on
+    Dirichlet-sized (padded, heterogeneous) shards, with MONOTONE-improving
+    accuracy under both scheduling policies; the fused multi-policy program
+    and the ``fuse_policies=False`` fallback are BIT-identical, including
+    the structured ``eval`` subtree.
+  * The ``eval`` record contract (the PR-6 ``diag=None`` trick, third
+    application): a ``TaskEval`` eval_fn grows ``LatticeRecords.eval``
+    (an ``EvalRecord`` of curves whose loss/acc equal the legacy fields
+    bitwise); any other eval_fn — or none — leaves it ``None``, keeping the
+    record pytree EMPTY there and every pinned trajectory unchanged.
+  * Eval masking under padded shards: pad rows poisoned with wrong labels
+    (``data.synthetic.pad_with_wrong_labels``) must not move loss, accuracy,
+    or the correct count when ``n_valid`` marks the true prefix — for both
+    ``TaskEval`` and the legacy ``models.small.make_eval_fn`` seam — and an
+    eval WITHOUT the mask provably shifts (the poison bites).
+  * The CNN task (D = 258 634) runs a multi-policy lattice as ONE trace /
+    ONE compile with monotone-improving pinned accuracy, and (under the
+    sharded-8dev CI job) a 2-D ``(cells, model) = (4, 2)`` mesh reproduces
+    the unsharded run — decisions exact, float channels at the documented
+    ≤1-ULP cross-program tolerance (the PR-7 carve-out).
+
+CNN sizing note: on single-core CPU the conv grads inside the engine's
+``lax.scan`` lower to XLA's naive (non-Eigen) loops — ~0.5 s per train
+sample per round — so the CNN cells here are deliberately tiny (few devices,
+small batches, handful of rounds). The physics is in the logreg battery; the
+CNN cells pin the paper-scale pytree plumbing.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import POFLConfig
+from repro.data.synthetic import (
+    make_classification_dataset,
+    pad_with_wrong_labels,
+)
+from repro.models import small
+from repro.sim import (
+    FUSED_POLICY,
+    EvalRecord,
+    LatticeSpec,
+    TaskEval,
+    cached_engine,
+    make_cell_model_mesh,
+    make_model_task,
+    run_lattice,
+)
+
+N_VISIBLE = len(jax.devices())
+needs_8_devices = pytest.mark.skipif(
+    N_VISIBLE < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8",
+)
+
+_RECORD_FIELDS = ("e_com", "e_var", "grad_norm", "n_scheduled", "loss", "acc")
+_DECISION_FIELDS = ("n_scheduled", "loss", "acc")  # cross-program exact
+_FLOAT_FIELDS = ("e_com", "e_var", "grad_norm")    # cross-program ≤1-ULP
+
+
+# --------------------------------------------------------------------------
+# the logreg battery configuration + seed-pinned goldens
+# --------------------------------------------------------------------------
+# Regenerate (after an INTENTIONAL semantics change only) by running
+# examples/model_tasks.py — it prints exactly these curves.
+
+LOGREG_SPEC = LatticeSpec(
+    policies=("pofl", "channel"), noise_powers=(1e-11,), alphas=(0.1,),
+    seeds=(0,), n_rounds=6, eval_every=2,
+)
+LOGREG_CFG = dict(n_devices=8, n_scheduled=3, batch_size=8, lr0=0.1)
+LOGREG_EVAL_ROUNDS = [0, 2, 4, 5]
+
+GOLDEN_LOGREG = {
+    "pofl": {
+        "acc": [0.265625, 0.65625, 0.78125, 0.8984375],
+        "loss": [2.293933868408203, 2.2775325775146484, 2.2660269737243652, 2.2581968307495117],
+        "n_correct": [68.0, 168.0, 200.0, 230.0],
+    },
+    "channel": {
+        "acc": [0.08203125, 0.26953125, 0.48828125, 0.625],
+        "loss": [2.299790382385254, 2.2923011779785156, 2.283151626586914, 2.276052236557007],
+        "n_correct": [21.0, 69.0, 125.0, 160.0],
+    },
+}
+
+
+def _logreg_task():
+    """The battery task: 8 Dirichlet-sized (PADDED heterogeneous) shards of
+    the 784-dim synthetic MNIST stand-in. Memoized — every test shares the
+    object, and with it the engine-cache entry."""
+    return make_model_task(
+        "logreg", n_devices=8, partition="dirichlet_sized",
+        n_train=640, n_test=256, seed=0,
+    )
+
+
+def _run_logreg(**kw):
+    task = _logreg_task()
+    return task, run_lattice(
+        task.loss_fn, task.data, task.params0, LOGREG_SPEC,
+        base_cfg=POFLConfig(**LOGREG_CFG), eval_fn=kw.pop("eval_fn", task.eval),
+        **kw,
+    )
+
+
+def _fused_counters(task, cfg):
+    """(n_lattice_traces, n_compiles) of the fused-policy engine. Must be
+    read in the SAME cache epoch as the run — conftest's autouse
+    ``_fresh_engine_cache`` clears engines between tests, so the fixtures
+    below capture counters right after their ``run_lattice`` calls."""
+    eng = cached_engine(
+        task.loss_fn, task.data, POFLConfig(policy=FUSED_POLICY, **cfg),
+        eval_fn=task.eval,
+    )
+    return eng.n_lattice_traces, eng.n_compiles
+
+
+@pytest.fixture(scope="module")
+def logreg_recs():
+    task, recs = _run_logreg()
+    counters = _fused_counters(task, LOGREG_CFG)
+    # the repeat sweep over a REBUILT task, still inside this cache epoch
+    task2 = make_model_task(
+        "logreg", n_devices=8, partition="dirichlet_sized",
+        n_train=640, n_test=256, seed=0,
+    )
+    rebuilt_is_same = task2 is task
+    recs2 = run_lattice(
+        task2.loss_fn, task2.data, task2.params0, LOGREG_SPEC,
+        base_cfg=POFLConfig(**LOGREG_CFG), eval_fn=task2.eval,
+    )
+    counters_repeat = _fused_counters(task, LOGREG_CFG)
+    return {
+        "task": task, "recs": recs, "recs_repeat": recs2,
+        "counters": counters, "counters_repeat": counters_repeat,
+        "rebuilt_is_same": rebuilt_is_same,
+    }
+
+
+# --------------------------------------------------------------------------
+# ravel/unravel round-trip
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind,expect_dim", [("logreg", 7850), ("cnn", 258634)])
+def test_ravel_roundtrip_bit_identity(kind, expect_dim):
+    """ravel_pytree is a bijection on both task pytrees: unravel(ravel(p))
+    equals p leaf-for-leaf BITWISE, and dim is the raveled length."""
+    task = make_model_task(
+        kind, n_devices=2, partition="shards", n_train=40, n_test=16, seed=0
+    )
+    assert task.dim == expect_dim
+    flat = task.ravel(task.params0)
+    assert flat.shape == (task.dim,)
+    back = task.unravel(flat)
+    assert (
+        jax.tree_util.tree_structure(back)
+        == jax.tree_util.tree_structure(task.params0)
+    )
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(task.params0)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # and the flat view round-trips too (ravel ∘ unravel = id on (D,))
+    np.testing.assert_array_equal(
+        np.asarray(task.ravel(back)), np.asarray(flat)
+    )
+    # the flat-space loss closure IS the pytree loss at raveled weights
+    x = jnp.asarray(task.data.features[0, :4])
+    y = jnp.asarray(task.data.labels[0, :4])
+    np.testing.assert_array_equal(
+        np.asarray(task.flat_loss_fn()(flat, x, y)),
+        np.asarray(task.loss_fn(task.params0, x, y)),
+    )
+
+
+def test_make_model_task_memoized_identity_and_validation():
+    t1 = make_model_task("logreg", n_devices=4, n_train=80, n_test=16, seed=3)
+    t2 = make_model_task("logreg", n_devices=4, n_train=80, n_test=16, seed=3)
+    assert t1 is t2  # identity → stable engine-cache key
+    t3 = make_model_task("logreg", n_devices=4, n_train=80, n_test=16, seed=4)
+    assert t3 is not t1
+    with pytest.raises(ValueError, match="unknown task"):
+        make_model_task("mlp", n_train=80, n_test=16)
+    with pytest.raises(ValueError, match="unknown partition"):
+        make_model_task("logreg", partition="byzantine", n_train=80, n_test=16)
+    with pytest.raises(ValueError, match="dim override"):
+        make_model_task("cnn", n_train=80, n_test=16, dim=64)
+
+
+# --------------------------------------------------------------------------
+# eval masking under padded test rows (the pad-poisoning regression)
+# --------------------------------------------------------------------------
+
+
+def _poisoned_eval_setup():
+    key = jax.random.PRNGKey(9)
+    k_data, k_init = jax.random.split(key)
+    x, y = make_classification_dataset("mnist_like", 64, k_data)
+    xp, yp = pad_with_wrong_labels(x, y, n_pad=32)
+    params = small.init_logreg(k_init)
+    return x, y, xp, yp, params
+
+
+def test_task_eval_masks_poisoned_pad_rows():
+    """A TaskEval whose n_valid marks the true prefix returns EXACTLY the
+    clean-set record on a pad-poisoned test set; without the mask the
+    poison provably shifts accuracy (the regression this battery pins)."""
+    x, y, xp, yp, params = _poisoned_eval_setup()
+    clean = TaskEval(small.logreg_logits, x, y).record(params)
+    masked = TaskEval(small.logreg_logits, xp, yp, n_valid=64).record(params)
+    for f in EvalRecord._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(masked, f)), np.asarray(getattr(clean, f)),
+            err_msg=f,
+        )
+    # the denominator is pinned: acc ≡ n_correct / n_valid
+    assert float(masked.acc) == float(masked.n_correct) / 64
+    # and an UNMASKED eval counts the poisoned rows — the bug this catches
+    leaky = TaskEval(small.logreg_logits, xp, yp).record(params)
+    assert float(leaky.acc) != float(clean.acc)
+    # __call__ is the legacy (loss, acc) view of the same record
+    loss, acc = TaskEval(small.logreg_logits, xp, yp, n_valid=64)(params)
+    np.testing.assert_array_equal(np.asarray(loss), np.asarray(masked.loss))
+    np.testing.assert_array_equal(np.asarray(acc), np.asarray(masked.acc))
+
+
+def test_legacy_make_eval_fn_masks_poisoned_pad_rows():
+    """The same valid-prefix contract on the historical ``make_eval_fn``
+    seam: n_valid slices the poison away; default None keeps the historical
+    whole-set eval bit-identical."""
+    x, y, xp, yp, params = _poisoned_eval_setup()
+    ev_clean = small.make_eval_fn(small.logreg_logits, small.logreg_loss, x, y)
+    ev_mask = small.make_eval_fn(
+        small.logreg_logits, small.logreg_loss, xp, yp, n_valid=64
+    )
+    l0, a0 = ev_clean(params)
+    l1, a1 = ev_mask(params)
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l0))
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a0))
+    ev_leak = small.make_eval_fn(small.logreg_logits, small.logreg_loss, xp, yp)
+    _, a_leak = ev_leak(params)
+    assert float(a_leak) != float(a0)
+
+
+def test_eval_n_valid_validation():
+    x, y, xp, yp, _ = _poisoned_eval_setup()
+    with pytest.raises(ValueError, match="n_valid"):
+        TaskEval(small.logreg_logits, x, y, n_valid=0)
+    with pytest.raises(ValueError, match="n_valid"):
+        TaskEval(small.logreg_logits, x, y, n_valid=65)
+    with pytest.raises(ValueError, match="n_valid"):
+        small.make_eval_fn(
+            small.logreg_logits, small.logreg_loss, x, y, n_valid=65
+        )
+
+
+# --------------------------------------------------------------------------
+# the logreg golden battery
+# --------------------------------------------------------------------------
+
+
+def test_logreg_task_shards_are_heterogeneous():
+    task = _logreg_task()
+    assert task.data.n_samples is not None  # Dirichlet-sized → padded shards
+    sizes = np.asarray(task.data.n_samples)
+    assert sizes.min() >= 1 and sizes.max() > sizes.min()
+    assert task.dim == 7850
+
+
+def test_logreg_golden_accuracy_curves(logreg_recs):
+    """Seed-pinned accuracy/loss trajectories for both policies, with
+    MONOTONE-improving accuracy (the learning signal the synthetic task is
+    tuned for) and pofl dominating channel-only scheduling."""
+    recs = logreg_recs["recs"]
+    assert recs.eval_rounds.tolist() == LOGREG_EVAL_ROUNDS
+    assert isinstance(recs.eval, EvalRecord)
+    assert recs.eval.acc.shape == (1, 2, 1, 1, 1, len(LOGREG_EVAL_ROUNDS))
+    for pi, pol in enumerate(LOGREG_SPEC.policies):
+        exp = GOLDEN_LOGREG[pol]
+        acc = np.asarray(recs.eval.acc[0, pi, 0, 0, 0])
+        np.testing.assert_allclose(acc, exp["acc"], rtol=1e-5, err_msg=pol)
+        np.testing.assert_allclose(
+            np.asarray(recs.eval.loss[0, pi, 0, 0, 0]), exp["loss"],
+            rtol=1e-5, err_msg=pol,
+        )
+        # n_correct is a COUNT: pin it exactly (the accuracy denominator)
+        np.testing.assert_array_equal(
+            np.asarray(recs.eval.n_correct[0, pi, 0, 0, 0]),
+            np.asarray(exp["n_correct"], np.float32), err_msg=pol,
+        )
+        assert np.all(np.diff(acc) >= 0) and acc[-1] > acc[0], pol
+        assert np.all(np.diff(np.asarray(exp["loss"])) < 0), pol
+    # gradient-importance-aware scheduling beats channel-only at every point
+    assert np.all(
+        np.asarray(recs.eval.acc[0, 0, 0, 0, 0])
+        > np.asarray(recs.eval.acc[0, 1, 0, 0, 0])
+    )
+
+
+def test_eval_subtree_matches_legacy_fields(logreg_recs):
+    """The structured subtree and the always-present loss/acc fields are the
+    SAME computation: bitwise equal curves, and acc ≡ n_correct / n_valid
+    (no pad rows of the padded test set leak into the denominator)."""
+    task, recs = logreg_recs["task"], logreg_recs["recs"]
+    np.testing.assert_array_equal(recs.eval.acc, recs.acc)
+    np.testing.assert_array_equal(recs.eval.loss, recs.loss)
+    np.testing.assert_array_equal(
+        recs.eval.acc, recs.eval.n_correct / np.float32(task.eval.n_valid)
+    )
+
+
+def test_fused_matches_fallback_bitwise(logreg_recs):
+    """fuse_policies=False (per-policy compiles, constant policy axis) is
+    BIT-identical to the fused multi-policy program — eval subtree included
+    (same contract the synthetic battery pins in test_fused_lattice.py)."""
+    recs = logreg_recs["recs"]
+    _, recs_fb = _run_logreg(fuse_policies=False)
+    for f in _RECORD_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(recs, f)), np.asarray(getattr(recs_fb, f)),
+            err_msg=f,
+        )
+    for f in EvalRecord._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(recs.eval, f)),
+            np.asarray(getattr(recs_fb.eval, f)), err_msg=f,
+        )
+
+
+def test_repeat_sweep_zero_retraces_one_compile(logreg_recs):
+    """make_model_task memoization closes the retrace loop: a REBUILT task
+    (same arguments) is the same object, so the repeat sweep hits the same
+    engine — n_lattice_traces and n_compiles stay at 1, records bitwise.
+    (Counters were captured inside the fixture's cache epoch; see
+    ``_fused_counters``.)"""
+    assert logreg_recs["counters"] == (1, 1)
+    assert logreg_recs["rebuilt_is_same"]
+    assert logreg_recs["counters_repeat"] == (1, 1)
+    recs, recs2 = logreg_recs["recs"], logreg_recs["recs_repeat"]
+    for f in EvalRecord._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(recs.eval, f)),
+            np.asarray(getattr(recs2.eval, f)), err_msg=f,
+        )
+
+
+def test_eval_off_and_legacy_eval_keep_subtree_none(logreg_recs):
+    """The OFF-by-default contract: no eval_fn → ``eval is None`` (empty
+    record pytree, E = 0); a legacy non-TaskEval eval_fn → curves present
+    but STILL ``eval is None`` — only a TaskEval grows the subtree. Either
+    way the training trajectory is unperturbed (eval never touches the PRNG
+    chain): decisions match the TaskEval run exactly."""
+    task, recs = logreg_recs["task"], logreg_recs["recs"]
+    _, recs_off = _run_logreg(eval_fn=None)
+    assert recs_off.eval is None
+    assert recs_off.loss.shape[-1] == 0 and recs_off.eval_rounds.size == 0
+    np.testing.assert_array_equal(recs_off.n_scheduled, recs.n_scheduled)
+    np.testing.assert_array_equal(recs_off.e_com, recs.e_com)
+
+    legacy_ev = small.make_eval_fn(
+        task.logits_fn, task.loss_fn, task.eval.x_test, task.eval.y_test,
+        batch=256,
+    )
+    _, recs_leg = _run_logreg(eval_fn=legacy_ev)
+    assert recs_leg.eval is None  # only a TaskEval grows the subtree
+    assert recs_leg.loss.shape[-1] == len(LOGREG_EVAL_ROUNDS)
+    np.testing.assert_array_equal(recs_leg.n_scheduled, recs.n_scheduled)
+    # same eval semantics, different reduction program → ≤1-ULP tolerance
+    np.testing.assert_allclose(recs_leg.acc, recs.acc, rtol=1e-6)
+    np.testing.assert_allclose(recs_leg.loss, recs.loss, rtol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# the CNN battery: the paper-scale pytree (D = 258 634) on the lattice
+# --------------------------------------------------------------------------
+# Deliberately tiny cells (see the module docstring's CNN sizing note):
+# 2 policies × 4 devices × 3 rounds ≈ 1 min on single-core CPU.
+# channel_bias=1.0 gives the GAP-CNN a pooling-survivable class signal so
+# the few-round curves show real learning. Regenerate the goldens with
+# examples/model_tasks.py --task cnn.
+
+CNN_SPEC = LatticeSpec(
+    policies=("pofl", "channel"), noise_powers=(1e-11,), alphas=(0.1,),
+    seeds=(0,), n_rounds=3, eval_every=2,
+)
+CNN_CFG = dict(n_devices=4, n_scheduled=2, batch_size=4, lr0=0.1)
+CNN_EVAL_ROUNDS = [0, 2]
+
+GOLDEN_CNN = {
+    "pofl": {
+        "acc": [0.0833333358168602, 0.5],
+        "loss": [2.979822874069214, 1.9893426895141602],
+        "n_correct": [2.0, 12.0],
+    },
+    "channel": {
+        "acc": [0.0416666679084301, 0.1666666716337204],
+        "loss": [2.968735456466675, 2.5682239532470703],
+        "n_correct": [1.0, 4.0],
+    },
+}
+
+
+def _cnn_task():
+    return make_model_task(
+        "cnn", n_devices=4, partition="dirichlet_sized",
+        n_train=64, n_test=24, seed=0, channel_bias=1.0,
+    )
+
+
+def _run_cnn(**kw):
+    task = _cnn_task()
+    return task, run_lattice(
+        task.loss_fn, task.data, task.params0, CNN_SPEC,
+        base_cfg=POFLConfig(**CNN_CFG), eval_fn=task.eval, **kw,
+    )
+
+
+@pytest.fixture(scope="module")
+def cnn_recs():
+    task, recs = _run_cnn()
+    return {"task": task, "recs": recs,
+            "counters": _fused_counters(task, CNN_CFG)}
+
+
+def test_cnn_lattice_one_trace_one_compile_monotone_goldens(cnn_recs):
+    """The PR acceptance pin: a multi-policy lattice over the full 4-conv
+    CNN pytree (D = 258 634 raveled params) is ONE trace / ONE compile, and
+    the seed-pinned accuracy curves improve monotonically under both
+    policies with gradient-importance-aware scheduling dominating."""
+    task, recs = cnn_recs["task"], cnn_recs["recs"]
+    assert task.dim == 258634
+    assert cnn_recs["counters"] == (1, 1)
+
+    assert recs.eval_rounds.tolist() == CNN_EVAL_ROUNDS
+    assert isinstance(recs.eval, EvalRecord)
+    for pi, pol in enumerate(CNN_SPEC.policies):
+        exp = GOLDEN_CNN[pol]
+        acc = np.asarray(recs.eval.acc[0, pi, 0, 0, 0])
+        np.testing.assert_allclose(acc, exp["acc"], rtol=1e-5, err_msg=pol)
+        np.testing.assert_allclose(
+            np.asarray(recs.eval.loss[0, pi, 0, 0, 0]), exp["loss"],
+            rtol=1e-5, err_msg=pol,
+        )
+        np.testing.assert_array_equal(
+            np.asarray(recs.eval.n_correct[0, pi, 0, 0, 0]),
+            np.asarray(exp["n_correct"], np.float32), err_msg=pol,
+        )
+        assert np.all(np.diff(acc) > 0), pol
+        assert np.all(np.diff(np.asarray(exp["loss"])) < 0), pol
+    assert np.all(
+        np.asarray(recs.eval.acc[0, 0, 0, 0, 0])
+        > np.asarray(recs.eval.acc[0, 1, 0, 0, 0])
+    )
+    # the subtree and legacy fields remain one computation at CNN scale
+    np.testing.assert_array_equal(recs.eval.acc, recs.acc)
+    np.testing.assert_array_equal(recs.eval.loss, recs.loss)
+
+
+@needs_8_devices
+def test_cnn_sharded_2d_mesh_parity(cnn_recs):
+    """The (cells, model) = (4, 2) mesh shards the raveled CNN dimension
+    (D_local ≈ 1.3×10⁵ per model shard) and reproduces the unsharded run:
+    decisions exact, float channels within the documented ≤1-ULP
+    cross-program reduction tolerance (the PR-7 carve-out)."""
+    recs = cnn_recs["recs"]
+    _, sharded = _run_cnn(mesh=make_cell_model_mesh(4, 2))
+    np.testing.assert_array_equal(sharded.eval_rounds, recs.eval_rounds)
+    for f in _DECISION_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(sharded, f)), np.asarray(getattr(recs, f)),
+            err_msg=f,
+        )
+    for f in _FLOAT_FIELDS:
+        np.testing.assert_allclose(
+            np.asarray(getattr(sharded, f)), np.asarray(getattr(recs, f)),
+            rtol=1e-5, atol=1e-12, err_msg=f,
+        )
+    for f in EvalRecord._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(sharded.eval, f)),
+            np.asarray(getattr(recs.eval, f)), err_msg=f,
+        )
+
+
+def test_run_with_history_takes_task_eval():
+    """The chunked run_pofl driver accepts a TaskEval as its host-side
+    eval_fn (the legacy (loss, acc) __call__ seam) and the history improves."""
+    task = _logreg_task()
+    cfg = POFLConfig(policy="pofl", **LOGREG_CFG)
+    eng = cached_engine(task.loss_fn, task.data, cfg, eval_fn=task.eval)
+    _, hist = eng.run_with_history(
+        task.params0, n_rounds=6, eval_fn=task.eval, eval_every=2, seed=0
+    )
+    assert hist.test_round == LOGREG_EVAL_ROUNDS
+    acc = np.asarray(hist.test_acc)
+    assert np.all(np.diff(acc) >= 0) and acc[-1] > acc[0]

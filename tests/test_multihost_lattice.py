@@ -144,6 +144,27 @@ def test_records_npz_roundtrip(tmp_path):
     _assert_records_equal(recs, loaded)
 
 
+def test_records_npz_contract_drops_optional_subtrees(tmp_path):
+    """save_records covers the FLAT array fields only: a records object
+    carrying the optional ``eval``/``diag`` pytree subtrees must still save
+    readable under np.load's ``allow_pickle=False`` default (a ``None``
+    subtree would pickle as an object array; an ``EvalRecord`` would
+    collapse into a bare ndarray) and load back with both subtrees ``None``
+    — they travel via the in-process/obs paths, never the parity npz."""
+    from repro.sim.tasks import EvalRecord
+
+    recs, meta = run_parity_lattice(mesh=None, n_rounds=2)
+    curve = np.zeros_like(np.asarray(recs.acc))
+    carrying = recs._replace(
+        eval=EvalRecord(loss=curve, acc=curve, n_correct=curve)
+    )
+    path = str(tmp_path / "recs_eval.npz")
+    save_records(path, carrying, meta)
+    loaded, _ = load_records(path)
+    assert loaded.eval is None and loaded.diag is None
+    _assert_records_equal(recs, loaded)
+
+
 def test_worker_env_contract_and_device_pool():
     base = {"XLA_FLAGS": "--xla_force_host_platform_device_count=8 --xla_foo=1",
             "PYTHONPATH": "/elsewhere"}
