@@ -101,6 +101,8 @@ def sweep_lattice(
     mesh=None,
     algorithms=("fedavg",),
     local_steps: int = 1,
+    checkpoint_every: int | None = None,
+    checkpoint_dir: str | None = None,
 ) -> LatticeRecords:
     """Run a full (algorithms × policies × noise_powers × alphas × trials)
     lattice.
@@ -111,6 +113,12 @@ def sweep_lattice(
     (``repro.core.local_update.ALGORITHMS`` names) and ``local_steps`` select
     the local-update axis; the defaults keep the historical single-gradient
     fedavg round bit-identically.
+
+    ``checkpoint_every`` routes the sweep through the resilient chunked
+    runner (``repro.sim.resilience.run_lattice_checkpointed``) instead,
+    persisting the carry every that-many rounds under ``checkpoint_dir`` —
+    the ``--checkpoint-every`` bench axis measuring checkpoint overhead.
+    Single-host only (the chunked runner owns its own placement).
     """
     spec = LatticeSpec(
         policies=tuple(policies),
@@ -128,6 +136,19 @@ def sweep_lattice(
         backend=backend,
         local_steps=local_steps,
     )
+    if checkpoint_every is not None:
+        if mesh is not None:
+            raise ValueError("checkpoint_every and mesh are mutually exclusive")
+        from repro.sim.resilience import run_lattice_checkpointed
+
+        return run_lattice_checkpointed(
+            task.loss_fn, task.data, task.params0, spec,
+            base_cfg=base_cfg,
+            eval_fn=task.eval_fn,
+            channel_cfg=ChannelConfig(n_devices=task.data.n_devices),
+            checkpoint_every=checkpoint_every,
+            checkpoint_dir=checkpoint_dir,
+        )
     return run_lattice(
         task.loss_fn, task.data, task.params0, spec,
         base_cfg=base_cfg,

@@ -213,6 +213,7 @@ def _bench_sim(
     algorithms: tuple = ("fedavg",),
     local_steps: int = 1,
     task_name: str = "logreg",
+    checkpoint_every: int = 0,
 ):
     """Reduced fig4-style sweep (5 policies × 3 trials) through sim.lattice
     vs the cached-engine one-run_pofl-per-cell loop → BENCH_sim.json.
@@ -302,6 +303,38 @@ def _bench_sim(
         mem_stats = lattice_memory_stats()
     t_cold = timings["cold_seconds"]
     t_steady = timings["steady_seconds"]
+    # --checkpoint-every: additionally time the SAME sweep through the
+    # resilient chunked runner (repro.sim.resilience) — its own chunk
+    # programs, so a cold and a warm pass — and record the checkpoint
+    # overhead next to the primary timings. The primary (unchunked)
+    # steady_cells_per_sec is untouched, so perf-gate keys stay comparable.
+    ckpt_payload = {}
+    if checkpoint_every:
+        import tempfile
+
+        from benchmarks.common import sweep_lattice
+
+        ck_kw = dict(
+            BENCH_SWEEP_KW, policies=POLICIES, backend=backend,
+            algorithms=algorithms, local_steps=local_steps,
+            checkpoint_every=checkpoint_every,
+        )
+        with tempfile.TemporaryDirectory() as td:
+            # distinct dirs: the warm pass must re-run, not resume the cold
+            _, t_ck_cold = timed(
+                sweep_lattice, task,
+                checkpoint_dir=os.path.join(td, "cold"), **ck_kw,
+            )
+            _, t_ck = timed(
+                sweep_lattice, task,
+                checkpoint_dir=os.path.join(td, "warm"), **ck_kw,
+            )
+        ckpt_payload = {
+            "checkpoint_every": checkpoint_every,
+            "checkpointed_seconds": round(t_ck, 3),
+            "checkpointed_cold_seconds": round(t_ck_cold, 3),
+            "checkpoint_overhead": round(t_ck / t_steady - 1.0, 3),
+        }
     reset_engine_cache()
     # the loop baseline runs the IDENTICAL workload (same algorithms ×
     # policies × trials grid, same local_steps) so `speedup` stays honest
@@ -338,6 +371,7 @@ def _bench_sim(
         "per_host_cells_per_sec": round(cells / t_steady / n_hosts, 3),
         "engine_cache_hits": lattice_cache["hits"],
         "engine_cache_misses": lattice_cache["misses"],
+        **ckpt_payload,
     }
     out_path = os.path.join(os.path.dirname(__file__), "..", "BENCH_sim.json")
     with open(os.path.abspath(out_path), "w") as f:
@@ -394,6 +428,13 @@ def main(argv: list[str] | None = None) -> None:
         "as `dim`)",
     )
     parser.add_argument(
+        "--checkpoint-every", type=int, default=0, metavar="K",
+        help="additionally time the sim-lattice sweep through the resilient "
+        "chunked runner (repro.sim.resilience), checkpointing the carry "
+        "every K rounds; records checkpointed_seconds/checkpoint_overhead "
+        "in BENCH_sim.json (0 = off; single-host, unsharded only)",
+    )
+    parser.add_argument(
         "--sim-only", action="store_true",
         help="run only the sim-lattice bench (the perf-gate CI step): "
         "writes BENCH_sim.json + BENCH_history.jsonl and skips the "
@@ -427,6 +468,10 @@ def main(argv: list[str] | None = None) -> None:
         parser.error(f"--local-steps must be >= 1 (got {args.local_steps})")
     if args.hosts > 1 and (algorithms != ("fedavg",) or args.local_steps != 1):
         parser.error("--algorithms/--local-steps are single-host only")
+    if args.checkpoint_every < 0:
+        parser.error(f"--checkpoint-every must be >= 0 (got {args.checkpoint_every})")
+    if args.checkpoint_every and args.hosts > 1:
+        parser.error("--checkpoint-every is single-host only")
     try:
         if "x" in args.mesh:
             cells_s, model_s = args.mesh.split("x")
@@ -447,6 +492,11 @@ def main(argv: list[str] | None = None) -> None:
         parser.error("--task cnn is single-host only")
     if model_shards > 1 and args.hosts > 1:
         parser.error("--mesh CxM (model sharding) is single-host only")
+    if args.checkpoint_every and mesh_total:
+        parser.error(
+            "--checkpoint-every is unsharded only (the chunked runner owns "
+            "its own placement); drop --mesh"
+        )
     if args.hosts == 1 and mesh_total:
         import jax
 
@@ -480,7 +530,7 @@ def main(argv: list[str] | None = None) -> None:
             backend=args.backend, mesh_devices=mesh_total,
             n_hosts=args.hosts, model_shards=model_shards, dim=args.dim,
             algorithms=algorithms, local_steps=args.local_steps,
-            task_name=args.task,
+            task_name=args.task, checkpoint_every=args.checkpoint_every,
         ),
         lambda d: (
             "steady_cells/s=%.2f cold_cells/s=%.2f compile_s=%.1f "

@@ -5,6 +5,15 @@ Flat key scheme: pytree paths are serialized as '/'-joined strings
 gathered to host before writing (fully-addressable process assumption —
 single-controller CPU/TPU-pod runtime); restore re-shards by placing
 leaves onto the shardings of a template pytree when given.
+
+Writes are CRASH-ATOMIC: the npz is fully written (and fsynced) to a
+tmp file in the target directory, the ``.meta.json`` sidecar is published
+first, and only then is the npz renamed into place with ``os.replace`` —
+the npz is the COMMIT POINT. A process killed mid-save can therefore never
+leave a torn npz at the published path (``sim.resilience`` discovers
+checkpoints by npz presence, so a visible checkpoint always has both a
+complete npz and its metadata), and a truncated file written by any other
+means fails ``load_pytree`` loudly instead of half-reading.
 """
 from __future__ import annotations
 
@@ -14,6 +23,14 @@ from typing import Any, Optional
 
 import jax
 import numpy as np
+
+
+def _paths(path: str) -> tuple[str, str]:
+    """Normalize ``path`` (with or without the ``.npz`` suffix) to the
+    published ``(npz_path, meta_path)`` pair — one rule for save and
+    restore, so the sidecar is always found where it was written."""
+    base = path[:-4] if path.endswith(".npz") else path
+    return base + ".npz", base + ".meta.json"
 
 
 def _flatten_with_paths(tree) -> dict:
@@ -35,18 +52,43 @@ def _path_str(p) -> str:
 
 
 def save_pytree(path: str, tree, metadata: Optional[dict] = None) -> None:
+    """Atomically persist ``tree`` (and optional ``metadata``) at ``path``.
+
+    Write order is the crash-safety contract: (1) the full npz streams into
+    a same-directory tmp file and is fsynced, (2) the ``.meta.json`` sidecar
+    is atomically published, (3) ``os.replace`` commits the npz. A kill at
+    any point leaves either no published npz (steps 1-2: at worst a stale
+    ``*.tmp-<pid>`` file and an orphan sidecar, both harmless) or a complete
+    checkpoint — never a torn npz under the published name.
+    """
     flat = _flatten_with_paths(tree)
-    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    np.savez(path, **flat)
-    if metadata is not None:
-        with open(path + ".meta.json", "w") as f:
-            json.dump(metadata, f)
+    npz_path, meta_path = _paths(path)
+    os.makedirs(os.path.dirname(os.path.abspath(npz_path)), exist_ok=True)
+    tmp = f"{npz_path}.tmp-{os.getpid()}"
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **flat)
+            f.flush()
+            os.fsync(f.fileno())
+        if metadata is not None:
+            meta_tmp = f"{meta_path}.tmp-{os.getpid()}"
+            with open(meta_tmp, "w") as f:
+                json.dump(metadata, f)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(meta_tmp, meta_path)
+        os.replace(tmp, npz_path)
+    except BaseException:
+        # never leave the tmp behind on a failed save (a crash can — it is
+        # ignored by discovery either way)
+        if os.path.exists(tmp):
+            os.remove(tmp)
+        raise
 
 
 def load_pytree(path: str, template) -> Any:
     """Restore into the structure (and shardings, if any) of ``template``."""
-    if not path.endswith(".npz"):
-        path = path + ".npz"
+    path = _paths(path)[0]
     data = np.load(path)
     leaves_p, treedef = jax.tree_util.tree_flatten_with_path(template)
     out = []
@@ -73,8 +115,7 @@ def restore(path: str, params_template, opt_template=None):
     if opt_template is not None:
         state_t["opt_state"] = opt_template
     state = load_pytree(path, state_t)
-    meta_path = (path if path.endswith(".npz") else path + ".npz") + ".meta.json"
-    meta_path = meta_path.replace(".npz.meta.json", ".meta.json")
+    meta_path = _paths(path)[1]
     step = 0
     if os.path.exists(meta_path):
         with open(meta_path) as f:

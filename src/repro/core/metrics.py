@@ -20,6 +20,29 @@ class RoundMetrics(NamedTuple):
     n_scheduled: jnp.ndarray   # realized |S^t|
     a_scalar: jnp.ndarray      # denoise scalar a^t (Lemma 1)
     diag: Any = None           # RoundDiagnostics when ObsConfig asks, else None
+    health: Any = None         # RoundHealth when POFLConfig.on_nonfinite="skip"
+
+
+class RoundHealth(NamedTuple):
+    """The non-finite quarantine taps (``POFLConfig.on_nonfinite="skip"``).
+
+    Fourth application of the ``diag=None`` empty-subtree trick: carried as an
+    optional record subtree that is ``None`` — an EMPTY pytree, zero new ops,
+    every pinned trajectory bitwise unchanged — under the default
+    ``on_nonfinite="propagate"``. Under ``"skip"`` it counts, per round, a 0/1
+    "the aggregate ŷ^t contained a non-finite entry and the round was
+    quarantined" flag (the engine's scan stacks it to a (T,) curve; the
+    lattice to the full grid).
+    """
+
+    nonfinite: jnp.ndarray  # 1.0 when ŷ^t had any non-finite entry, else 0.0
+
+
+def zero_round_health() -> RoundHealth:
+    """The inactive-branch all-zero health record (mirrors
+    :meth:`RoundHealth`'s structure exactly — the engine's padded-scan
+    ``lax.cond`` needs both branches identical)."""
+    return RoundHealth(nonfinite=jnp.zeros((), jnp.float32))
 
 
 def bound_objective(e_com: jnp.ndarray, e_var: jnp.ndarray, alpha: float) -> jnp.ndarray:

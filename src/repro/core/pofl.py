@@ -61,7 +61,7 @@ from repro.core.local_update import (  # noqa: F401  (re-exported API)
     local_gradient_stage,
     local_update_stage,
 )
-from repro.core.metrics import RoundMetrics, diagnostics_taps
+from repro.core.metrics import RoundHealth, RoundMetrics, diagnostics_taps
 from repro.core.numerics import safe_div
 
 
@@ -250,6 +250,13 @@ class POFLConfig:
     local_lr: float | None = None    # local step size η_l; None → cfg.lr(t)
     fedprox_mu: float = 0.0          # FedProx proximal coefficient μ
     feddyn_alpha: float = 0.1        # FedDyn dynamic-regularizer coefficient
+    # -- non-finite quarantine (sim.resilience) -------------------------
+    # "propagate" (default): NaN/Inf aggregates flow through untouched — the
+    # seed's exact program, zero new ops. "skip": a per-round finite-ness
+    # guard quarantines any round whose aggregate ŷ^t contains a non-finite
+    # entry (params and AlgState hold their previous values via lax.cond)
+    # and counts it on the RoundMetrics.health subtree.
+    on_nonfinite: str = "propagate"
     seed: int = 0
 
     def lr(self, t: jnp.ndarray) -> jnp.ndarray:
@@ -528,6 +535,7 @@ def round_algorithm(
     model_shard: ModelShard | None = None,
     alg_state: AlgState | None = None,
     algorithm_id: jnp.ndarray | None = None,
+    fault_round: jnp.ndarray | None = None,
 ) -> tuple[Any, AlgState | None, RoundMetrics]:
     """Steps 2–6 of Algorithm 1 for one round, given this round's channel ``h``.
 
@@ -565,6 +573,22 @@ def round_algorithm(
     ``"model"`` axis > 1) reroutes the D-elementwise hot path — stats,
     aggregation, params carry — through model-sharded ``shard_map`` blocks;
     ``None`` keeps the unsharded trace exactly.
+
+    ``fault_round`` (traced int32 scalar, or ``None`` — the default and the
+    only value every pre-existing path passes) is the deterministic
+    fault-injection hook of ``repro.sim.resilience``: when the current round
+    ``t`` equals it, the aggregate ŷ^t is poisoned to NaN *as a value select*
+    — the fault point is input data, not trace structure, so a lattice with
+    one poisoned cell runs the SAME compiled program as an unpoisoned one
+    (``fault_round = -1`` never fires) and every other cell's lanes are
+    bitwise unchanged. ``cfg.on_nonfinite`` decides what happens next:
+    ``"propagate"`` (default) lets the NaN flow — the seed's exact program
+    when ``fault_round`` is also None — while ``"skip"`` quarantines any
+    non-finite aggregate (injected or organic): ``new_params`` and the
+    AlgState hold their previous values via ``lax.cond`` and the round is
+    counted on the returned :class:`~repro.core.metrics.RoundHealth` subtree
+    (``metrics.health``; ``None`` under "propagate" — the empty-subtree
+    trick, fourth application).
     """
     noise_power = cfg.noise_power if noise_power is None else noise_power
     alpha = cfg.alpha if alpha is None else alpha
@@ -583,6 +607,7 @@ def round_algorithm(
         )
 
     # -- step 2: local updates (K SGD steps per device → delta) -------
+    alg_state_in = alg_state  # pre-round state (the quarantine hold value)
     g, alg_state = local_update_stage(
         loss_fn, data, cfg, params, k_batch, t,
         alg_state=alg_state, algorithm_id=algorithm_id,
@@ -615,10 +640,42 @@ def round_algorithm(
         # ŷ comes back padded (its tail is sqrt(V_g)/a·0 + M_g, not zero) —
         # slice to the true D before the update and the norm tap
         y_hat = y_hat[:dim]
+    if fault_round is not None:
+        # deterministic NaN injection: a value select on the traced fault
+        # point, so the no-fault program (fault_round = -1) is the same
+        # executable and every unpoisoned lane is bitwise unchanged
+        y_hat = jnp.where(
+            t == jnp.asarray(fault_round, jnp.float32),
+            jnp.full_like(y_hat, jnp.nan),
+            y_hat,
+        )
     # e_var on the padded g is exact: padded columns are zero in every term
     e_var = scheduling.global_update_variance(g, rho, mask, data_frac, cfg.n_scheduled)
 
     new_params = apply_update_stage(cfg, params, y_hat, t, model_shard=model_shard)
+    health = None
+    if cfg.on_nonfinite == "skip":
+        # quarantine: a non-finite aggregate (injected or organic) must not
+        # poison the carry — hold BOTH the params and the local-algorithm
+        # state, i.e. the round never happened for the model. The PRNG chain
+        # (engine carry) is untouched either way, so quarantined sweeps stay
+        # deterministic.
+        finite = jnp.all(jnp.isfinite(y_hat))
+        new_params, alg_state = jax.lax.cond(
+            finite,
+            lambda upd, _prev: upd,
+            lambda _upd, prev: prev,
+            (new_params, alg_state),
+            (params, alg_state_in),
+        )
+        health = RoundHealth(
+            nonfinite=(~finite).astype(jnp.float32)
+        )
+    elif cfg.on_nonfinite != "propagate":
+        raise ValueError(
+            f"POFLConfig.on_nonfinite must be 'propagate' or 'skip', "
+            f"got {cfg.on_nonfinite!r}"
+        )
 
     a = aircomp.denoise_scalar(rho, h_abs, mask, cfg.tx_power)
     diag = None
@@ -636,6 +693,7 @@ def round_algorithm(
         n_scheduled=jnp.sum(mask),
         a_scalar=a,
         diag=diag,
+        health=health,
     )
     return new_params, alg_state, metrics
 

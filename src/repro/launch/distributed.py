@@ -63,14 +63,15 @@ from repro.sim.multihost import (
 )
 
 # the canonical per-round ARRAY record fields (one source: the engine's
-# RoundRecord, minus the optional pytree subtrees `diag` and `eval` — the
-# npz parity serialization and cross-process comparisons cover the flat
-# arrays only; obs diagnostics travel through the REPRO_OBS_DIR JSONL sink
-# and eval curves through the in-process LatticeRecords/run_with_history
-# paths instead. np.savez would pickle a None subtree as an object array
-# (unreadable under allow_pickle=False) and collapse a NamedTuple leaf.)
+# RoundRecord, minus the optional pytree subtrees `diag`, `eval` and
+# `health` — the npz parity serialization and cross-process comparisons
+# cover the flat arrays only; obs diagnostics travel through the
+# REPRO_OBS_DIR JSONL sink and eval curves through the in-process
+# LatticeRecords/run_with_history paths instead. np.savez would pickle a
+# None subtree as an object array (unreadable under allow_pickle=False)
+# and collapse a NamedTuple leaf.)
 _RECORD_FIELDS = tuple(
-    f for f in RoundRecord._fields if f not in ("diag", "eval")
+    f for f in RoundRecord._fields if f not in ("diag", "eval", "health")
 )
 _DEVICE_COUNT_FLAG = re.compile(r"--xla_force_host_platform_device_count=\S+\s*")
 
@@ -161,28 +162,38 @@ def spawn_local(
         for env, f in zip(envs, outs)
     ]
     deadline = time.monotonic() + timeout
-    killed = set()
+    deadline_killed = set()
     try:
-        for pid, proc in enumerate(procs):
+        for rank, proc in enumerate(procs):
             try:
                 proc.wait(timeout=max(0.0, deadline - time.monotonic()))
             except subprocess.TimeoutExpired:
                 proc.kill()
                 proc.wait()
-                killed.add(pid)
+                # a straggler can win the race and exit cleanly between the
+                # timeout firing and the kill landing (kill on a reaped pid
+                # is a no-op): only report a deadline kill when the recorded
+                # returncode actually reflects one — never rewrite a real
+                # exit status to -9
+                if proc.returncode != 0:
+                    deadline_killed.add(rank)
     finally:
-        for proc in procs:
+        # ranks past the one that raised (or that an exception skipped) are
+        # stragglers too: same kill, same bookkeeping
+        for rank, proc in enumerate(procs):
             if proc.poll() is None:
                 proc.kill()
                 proc.wait()
+                deadline_killed.add(rank)
     results = []
-    for pid, (proc, f) in enumerate(zip(procs, outs)):
+    for rank, (proc, f) in enumerate(zip(procs, outs)):
         f.seek(0)
         out = f.read()
         f.close()
-        if pid in killed:
-            out += f"\n[launcher] killed at the {timeout}s deadline"
-        results.append(WorkerResult(pid, -9 if pid in killed else proc.returncode, out))
+        rc = proc.returncode if proc.returncode is not None else -9
+        if rank in deadline_killed:
+            out += f"\n[launcher] killed at the {timeout}s deadline (rc={rc})"
+        results.append(WorkerResult(rank, rc, out))
     return results
 
 
@@ -204,6 +215,197 @@ def run_workers(
         )
         raise RuntimeError(
             f"{len(failed)}/{len(results)} distributed workers failed:\n{tails}"
+        )
+    return results
+
+
+# --------------------------------------------------------------------------
+# supervised workers: per-rank restart with capped exponential backoff
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SupervisorConfig:
+    """Per-rank supervision policy for :func:`supervise_workers`.
+
+    ``max_restarts`` bounds restarts PER RANK (so one flapping rank cannot
+    consume the whole budget of a healthy cohort); restart ``i`` waits
+    ``min(backoff_base * 2**(i-1), backoff_cap)`` seconds first.
+    ``liveness_timeout`` (seconds; None disables) declares a silent rank
+    dead when its obs event files under the shared ``REPRO_OBS_DIR`` go
+    that long without an mtime update — the chunked resilient workload
+    heartbeats once per checkpoint chunk, so a wedged rank is killed and
+    restarted instead of holding the topology to the absolute deadline."""
+
+    max_restarts: int = 2
+    backoff_base: float = 0.25
+    backoff_cap: float = 8.0
+    liveness_timeout: float | None = None
+    poll_interval: float = 0.2
+
+
+def supervise_workers(
+    worker_argv: list[str],
+    n_procs: int = 2,
+    devices_per_proc: int = 1,
+    timeout: float = 900.0,
+    supervisor: SupervisorConfig | None = None,
+    base_env: dict | None = None,
+) -> list[WorkerResult]:
+    """Run ``worker_argv`` as ``n_procs`` INDEPENDENT local workers, each
+    under per-rank supervision: a rank that exits nonzero (crash, injected
+    ``REPRO_FAULT_KILL``) or goes heartbeat-silent is restarted with capped
+    exponential backoff, up to ``max_restarts`` times, and resumes from its
+    own checkpoints. Replaces :func:`spawn_local`'s single absolute deadline
+    for workloads that can re-enter (the deadline still exists as the outer
+    backstop).
+
+    UNLIKE :func:`spawn_local`, workers here must not rely on each other
+    (no ``jax.distributed`` collectives): one rank is restarted alone while
+    the others keep running, which would wedge a collective. The resilient
+    lattice workload shards the fused cell grid into independent slices for
+    exactly this reason.
+
+    ``REPRO_FAULT_*`` is stripped from every RESTARTED rank's environment —
+    injected faults are one-shot, so a supervised run recovers from the
+    fault instead of re-firing it forever.
+
+    Raises ``RuntimeError`` with per-rank output tails when any rank's
+    restart budget is exhausted (or the absolute deadline fires); returns
+    rank-ordered :class:`WorkerResult`\\ s (final attempt's rc/output,
+    supervisor markers inline) on success.
+    """
+    import glob as _glob
+    import tempfile
+    import time
+
+    from repro.obs.sink import emit, obs_dir
+    from repro.sim.resilience import FAULT_ENV_VARS
+
+    sup = supervisor or SupervisorConfig()
+    coordinator = f"127.0.0.1:{find_free_port()}"
+    sink = obs_dir() if base_env is None else (base_env.get("REPRO_OBS_DIR") or None)
+
+    outs = [tempfile.TemporaryFile(mode="w+") for _ in range(n_procs)]
+    procs: list[subprocess.Popen | None] = [None] * n_procs
+    attempts = [0] * n_procs
+    next_start = [0.0] * n_procs  # monotonic time before which a rank waits
+    started_wall = [0.0] * n_procs
+    done: list[WorkerResult | None] = [None] * n_procs
+    deadline = time.monotonic() + timeout
+
+    def note(rank: int, text: str) -> None:
+        f = outs[rank]
+        f.flush()
+        f.seek(0, os.SEEK_END)  # the child shares the fd; never rewind it
+        f.write(f"[supervisor] {text}\n")
+        f.flush()
+
+    def start(rank: int) -> None:
+        env = worker_env(coordinator, n_procs, rank, devices_per_proc, base_env)
+        if attempts[rank] > 0:
+            for var in FAULT_ENV_VARS:  # injected faults are one-shot
+                env.pop(var, None)
+        note(rank, f"start rank {rank} attempt {attempts[rank]}")
+        outs[rank].seek(0, os.SEEK_END)
+        procs[rank] = subprocess.Popen(
+            worker_argv, env=env,
+            stdout=outs[rank], stderr=subprocess.STDOUT, text=True,
+        )
+        started_wall[rank] = time.time()
+
+    def collect(rank: int) -> str:
+        f = outs[rank]
+        f.flush()
+        f.seek(0)
+        return f.read()
+
+    def last_signal(rank: int) -> float:
+        """Wall time of the rank's latest sign of life: its newest obs
+        event-file mtime, floored at this attempt's start."""
+        sig = started_wall[rank]
+        if sink:
+            pattern = os.path.join(
+                sink, f"events-p{rank:03d}of{n_procs:03d}-*.jsonl"
+            )
+            for p in _glob.glob(pattern):
+                try:
+                    sig = max(sig, os.path.getmtime(p))
+                except OSError:
+                    pass
+        return sig
+
+    def on_crash(rank: int, rc: int, why: str) -> None:
+        procs[rank] = None
+        if attempts[rank] >= sup.max_restarts:
+            note(rank, f"rank {rank} {why} (rc={rc}); restart budget "
+                       f"({sup.max_restarts}) exhausted")
+            done[rank] = WorkerResult(rank, rc if rc != 0 else 1, collect(rank))
+            return
+        attempts[rank] += 1
+        delay = min(sup.backoff_base * 2 ** (attempts[rank] - 1), sup.backoff_cap)
+        next_start[rank] = time.monotonic() + delay
+        note(rank, f"rank {rank} {why} (rc={rc}); restart "
+                   f"{attempts[rank]}/{sup.max_restarts} in {delay:.2f}s")
+        emit(
+            "supervisor", "supervisor.restart",
+            rank=rank, rc=rc, attempt=attempts[rank], backoff=delay, why=why,
+        )
+
+    try:
+        while any(d is None for d in done):
+            now = time.monotonic()
+            if now > deadline:
+                for rank, proc in enumerate(procs):
+                    if proc is not None and proc.poll() is None:
+                        proc.kill()
+                        proc.wait()
+                    if done[rank] is None:
+                        note(rank, f"killed at the {timeout}s deadline")
+                        done[rank] = WorkerResult(rank, -9, collect(rank))
+                break
+            for rank in range(n_procs):
+                if done[rank] is not None:
+                    continue
+                proc = procs[rank]
+                if proc is None:
+                    if now >= next_start[rank]:
+                        start(rank)
+                    continue
+                rc = proc.poll()
+                if rc is None:
+                    if (
+                        sup.liveness_timeout is not None
+                        and time.time() - last_signal(rank) > sup.liveness_timeout
+                    ):
+                        proc.kill()
+                        proc.wait()
+                        on_crash(rank, proc.returncode, "went silent")
+                    continue
+                if rc == 0:
+                    done[rank] = WorkerResult(rank, 0, collect(rank))
+                else:
+                    on_crash(rank, rc, "crashed")
+            if any(d is None for d in done):
+                time.sleep(sup.poll_interval)
+    finally:
+        for proc in procs:
+            if proc is not None and proc.poll() is None:
+                proc.kill()
+                proc.wait()
+        for f in outs:
+            f.close()
+
+    results = [d for d in done if d is not None]
+    failed = [r for r in results if r.returncode != 0]
+    if failed:
+        tails = "\n".join(
+            f"--- worker {r.process_id} (rc={r.returncode}) ---\n{r.output[-4000:]}"
+            for r in failed
+        )
+        raise RuntimeError(
+            f"{len(failed)}/{len(results)} supervised workers failed "
+            f"(restart budget {sup.max_restarts}/rank):\n{tails}"
         )
     return results
 
@@ -408,6 +610,113 @@ def _worker_bench(args) -> None:
             json.dump(payload, f, indent=2)
 
 
+# --------------------------------------------------------------------------
+# the resilient workload — independent rank-sharded checkpointed sweep
+# (the supervised counterpart of the parity workload: no collectives, so a
+# crashed rank restarts alone and resumes from its own checkpoints)
+# --------------------------------------------------------------------------
+
+
+def resilient_spec(n_rounds: int = 6):
+    """The pinned fault-injection grid: 2 policies × 2 seeds × 2 local
+    algorithms (fedavg + the stateful feddyn, so a resumed carry includes
+    ``AlgState``) over the churn scenario — 8 cells, split across ranks."""
+    from repro.sim.lattice import LatticeSpec
+
+    return LatticeSpec(
+        policies=("pofl", "channel"),
+        noise_powers=(1e-11,),
+        alphas=(0.1,),
+        seeds=(0, 1000),
+        n_rounds=n_rounds,
+        eval_every=2,
+        algorithms=("fedavg", "feddyn"),
+    )
+
+
+def _resilient_task():
+    """One small fixed task for every resilient worker: dirichlet_mixed
+    non-iid partition (unequal true shard sizes ride in ``n_samples``)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.data.partition import partition_dirichlet_mixed
+    from repro.data.synthetic import make_classification_dataset
+
+    key = jax.random.PRNGKey(0)
+    x, y = make_classification_dataset("mnist_like", 320, key, dim=16)
+    data = partition_dirichlet_mixed(x, y, n_devices=8, seed=0)
+    params0 = {"w": jnp.zeros((16, 10)), "b": jnp.zeros((10,))}
+    return _parity_loss_fn, data, params0
+
+
+def _worker_resilient(args) -> None:
+    """Run THIS rank's shard of the resilient sweep (rank/count from the
+    ``REPRO_DIST_*`` env), checkpointing every ``--checkpoint-every`` rounds
+    under ``--checkpoint-dir`` and publishing ``shard-r<rank>.npz`` there.
+    Independent per rank: never calls ``initialize_distributed``."""
+    from repro.core.pofl import POFLConfig
+    from repro.obs.sink import process_coords
+    from repro.sim.resilience import fault_nan, run_worker_shard
+
+    loss_fn, data, params0 = _resilient_task()
+    spec = resilient_spec(args.n_rounds)
+    cfg = POFLConfig(
+        n_devices=8, n_scheduled=3,
+        # quarantine only when a NaN fault is injected: the default run
+        # keeps the zero-overhead propagate path
+        on_nonfinite="skip" if fault_nan() is not None else "propagate",
+    )
+    rank, _ = process_coords()
+    shard_out = os.path.join(args.checkpoint_dir, f"shard-r{rank}.npz")
+    lo, hi = run_worker_shard(
+        loss_fn, data, params0, spec, shard_out,
+        args.checkpoint_dir, args.checkpoint_every,
+        base_cfg=cfg, scenario="churn",
+    )
+    print(f"[worker {rank}] shard cells [{lo}, {hi}) -> {shard_out}", flush=True)
+
+
+def run_resilient(
+    n_procs: int,
+    checkpoint_dir: str,
+    out: str = "",
+    n_rounds: int = 6,
+    checkpoint_every: int = 2,
+    timeout: float = 900.0,
+    supervisor: SupervisorConfig | None = None,
+):
+    """Supervise the resilient workload across ``n_procs`` independent local
+    workers, then merge their shards into one full-grid ``LatticeRecords``
+    (written to ``out`` as npz when given). Survives injected/real rank
+    crashes up to the per-rank restart budget."""
+    from repro.sim.resilience import merge_shards
+
+    os.makedirs(checkpoint_dir, exist_ok=True)
+    supervise_workers(
+        [
+            sys.executable, "-m", "repro.launch.distributed", "--worker",
+            "--workload", "resilient",
+            "--n-rounds", str(n_rounds),
+            "--checkpoint-dir", checkpoint_dir,
+            "--checkpoint-every", str(checkpoint_every),
+        ],
+        n_procs=n_procs,
+        devices_per_proc=1,
+        timeout=timeout,
+        supervisor=supervisor,
+    )
+    spec = resilient_spec(n_rounds)
+    records = merge_shards(
+        spec, [os.path.join(checkpoint_dir, f"shard-r{r}.npz")
+               for r in range(n_procs)],
+    )
+    if out:
+        save_records(out, records, {"n_rounds": n_rounds, "n_procs": n_procs,
+                                    "workload": "resilient"})
+    return records
+
+
 def run_bench(
     n_procs: int,
     devices_per_proc: int,
@@ -450,13 +759,24 @@ def main(argv: list[str] | None = None) -> None:
                         help="fake CPU devices per process "
                         "(--xla_force_host_platform_device_count)")
     parser.add_argument("--workload", default="parity",
-                        choices=("parity", "bench"),
+                        choices=("parity", "bench", "resilient"),
                         help="built-in workload when no `-- command` is given")
     parser.add_argument("--out", default="",
                         help="worker-0 output path (npz for parity, json for bench)")
     parser.add_argument("--n-rounds", type=int, default=4)
     parser.add_argument("--backend", default="jnp")
     parser.add_argument("--timeout", type=float, default=900.0)
+    parser.add_argument("--checkpoint-dir", default="",
+                        help="resilient workload: checkpoint/shard directory "
+                        "(default: a temp dir)")
+    parser.add_argument("--checkpoint-every", type=int, default=2,
+                        help="resilient workload: rounds per checkpoint chunk")
+    parser.add_argument("--max-restarts", type=int, default=2,
+                        help="supervisor: restart budget per rank")
+    parser.add_argument("--liveness-timeout", type=float, default=None,
+                        help="supervisor: seconds of heartbeat silence "
+                        "(REPRO_OBS_DIR mtimes) before a rank is killed and "
+                        "restarted")
     parser.add_argument("--worker", action="store_true",
                         help=argparse.SUPPRESS)  # internal: run AS a worker
     args = parser.parse_args(argv)
@@ -464,6 +784,8 @@ def main(argv: list[str] | None = None) -> None:
     if args.worker:
         if args.workload == "parity":
             _worker_parity(args)
+        elif args.workload == "resilient":
+            _worker_resilient(args)
         else:
             _worker_bench(args)
         return
@@ -472,6 +794,26 @@ def main(argv: list[str] | None = None) -> None:
         parser.error("--procs must be >= 1")
     if args.devices_per_proc < 1:
         parser.error("--devices-per-proc must be >= 1")
+
+    if args.workload == "resilient" and command is None:
+        import tempfile
+
+        ckpt_dir = args.checkpoint_dir or tempfile.mkdtemp(prefix="repro-ckpt-")
+        records = run_resilient(
+            n_procs=args.procs,
+            checkpoint_dir=ckpt_dir,
+            out=args.out,
+            n_rounds=args.n_rounds,
+            checkpoint_every=args.checkpoint_every,
+            timeout=args.timeout,
+            supervisor=SupervisorConfig(
+                max_restarts=args.max_restarts,
+                liveness_timeout=args.liveness_timeout,
+            ),
+        )
+        print(f"[launcher] resilient sweep done: {records.e_com.shape} "
+              f"(checkpoints under {ckpt_dir})")
+        return
 
     worker_argv = command or [
         sys.executable, "-m", "repro.launch.distributed", "--worker",

@@ -68,8 +68,12 @@ def _handle(path: str) -> TextIO:
         os.makedirs(path, exist_ok=True)
         idx, count = process_coords()
         name = f"events-p{idx:03d}of{count:03d}-{os.getpid()}.jsonl"
+        # line-buffered on top of emit()'s per-event flush: a worker killed
+        # mid-stream (SIGKILL, os._exit fault injection) leaves at worst one
+        # torn trailing line, which read_events skips — every completed event
+        # line survives the writer
         h = _HANDLES[path] = open(
-            os.path.join(path, name), "a", encoding="utf-8"
+            os.path.join(path, name), "a", buffering=1, encoding="utf-8"
         )
     return h
 

@@ -24,6 +24,11 @@ Three layers (see ROADMAP.md "sim" section):
     contract (:func:`initialize_distributed`), global-device cell meshes
     (:func:`make_global_cell_mesh`), per-process shard feeding and record
     gathering. Driven locally by ``repro.launch.distributed``.
+  * :mod:`repro.sim.resilience` — fault tolerance: checkpoint/resume of
+    chunked lattice sweeps (:func:`run_lattice_checkpointed` — resume is
+    bit-identical to uninterrupted), per-worker shard runs for the
+    supervised launcher, and the deterministic ``REPRO_FAULT_*``
+    fault-injection contract.
 """
 from repro.sim.compile_cache import (
     enable_compile_cache,
@@ -46,6 +51,13 @@ from repro.sim.lattice import (
     make_cell_mesh,
     make_cell_model_mesh,
     run_lattice,
+)
+from repro.sim.resilience import (
+    CheckpointConfig,
+    latest_checkpoint,
+    merge_shards,
+    run_lattice_checkpointed,
+    run_worker_shard,
 )
 from repro.sim.multihost import (
     DistributedConfig,
@@ -71,6 +83,7 @@ from repro.sim.tasks import (
 
 __all__ = [
     "CHANNEL_SCENARIOS",
+    "CheckpointConfig",
     "DistributedConfig",
     "EvalRecord",
     "FUSED_ALGORITHM",
@@ -90,6 +103,7 @@ __all__ = [
     "initialize_distributed",
     "lattice_compile_stats",
     "lattice_memory_stats",
+    "latest_checkpoint",
     "make_cell_mesh",
     "make_cell_model_mesh",
     "make_channel_process",
@@ -97,8 +111,11 @@ __all__ = [
     "make_global_cell_model_mesh",
     "make_model_task",
     "make_partition",
+    "merge_shards",
     "mesh_spans_processes",
     "persistent_cache_counters",
     "reset_engine_cache",
     "run_lattice",
+    "run_lattice_checkpointed",
+    "run_worker_shard",
 ]

@@ -49,7 +49,7 @@ import numpy as np
 
 from repro.core import local_update
 from repro.core.channel import ChannelConfig
-from repro.core.metrics import RoundDiagnostics
+from repro.core.metrics import RoundDiagnostics, zero_round_health
 from repro.core.pofl import (
     DeviceData, History, ModelShard, POFLConfig, round_algorithm,
 )
@@ -112,6 +112,11 @@ class RoundRecord(NamedTuple):
     :class:`~repro.sim.tasks.TaskEval`, else ``None`` (OFF by default) —
     legacy tuple eval_fns and eval-less runs keep the seed's exact record
     pytree, so every pre-existing pinned trajectory stays bitwise unchanged.
+
+    ``health`` is the fourth application of the same trick: the
+    :class:`~repro.core.metrics.RoundHealth` non-finite quarantine counters
+    when ``POFLConfig.on_nonfinite="skip"``, else ``None`` — the default
+    "propagate" keeps the seed's exact record pytree and zero new ops.
     """
 
     e_com: jnp.ndarray        # Eq. 15 closed-form communication distortion
@@ -122,6 +127,7 @@ class RoundRecord(NamedTuple):
     acc: jnp.ndarray          # eval accuracy (0 where not evaluated)
     diag: Any = None          # RoundDiagnostics taps, or None (default)
     eval: Any = None          # tasks.EvalRecord subtree, or None (default)
+    health: Any = None        # RoundHealth quarantine taps, or None (default)
 
 
 # the always-present scalar record fields (diag/eval are optional subtrees)
@@ -129,7 +135,7 @@ _RECORD_SCALARS = ("e_com", "e_var", "grad_norm", "n_scheduled", "loss", "acc")
 
 
 def _zero_record(
-    diagnostics: bool = False, task_eval: bool = False
+    diagnostics: bool = False, task_eval: bool = False, health: bool = False
 ) -> RoundRecord:
     """A zero record matching the engine's record pytree (the inactive
     ``lax.cond`` branch must mirror ``round_body``'s structure exactly)."""
@@ -140,7 +146,8 @@ def _zero_record(
             *(jnp.zeros((), jnp.float32) for _ in RoundDiagnostics._fields)
         )
     return RoundRecord(
-        *scalars, diag=diag, eval=zero_eval_record() if task_eval else None
+        *scalars, diag=diag, eval=zero_eval_record() if task_eval else None,
+        health=zero_round_health() if health else None,
     )
 
 
@@ -212,6 +219,11 @@ class SimEngine:
         # per-cell traced algorithm_id does the real dispatch)
         if cfg.local_algorithm != FUSED_ALGORITHM:
             local_update.algorithm_id(cfg.local_algorithm)
+        if cfg.on_nonfinite not in ("propagate", "skip"):
+            raise ValueError(
+                "POFLConfig.on_nonfinite must be 'propagate' or 'skip', "
+                f"got {cfg.on_nonfinite!r}"
+            )
         # A 2-D ("cells", "model") mesh with |model| > 1 switches the round
         # pipeline to the model-sharded hot path (core.pofl.ModelShard):
         # explicit shard_map blocks over the model axis, so — unlike the
@@ -268,6 +280,29 @@ class SimEngine:
                 **vmap_kw,
             )
         )
+        # the CHUNKED program family (sim.resilience): init and scan are
+        # separate executables so a sweep can re-enter from a persisted
+        # carry. Both are policy-fused; *_alg adds the traced algorithm axis.
+        self._init_lattice_jit = jax.jit(
+            jax.vmap(self._init_lattice_cell, in_axes=(None, 0), **vmap_kw)
+        )
+        self._init_alg_lattice_jit = jax.jit(
+            jax.vmap(self._init_alg_lattice_cell, in_axes=(None, 0), **vmap_kw)
+        )
+        self._chunk_lattice_jit = jax.jit(
+            jax.vmap(
+                self._chunk_lattice_cell,
+                in_axes=(0, None, None, None, 0, 0, 0, 0),
+                **vmap_kw,
+            )
+        )
+        self._chunk_alg_lattice_jit = jax.jit(
+            jax.vmap(
+                self._chunk_alg_lattice_cell,
+                in_axes=(0, None, None, None, 0, 0, 0, 0, 0),
+                **vmap_kw,
+            )
+        )
         # AOT ``lower().compile()`` executable cache: arg signature →
         # compiled lattice program (see :meth:`_aot_lattice_executable`).
         # Bounded LRU, same rationale as PR 4's gather-jit cache: each entry
@@ -318,6 +353,7 @@ class SimEngine:
         active: jnp.ndarray | None = None,  # (T,) bool — mask padded rounds
         policy_id=None,            # traced int32 or None → cfg.policy string
         algorithm_id=None,         # traced int32 or None → cfg.local_algorithm
+        fault_round=None,          # traced int32 or None → no injection hook
     ) -> tuple[SimState, RoundRecord]:
         """Pure scan over rounds; vmap-safe (xs stay unbatched, so the eval
         ``lax.cond`` remains a genuine branch, not a select).
@@ -328,6 +364,11 @@ class SimEngine:
         params, PRNG chain, channel state — passes through untouched, so a
         padded scan of the same active prefix is bit-identical to an unpadded
         one.
+
+        ``fault_round`` (``sim.resilience``'s NaN-injection hook, a traced
+        per-cell int32) rides into ``round_algorithm`` as a VALUE — ``-1``
+        never fires — so faulted and unfaulted cells share one program;
+        ``None`` (every pre-existing path) adds no ops at all.
         """
 
         def round_body(st: SimState, t_int, ev):
@@ -347,6 +388,7 @@ class SimEngine:
                 model_shard=self._model_shard,
                 alg_state=st.alg,
                 algorithm_id=algorithm_id,
+                fault_round=fault_round,
             )
             ev_rec = None
             if self.eval_fn is None:
@@ -373,7 +415,7 @@ class SimEngine:
             rec = RoundRecord(
                 e_com=m.e_com, e_var=m.e_var, grad_norm=m.grad_norm,
                 n_scheduled=m.n_scheduled, loss=loss, acc=acc, diag=m.diag,
-                eval=ev_rec,
+                eval=ev_rec, health=m.health,
             )
             return SimState(params=params, key=key, chan=chan, alg=alg), rec
 
@@ -394,7 +436,8 @@ class SimEngine:
                     lambda s: (
                         s,
                         _zero_record(
-                            self.obs.diagnostics, self._task_eval is not None
+                            self.obs.diagnostics, self._task_eval is not None,
+                            self.cfg.on_nonfinite == "skip",
                         ),
                     ),
                     st,
@@ -440,6 +483,106 @@ class SimEngine:
         )
         return recs
 
+    # -- the chunked (checkpointable) lattice program family ---------------
+    # sim.resilience splits init and scan into separate executables: the
+    # init program builds the batched carry once, the chunk program advances
+    # it `len(t_ints)` rounds and RETURNS it — so the full donated carry can
+    # be persisted between chunks and re-entered bit-identically.
+
+    def _init_lattice_cell(self, params0, seed):
+        self.n_lattice_traces += 1  # Python body runs only when (re)tracing
+        counter_add("engine.lattice_traces")
+        return self.init(params0, seed)
+
+    def _init_alg_lattice_cell(self, params0, seed):
+        self.n_lattice_traces += 1  # Python body runs only when (re)tracing
+        counter_add("engine.lattice_traces")
+        return self.init(params0, seed, fused_algorithms=True)
+
+    def _chunk_lattice_cell(
+        self, state, t_ints, do_eval, active, noise_power, alpha,
+        policy_id, fault_round,
+    ):
+        self.n_lattice_traces += 1  # Python body runs only when (re)tracing
+        counter_add("engine.lattice_traces")
+        return self.scan_rounds(
+            state, t_ints, do_eval, noise_power=noise_power, alpha=alpha,
+            active=active, policy_id=policy_id, fault_round=fault_round,
+        )
+
+    def _chunk_alg_lattice_cell(
+        self, state, t_ints, do_eval, active, noise_power, alpha,
+        policy_id, algorithm_id, fault_round,
+    ):
+        self.n_lattice_traces += 1  # Python body runs only when (re)tracing
+        counter_add("engine.lattice_traces")
+        return self.scan_rounds(
+            state, t_ints, do_eval, noise_power=noise_power, alpha=alpha,
+            active=active, policy_id=policy_id, algorithm_id=algorithm_id,
+            fault_round=fault_round,
+        )
+
+    def init_lattice_states(
+        self, params0, seed_b, fused_algorithms: bool = False
+    ) -> SimState:
+        """The batched initial carry for a chunked lattice run: ONE compiled
+        ``vmap(init)`` dispatch over the flattened (B,) seed axis. The
+        returned :class:`SimState` has every leaf batched on axis 0 — exactly
+        the carry :meth:`run_lattice_chunk` advances — and doubles as the
+        structure/sharding TEMPLATE a persisted checkpoint is restored into
+        (``repro.checkpoint.load_pytree`` re-places leaves onto it, keeping
+        the chunk executable's argument signature stable across resume)."""
+        args = (jax.tree.map(jnp.asarray, params0), jnp.asarray(seed_b))
+        mode = "init_alg" if fused_algorithms else "init"
+        compiled = self._aot_lattice_executable(mode, args)
+        return compiled(*args)
+
+    def run_lattice_chunk(
+        self, state_b: SimState, t_ints, do_eval, active,
+        noise_b, alpha_b, policy_b, algorithm_b=None, fault_b=None,
+    ) -> tuple[SimState, RoundRecord]:
+        """Advance the batched carry ``len(t_ints)`` rounds → (carry', records).
+
+        The chunked counterpart of :meth:`run_lattice_cells`: same vmapped
+        cell axes (always policy-fused — a constant ``policy_b`` is fine),
+        but the carry comes IN as an argument and comes BACK OUT, so
+        ``sim.resilience`` can persist it between chunks. ``active`` masks
+        padded tail rounds as genuine carry-preserving no-ops, so every chunk
+        of a sweep — including a short final one — dispatches the SAME
+        executable (one compile per signature; AOT-cached like the other
+        modes). ``fault_b`` is the per-cell NaN-injection round (int32, -1 =
+        never; defaults to all -1 — same program either way, it is an input
+        value). Chunking is re-entry, not re-tracing: the carry holds the
+        whole PRNG chain, so chunked and resumed runs replay identical
+        per-round keys.
+        """
+        if policy_b is None:
+            raise ValueError(
+                "run_lattice_chunk is always policy-fused: pass policy_b "
+                "(a constant array selects one policy)"
+            )
+        if fault_b is None:
+            fault_b = jnp.full(np.shape(policy_b), -1, jnp.int32)
+        args = (
+            state_b, jnp.asarray(t_ints), jnp.asarray(do_eval),
+            jnp.asarray(active), noise_b, alpha_b, policy_b,
+        )
+        if algorithm_b is not None:
+            mode = "chunk_alg"
+            args = args + (algorithm_b, jnp.asarray(fault_b))
+        else:
+            mode = "chunk"
+            args = args + (jnp.asarray(fault_b),)
+        compiled = self._aot_lattice_executable(mode, args)
+        n_cells = int(np.shape(policy_b)[0]) if np.ndim(policy_b) else 1
+        with maybe_profile("lattice"), span(
+            "lattice.dispatch", fused=True, cells=n_cells, chunked=True
+        ):
+            out = compiled(*args)
+            if profiling_enabled():
+                out = jax.block_until_ready(out)
+            return out
+
     @staticmethod
     def _arg_signature(leaf) -> tuple:
         """Hashable AOT-dispatch identity of one lattice argument: shape,
@@ -462,7 +605,9 @@ class SimEngine:
         """The compiled lattice program for ``args`` — AOT, cached, counted.
 
         ``mode`` selects the jitted vmap program — ``False`` (plain cells),
-        ``True`` (policy-fused), ``"fused_alg"`` (policy+algorithm-fused) —
+        ``True`` (policy-fused), ``"fused_alg"`` (policy+algorithm-fused),
+        ``"init"``/``"init_alg"`` (the chunked family's batched-carry init),
+        ``"chunk"``/``"chunk_alg"`` (the carry-in/carry-out chunk scan) —
         and leads the executable key. The mode values are APPEND-ONLY (like
         the signature tuple itself): the historical ``False``/``True``
         entries keep their exact keys, new program families add new values.
@@ -490,6 +635,10 @@ class SimEngine:
                 False: self._lattice_jit,
                 True: self._fused_lattice_jit,
                 "fused_alg": self._fused_alg_lattice_jit,
+                "init": self._init_lattice_jit,
+                "init_alg": self._init_alg_lattice_jit,
+                "chunk": self._chunk_lattice_jit,
+                "chunk_alg": self._chunk_alg_lattice_jit,
             }[mode]
             t0 = time.perf_counter()
             with span("lattice.compile", fused=bool(mode)):

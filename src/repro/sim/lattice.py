@@ -186,6 +186,9 @@ class LatticeRecords(NamedTuple):
     #                       the lattice ran with ObsConfig(diagnostics=True)
     eval: Any = None      # tasks.EvalRecord of (A, P, Nn, Na, Ns, E) curves
     #                       when eval_fn was a tasks.TaskEval, else None
+    health: Any = None    # core.metrics.RoundHealth of (A, P, Nn, Na, Ns, T)
+    #                       quarantine counters when base_cfg.on_nonfinite=
+    #                       "skip", else None (the diag empty-subtree contract)
 
     def cell(self, **coords) -> dict:
         """Select one sub-array per field by axis coordinates, e.g.
@@ -453,6 +456,11 @@ def run_lattice(
             *(shape_fn(np.asarray(a))[..., do_eval] for a in ev)
         )
 
+    def _grid_health(h, shape_fn) -> Any:
+        """Reshape the flat quarantine subtree (core.metrics.RoundHealth of
+        (cells, T) leaves) to the (A, P, Nn, Na, Ns, T) grid."""
+        return type(h)(*(shape_fn(np.asarray(a)) for a in h))
+
     def _grid_diag(tap_arrays, shape_fn) -> Any:
         """Reshape flat tap leaves to the (A, P, Nn, Na, Ns, T) grid."""
         from repro.core.metrics import RoundDiagnostics
@@ -510,8 +518,12 @@ def run_lattice(
 
         diag = None if recs.diag is None else _grid_diag(list(recs.diag), _shape_flat)
         ev = None if recs.eval is None else _grid_eval(recs.eval, _shape_flat)
+        health = (
+            None if recs.health is None
+            else _grid_health(recs.health, _shape_flat)
+        )
         return _assemble_records(
-            spec, algs, gather, eval_rounds, diag=diag, eval=ev
+            spec, algs, gather, eval_rounds, diag=diag, eval=ev, health=health
         )
 
     if traced_algs:
@@ -578,8 +590,17 @@ def run_lattice(
             )),
             _shape_stacked,
         )
+    health = None
+    if per_policy and per_policy[0].health is not None:
+        first_h = per_policy[0].health
+        health = type(first_h)(*(
+            _shape_stacked(
+                np.stack([np.asarray(getattr(r.health, f)) for r in per_policy])
+            )
+            for f in first_h._fields
+        ))
     return _assemble_records(
-        spec, algs, gather, eval_rounds, diag=diag, eval=ev
+        spec, algs, gather, eval_rounds, diag=diag, eval=ev, health=health
     )
 
 
@@ -605,17 +626,27 @@ def _concat_algorithms(
             np.concatenate([np.asarray(getattr(r.eval, f)) for r in per_alg], axis=0)
             for f in first.eval._fields
         ))
+    health = None
+    if first.health is not None:
+        health = type(first.health)(*(
+            np.concatenate(
+                [np.asarray(getattr(r.health, f)) for r in per_alg], axis=0
+            )
+            for f in first.health._fields
+        ))
     return LatticeRecords(
         axes={**first.axes, "algorithm": list(algs)},
         eval_rounds=first.eval_rounds,
         diag=diag,
         eval=ev,
+        health=health,
         **cat,
     )
 
 
 def _assemble_records(
-    spec: LatticeSpec, algs, gather, eval_rounds, diag=None, eval=None
+    spec: LatticeSpec, algs, gather, eval_rounds, diag=None, eval=None,
+    health=None,
 ) -> LatticeRecords:
     return LatticeRecords(
         axes={
@@ -634,4 +665,88 @@ def _assemble_records(
         eval_rounds=eval_rounds,
         diag=diag,
         eval=eval,
+        health=health,
+    )
+
+
+def fused_flat_grid(
+    spec: LatticeSpec,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray | None]:
+    """The policy-fused flattened cell grid of ``spec`` as
+    ``(noise, alpha, seed, policy_id, algorithm_id-or-None)`` flat (B,)
+    arrays — EXACTLY the fused order ``run_lattice`` vmaps over (algorithm-
+    major, then policy-major, then noise × alpha × seed), so a flat index
+    reshapes to the (A, P, Nn, Na, Ns) grid with a plain ``reshape``.
+    ``algorithm_id`` is ``None`` for single-algorithm specs (the static-
+    dispatch path). ``sim.resilience`` shards THIS order across workers.
+    """
+    for a in spec.algorithms:
+        local_update.algorithm_id(a)
+    grid_axes = [
+        np.asarray(spec.noise_powers, np.float32),
+        np.asarray(spec.alphas, np.float32),
+        np.asarray(spec.seeds, np.int32),
+    ]
+    pol_ids = np.asarray(
+        [scheduling.policy_id(p) for p in spec.policies], np.int32
+    )
+    if len(spec.algorithms) > 1:
+        alg_ids = np.asarray(
+            [local_update.algorithm_id(a) for a in spec.algorithms], np.int32
+        )
+        grid_al, grid_p, grid_n, grid_a, grid_s = np.meshgrid(
+            alg_ids, pol_ids, *grid_axes, indexing="ij"
+        )
+        return (
+            grid_n.ravel(), grid_a.ravel(), grid_s.ravel(),
+            grid_p.ravel(), grid_al.ravel(),
+        )
+    grid_p, grid_n, grid_a, grid_s = np.meshgrid(
+        pol_ids, *grid_axes, indexing="ij"
+    )
+    return grid_n.ravel(), grid_a.ravel(), grid_s.ravel(), grid_p.ravel(), None
+
+
+def assemble_flat_fused(
+    spec: LatticeSpec, flat_records, do_eval: np.ndarray,
+    eval_rounds: np.ndarray,
+) -> LatticeRecords:
+    """Assemble a flat fused-order record pytree into :class:`LatticeRecords`.
+
+    ``flat_records`` is a host-side ``RoundRecord`` whose leaves are
+    ``(B, T)`` arrays in :func:`fused_flat_grid` order (B = ``spec.n_cells``)
+    — what the chunked engine programs of ``sim.resilience`` accumulate, and
+    what a supervisor reassembles from per-worker shards. The reshape (and
+    the optional diag/eval/health subtree handling) matches ``run_lattice``'s
+    fused path exactly.
+    """
+    algs = tuple(spec.algorithms)
+    grid_shape = (len(spec.noise_powers), len(spec.alphas), len(spec.seeds))
+
+    def shape_flat(a) -> np.ndarray:
+        return np.asarray(a).reshape(
+            (len(algs), len(spec.policies)) + grid_shape + (spec.n_rounds,)
+        )
+
+    def gather(field: str, eval_only: bool) -> np.ndarray:
+        stacked = shape_flat(getattr(flat_records, field))
+        return stacked[..., do_eval] if eval_only else stacked
+
+    diag = None
+    if flat_records.diag is not None:
+        diag = type(flat_records.diag)(
+            *(shape_flat(a) for a in flat_records.diag)
+        )
+    ev = None
+    if flat_records.eval is not None:
+        ev = type(flat_records.eval)(
+            *(shape_flat(np.asarray(a))[..., do_eval] for a in flat_records.eval)
+        )
+    health = None
+    if flat_records.health is not None:
+        health = type(flat_records.health)(
+            *(shape_flat(a) for a in flat_records.health)
+        )
+    return _assemble_records(
+        spec, algs, gather, eval_rounds, diag=diag, eval=ev, health=health
     )

@@ -1,0 +1,550 @@
+"""Fault-tolerant lattice sweeps: checkpoint/resume + deterministic faults.
+
+The lattice engine's ``lax.scan`` carry (:class:`~repro.sim.engine.SimState`
+— params, PRNG chain, channel-process state, ``AlgState``) already holds
+EVERYTHING that evolves across rounds, so a sweep can be segmented into
+``checkpoint_every``-round chunks whose carry is persisted between chunks
+and re-entered after a crash. This module is that re-entry contract:
+
+  * :func:`run_lattice_checkpointed` — ``run_lattice``'s policy-fused path,
+    chunked: one batched-carry ``init`` program + ONE fixed-length ``chunk``
+    program (the final short chunk is padded with the engine's
+    carry-preserving ``active``-mask no-ops, so every chunk dispatches the
+    same AOT executable). After each chunk the full carry + the records so
+    far are written through ``repro.checkpoint``'s crash-atomic npz saver.
+    HARD GUARANTEE: a sweep interrupted at any checkpoint boundary and
+    resumed produces bit-identical records to the uninterrupted (chunked)
+    run — the chunks are the same executable over the same carries, and the
+    npz round-trip is bytewise on every leaf (PRNG keys included).
+  * worker sharding — :func:`run_worker_shard` runs one contiguous slice of
+    the fused flat cell grid (per-rank checkpoints, per-rank shard npz) and
+    :func:`merge_shards` reassembles the full :class:`LatticeRecords`; the
+    supervised launcher (``repro.launch.distributed``) restarts a crashed
+    rank and it resumes from ITS last checkpoint. Workers are independent
+    single-host processes (no collectives), so one rank's death never
+    wedges the cohort.
+  * deterministic fault injection — the ``REPRO_FAULT_*`` env contract:
+
+        REPRO_FAULT_KILL=<rank>:<round>   worker <rank> hard-exits (code
+                                          113) at the first checkpoint
+                                          boundary after <round>
+        REPRO_FAULT_NAN=<cell>:<round>    flat-fused cell <cell>'s aggregate
+                                          ŷ is poisoned to NaN at exactly
+                                          round <round> (an input VALUE to
+                                          the chunk program — unfaulted
+                                          cells share the same executable
+                                          and are bitwise unchanged)
+
+    Faults are one-shot by design: the supervisor strips ``REPRO_FAULT_*``
+    from a restarted rank's environment, so an injected kill is recovered
+    instead of re-fired. NaN faults compose with
+    ``POFLConfig.on_nonfinite="skip"`` (the in-trace quarantine): the
+    poisoned round holds params/AlgState and is counted on the records'
+    ``health`` subtree.
+
+Checkpoint layout (all writes crash-atomic, npz is the commit point):
+
+    <dir>/ckpt-<t_next:06d>.npz        {"state": SimState, "records": ...}
+    <dir>/ckpt-<t_next:06d>.meta.json  {"t_next", "fingerprint", ...}
+
+Discovery keys on npz presence (the atomic saver publishes the sidecar
+FIRST), and the fingerprint — spec + config + cell slice — refuses to
+resume a checkpoint written by a different sweep.
+"""
+from __future__ import annotations
+
+import dataclasses
+import glob
+import hashlib
+import json
+import os
+import re
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_pytree, save_pytree
+from repro.core.channel import ChannelConfig
+from repro.core.metrics import RoundDiagnostics, RoundHealth
+from repro.core.pofl import DeviceData, POFLConfig
+from repro.obs.config import ObsConfig
+from repro.obs.sink import emit, process_coords
+from repro.obs.spans import span
+from repro.sim.engine import (
+    _RECORD_SCALARS,
+    FUSED_ALGORITHM,
+    FUSED_POLICY,
+    RoundRecord,
+    cached_engine,
+)
+from repro.sim.lattice import (
+    LatticeRecords,
+    LatticeSpec,
+    assemble_flat_fused,
+    fused_flat_grid,
+)
+from repro.sim.tasks import EvalRecord
+
+# -- the REPRO_FAULT_* env contract ----------------------------------------
+
+ENV_FAULT_KILL = "REPRO_FAULT_KILL"  # "<rank>:<round>"
+ENV_FAULT_NAN = "REPRO_FAULT_NAN"    # "<flat fused cell>:<round>"
+FAULT_ENV_VARS = (ENV_FAULT_KILL, ENV_FAULT_NAN)
+# distinctive exit code of an injected kill (distinguishable from a real
+# crash in the supervisor's logs; any nonzero code triggers the same restart)
+FAULT_EXIT_CODE = 113
+
+_CKPT_RE = re.compile(r"ckpt-(\d+)\.npz$")
+
+
+def _parse_fault(name: str) -> tuple[int, int] | None:
+    """Parse one ``<int>:<int>`` fault env var; None when unset/malformed
+    (a malformed value raises — a silently ignored fault would make a CI
+    fault-injection job vacuously green)."""
+    raw = os.environ.get(name, "").strip()
+    if not raw:
+        return None
+    try:
+        a, b = raw.split(":")
+        return int(a), int(b)
+    except ValueError as e:
+        raise ValueError(
+            f"{name} must be '<int>:<int>', got {raw!r}"
+        ) from e
+
+
+def fault_kill() -> tuple[int, int] | None:
+    """The ``REPRO_FAULT_KILL`` (rank, round) injection point, or None."""
+    return _parse_fault(ENV_FAULT_KILL)
+
+
+def fault_nan() -> tuple[int, int] | None:
+    """The ``REPRO_FAULT_NAN`` (flat cell, round) injection point, or None."""
+    return _parse_fault(ENV_FAULT_NAN)
+
+
+def fault_nan_rounds(lo: int, hi: int) -> np.ndarray:
+    """The per-cell NaN-injection rounds for the ``[lo, hi)`` slice of the
+    fused flat grid: all ``-1`` (never) unless ``REPRO_FAULT_NAN`` names a
+    cell inside the slice. An input VALUE to the chunk program — the
+    no-fault array runs the identical executable."""
+    fault = np.full(hi - lo, -1, np.int32)
+    nan_point = fault_nan()
+    if nan_point is not None and lo <= nan_point[0] < hi:
+        fault[nan_point[0] - lo] = nan_point[1]
+    return fault
+
+
+def _maybe_fault_kill(t_next: int, rank: int) -> None:
+    """Hard-exit (``os._exit(113)``) when ``REPRO_FAULT_KILL`` names this
+    rank and the sweep has passed the injected round. Called AFTER the
+    checkpoint for ``t_next`` is committed, so the kill point is exactly a
+    checkpoint boundary — recovery is deterministic and loses nothing."""
+    kill = fault_kill()
+    if kill is None or kill[0] != rank or t_next <= kill[1]:
+        return
+    emit(
+        "fault", "resilience.fault_kill",
+        rank=rank, round=kill[1], t_next=t_next, exit_code=FAULT_EXIT_CODE,
+    )
+    os._exit(FAULT_EXIT_CODE)
+
+
+# -- checkpoint plumbing ---------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointConfig:
+    """Where/how often a chunked sweep persists its carry.
+
+    ``every`` is the chunk length in rounds (the scan is segmented into
+    ``ceil(T / every)`` dispatches of ONE fixed-length executable); ``keep``
+    bounds how many recent checkpoints stay on disk (older ones are pruned
+    after each successful save — never the one just written)."""
+
+    dir: str
+    every: int
+    keep: int = 2
+
+    def __post_init__(self):
+        if self.every < 1:
+            raise ValueError(f"checkpoint_every must be >= 1, got {self.every}")
+
+
+def _ckpt_path(ckpt_dir: str, t_next: int) -> str:
+    return os.path.join(ckpt_dir, f"ckpt-{t_next:06d}.npz")
+
+
+def latest_checkpoint(ckpt_dir: str) -> tuple[int, str] | None:
+    """The most advanced published checkpoint under ``ckpt_dir`` as
+    ``(t_next, npz_path)``, or None. Keys on npz presence only — the
+    crash-atomic saver guarantees a visible npz is complete and its
+    ``.meta.json`` sidecar was published first."""
+    best: tuple[int, str] | None = None
+    for path in glob.glob(os.path.join(ckpt_dir, "ckpt-*.npz")):
+        m = _CKPT_RE.search(path)
+        if m is None:
+            continue
+        t = int(m.group(1))
+        if best is None or t > best[0]:
+            best = (t, path)
+    return best
+
+
+def _prune_checkpoints(ckpt_dir: str, keep: int) -> None:
+    found = sorted(
+        (int(_CKPT_RE.search(p).group(1)), p)
+        for p in glob.glob(os.path.join(ckpt_dir, "ckpt-*.npz"))
+        if _CKPT_RE.search(p)
+    )
+    for t, path in found[:-keep] if keep > 0 else []:
+        for stale in (path, _ckpt_path(ckpt_dir, t)[:-4] + ".meta.json"):
+            if os.path.exists(stale):
+                os.remove(stale)
+
+
+def _fingerprint(
+    spec: LatticeSpec, cfg: POFLConfig, scenario: str,
+    scenario_params: dict | None, cell_range: tuple[int, int],
+) -> str:
+    """Identity of one sweep's checkpoint stream: resuming under a different
+    spec/config/slice must fail loudly, not deserialize garbage."""
+    payload = repr((
+        spec, dataclasses.replace(cfg, seed=0), scenario,
+        sorted((scenario_params or {}).items()), cell_range,
+    ))
+    return hashlib.sha256(payload.encode()).hexdigest()[:16]
+
+
+def _records_from_npz(z, prefix: str = "records/") -> RoundRecord:
+    """Rebuild the host-side flat record pytree from its '/'-joined npz keys
+    (the inverse of ``save_pytree``'s flattening for this known structure —
+    optional subtrees are present iff their keys are)."""
+    kw = {f: z[f"{prefix}{f}"] for f in _RECORD_SCALARS}
+    diag = None
+    if f"{prefix}diag/{RoundDiagnostics._fields[0]}" in z.files:
+        diag = RoundDiagnostics(
+            *(z[f"{prefix}diag/{f}"] for f in RoundDiagnostics._fields)
+        )
+    ev = None
+    if f"{prefix}eval/{EvalRecord._fields[0]}" in z.files:
+        ev = EvalRecord(
+            *(z[f"{prefix}eval/{f}"] for f in EvalRecord._fields)
+        )
+    health = None
+    if f"{prefix}health/{RoundHealth._fields[0]}" in z.files:
+        health = RoundHealth(
+            *(z[f"{prefix}health/{f}"] for f in RoundHealth._fields)
+        )
+    return RoundRecord(diag=diag, eval=ev, health=health, **kw)
+
+
+def _concat_records(parts: list[RoundRecord]) -> RoundRecord:
+    """Concatenate per-chunk record pytrees along the round axis (leaves are
+    (b, t_chunk) host arrays)."""
+    if len(parts) == 1:
+        return parts[0]
+    return jax.tree.map(
+        lambda *xs: np.concatenate(xs, axis=1), *parts
+    )
+
+
+def _eval_schedule(spec: LatticeSpec, has_eval: bool):
+    """``run_lattice``'s exact eval schedule: every ``eval_every`` rounds
+    plus the final round (nothing when there is no eval_fn)."""
+    t_ints = np.arange(spec.n_rounds, dtype=np.int32)
+    if has_eval and spec.n_rounds:
+        do_eval = (t_ints % spec.eval_every == 0) | (t_ints == spec.n_rounds - 1)
+    else:
+        do_eval = np.zeros(spec.n_rounds, bool)
+    return do_eval, t_ints[do_eval]
+
+
+# -- the chunked runner ----------------------------------------------------
+
+
+def _run_cells_checkpointed(
+    loss_fn: Callable,
+    data: DeviceData,
+    params0,
+    spec: LatticeSpec,
+    base_cfg: POFLConfig | None = None,
+    eval_fn: Callable | None = None,
+    channel_cfg: ChannelConfig | None = None,
+    scenario: str = "static_rayleigh",
+    scenario_params: dict | None = None,
+    obs: ObsConfig | None = None,
+    checkpoint: CheckpointConfig | None = None,
+    resume: bool = True,
+    cell_range: tuple[int, int] | None = None,
+    stop_after_round: int | None = None,
+) -> RoundRecord | None:
+    """The core chunked loop over the ``[lo, hi)`` slice of the fused flat
+    cell grid → host-side flat records ((b, T) leaves), or None when
+    ``stop_after_round`` simulated an interruption (tests/harness only;
+    the checkpoint for every completed chunk is already on disk)."""
+    base_cfg = base_cfg or POFLConfig(n_devices=data.n_devices)
+    algs = tuple(spec.algorithms)
+    if not algs:
+        raise ValueError("spec.algorithms must name at least one algorithm")
+    traced_algs = len(algs) > 1
+    cfg = dataclasses.replace(
+        base_cfg,
+        policy=FUSED_POLICY,
+        local_algorithm=FUSED_ALGORITHM if traced_algs else algs[0],
+        n_devices=data.n_devices,
+    )
+    noise, alpha, seed, policy, alg = fused_flat_grid(spec)
+    lo, hi = cell_range if cell_range is not None else (0, noise.size)
+    if not (0 <= lo < hi <= noise.size):
+        raise ValueError(
+            f"cell_range {cell_range} outside the {noise.size}-cell grid"
+        )
+    rank = process_coords()[0]
+    fingerprint = _fingerprint(spec, cfg, scenario, scenario_params, (lo, hi))
+
+    engine = cached_engine(
+        loss_fn, data, cfg,
+        channel_cfg=channel_cfg, scenario=scenario,
+        scenario_params=scenario_params, eval_fn=eval_fn, obs=obs,
+    )
+    noise_b = jnp.asarray(noise[lo:hi])
+    alpha_b = jnp.asarray(alpha[lo:hi])
+    seed_b = jnp.asarray(seed[lo:hi])
+    policy_b = jnp.asarray(policy[lo:hi])
+    algorithm_b = jnp.asarray(alg[lo:hi]) if traced_algs else None
+    fault_b = jnp.asarray(fault_nan_rounds(lo, hi))
+
+    T = spec.n_rounds
+    do_eval_global, _ = _eval_schedule(spec, eval_fn is not None)
+    chunk = checkpoint.every if checkpoint is not None else max(T, 1)
+
+    # the batched initial carry — also the structure/sharding template a
+    # persisted carry is restored into (stable executable signature on resume)
+    state_b = engine.init_lattice_states(
+        params0, seed_b, fused_algorithms=traced_algs
+    )
+    t_next = 0
+    rec_parts: list[RoundRecord] = []
+
+    if checkpoint is not None and resume:
+        found = latest_checkpoint(checkpoint.dir)
+        if found is not None:
+            ck_t, ck_path = found
+            meta_path = ck_path[:-4] + ".meta.json"
+            with open(meta_path) as f:
+                meta = json.load(f)
+            if meta.get("fingerprint") != fingerprint:
+                raise ValueError(
+                    f"checkpoint {ck_path} was written by a different sweep "
+                    f"(fingerprint {meta.get('fingerprint')!r} != "
+                    f"{fingerprint!r}); refusing to resume"
+                )
+            state_b = load_pytree(ck_path, {"state": state_b})["state"]
+            with np.load(ck_path) as z:
+                rec_parts = [_records_from_npz(z)]
+            t_next = int(meta["t_next"])
+            emit(
+                "checkpoint", "resilience.resume",
+                path=ck_path, t_next=t_next, rank=rank, cells=int(hi - lo),
+            )
+
+    emit(
+        "heartbeat", "resilience.heartbeat",
+        round=t_next, total=T, rank=rank, cells=int(hi - lo),
+    )
+    with span(
+        "resilience.sweep", cells=int(hi - lo), n_rounds=T,
+        chunk=chunk, resumed_at=t_next,
+    ):
+        while t_next < T:
+            k = min(chunk, T - t_next)
+            # pad the final short chunk to the static chunk length: inactive
+            # rounds are genuine carry-preserving lax.cond no-ops, so EVERY
+            # chunk dispatches the same AOT executable
+            t_ints = np.arange(chunk, dtype=np.int32) + t_next
+            active = np.arange(chunk) < k
+            do_ev = np.zeros(chunk, bool)
+            do_ev[:k] = do_eval_global[t_next:t_next + k]
+            state_b, recs = engine.run_lattice_chunk(
+                state_b, t_ints, do_ev, active,
+                noise_b, alpha_b, policy_b,
+                algorithm_b=algorithm_b, fault_b=fault_b,
+            )
+            recs = jax.device_get(recs)
+            rec_parts.append(jax.tree.map(lambda a: a[:, :k], recs))
+            t_next += k
+            emit(
+                "heartbeat", "resilience.heartbeat",
+                round=t_next, total=T, rank=rank, cells=int(hi - lo),
+            )
+            if checkpoint is not None:
+                flat = _concat_records(rec_parts)
+                rec_parts = [flat]
+                save_pytree(
+                    _ckpt_path(checkpoint.dir, t_next),
+                    {"state": state_b, "records": flat},
+                    metadata={
+                        "t_next": t_next,
+                        "fingerprint": fingerprint,
+                        "cells": [int(lo), int(hi)],
+                        "n_rounds": T,
+                        "rank": rank,
+                    },
+                )
+                _prune_checkpoints(checkpoint.dir, checkpoint.keep)
+                emit(
+                    "checkpoint", "resilience.checkpoint",
+                    t_next=t_next, total=T, rank=rank,
+                )
+                _maybe_fault_kill(t_next, rank)
+            if (
+                stop_after_round is not None
+                and t_next >= stop_after_round
+                and t_next < T
+            ):
+                return None  # simulated interruption (checkpoint committed)
+    return _concat_records(rec_parts)
+
+
+def run_lattice_checkpointed(
+    loss_fn: Callable,
+    data: DeviceData,
+    params0,
+    spec: LatticeSpec,
+    base_cfg: POFLConfig | None = None,
+    eval_fn: Callable | None = None,
+    channel_cfg: ChannelConfig | None = None,
+    scenario: str = "static_rayleigh",
+    scenario_params: dict | None = None,
+    obs: ObsConfig | None = None,
+    checkpoint: CheckpointConfig | None = None,
+    checkpoint_every: int | None = None,
+    checkpoint_dir: str | None = None,
+    resume: bool = True,
+    _stop_after_round: int | None = None,
+) -> LatticeRecords | None:
+    """``run_lattice``'s policy-fused sweep, chunked + checkpointable.
+
+    ``checkpoint`` (or the ``checkpoint_every``/``checkpoint_dir`` pair)
+    segments the T-round scan into fixed-length chunks and persists the full
+    carry + partial records after each; ``resume=True`` re-enters from the
+    newest checkpoint in the directory (fingerprint-guarded). With
+    ``checkpoint_every=None`` and no ``REPRO_FAULT_*`` env the whole sweep
+    is one chunk and nothing is written — the plain fused lattice, chunked
+    at T.
+
+    Returns the full-grid :class:`LatticeRecords` (same axes/ordering as
+    ``run_lattice``). Bit-identity contract: interrupted-and-resumed equals
+    uninterrupted — both are the same chunk executable over the same
+    carries. Chunked-vs-``run_lattice`` comparisons are CROSS-PROGRAM
+    (different executables) and get the documented ≤1-ULP reduction
+    tolerance instead.
+
+    ``_stop_after_round`` (tests/harness) simulates a crash: the runner
+    returns None at the first checkpoint boundary ≥ the given round, with
+    that checkpoint already committed.
+    """
+    if checkpoint is None and checkpoint_every is not None:
+        if checkpoint_dir is None:
+            raise ValueError("checkpoint_every needs checkpoint_dir")
+        checkpoint = CheckpointConfig(dir=checkpoint_dir, every=checkpoint_every)
+    flat = _run_cells_checkpointed(
+        loss_fn, data, params0, spec,
+        base_cfg=base_cfg, eval_fn=eval_fn, channel_cfg=channel_cfg,
+        scenario=scenario, scenario_params=scenario_params, obs=obs,
+        checkpoint=checkpoint, resume=resume,
+        stop_after_round=_stop_after_round,
+    )
+    if flat is None:
+        return None
+    do_eval, eval_rounds = _eval_schedule(spec, eval_fn is not None)
+    return assemble_flat_fused(spec, flat, do_eval, eval_rounds)
+
+
+# -- worker sharding (the supervised launcher's workload) ------------------
+
+
+def shard_bounds(n_cells: int, rank: int, count: int) -> tuple[int, int]:
+    """Contiguous near-equal split of the flat fused grid across ``count``
+    workers (every cell owned exactly once)."""
+    if not (0 <= rank < count):
+        raise ValueError(f"rank {rank} outside 0..{count - 1}")
+    return (rank * n_cells) // count, ((rank + 1) * n_cells) // count
+
+
+def run_worker_shard(
+    loss_fn: Callable,
+    data: DeviceData,
+    params0,
+    spec: LatticeSpec,
+    shard_out: str,
+    ckpt_dir: str,
+    checkpoint_every: int,
+    rank: int | None = None,
+    count: int | None = None,
+    **kw: Any,
+) -> tuple[int, int]:
+    """Run THIS worker's slice of the sweep (rank/count default to the
+    ``REPRO_DIST_*`` env contract), checkpointing under ``<ckpt_dir>/r<rank>``
+    and publishing the finished flat records to ``shard_out`` (crash-atomic).
+    Returns the ``(lo, hi)`` slice."""
+    if rank is None or count is None:
+        rank, count = process_coords()
+    lo, hi = shard_bounds(spec.n_cells, rank, count)
+    eval_fn = kw.get("eval_fn")
+    checkpoint = CheckpointConfig(
+        dir=os.path.join(ckpt_dir, f"r{rank}"), every=checkpoint_every
+    )
+    flat = _run_cells_checkpointed(
+        loss_fn, data, params0, spec,
+        checkpoint=checkpoint, cell_range=(lo, hi), **kw,
+    )
+    save_pytree(
+        shard_out, {"records": flat},
+        metadata={
+            "lo": int(lo), "hi": int(hi), "rank": int(rank),
+            "count": int(count), "has_eval": eval_fn is not None,
+        },
+    )
+    emit(
+        "shard", "resilience.shard_done",
+        rank=rank, lo=int(lo), hi=int(hi), path=shard_out,
+    )
+    return lo, hi
+
+
+def merge_shards(spec: LatticeSpec, shard_paths: list[str]) -> LatticeRecords:
+    """Reassemble per-worker shard npzs (``run_worker_shard`` outputs) into
+    the full-grid :class:`LatticeRecords`. The shards must tile the grid
+    exactly — gaps or overlaps raise."""
+    shards = []
+    has_eval = False
+    for path in shard_paths:
+        with open(path[:-4] + ".meta.json" if path.endswith(".npz")
+                  else path + ".meta.json") as f:
+            meta = json.load(f)
+        npz_path = path if path.endswith(".npz") else path + ".npz"
+        with np.load(npz_path) as z:
+            recs = _records_from_npz(z)
+        shards.append((meta["lo"], meta["hi"], recs))
+        has_eval = has_eval or bool(meta.get("has_eval"))
+    shards.sort(key=lambda s: s[0])
+    expect = 0
+    for lo, hi, _ in shards:
+        if lo != expect:
+            raise ValueError(
+                f"shards do not tile the grid: expected lo={expect}, got {lo}"
+            )
+        expect = hi
+    if expect != spec.n_cells:
+        raise ValueError(
+            f"shards cover {expect} cells, grid has {spec.n_cells}"
+        )
+    flat = jax.tree.map(
+        lambda *xs: np.concatenate(xs, axis=0), *(s[2] for s in shards)
+    )
+    do_eval, eval_rounds = _eval_schedule(spec, has_eval)
+    return assemble_flat_fused(spec, flat, do_eval, eval_rounds)

@@ -1,12 +1,18 @@
-"""Checkpoint round-trip: params + optimizer state through npz."""
+"""Checkpoint round-trip: params + optimizer state through npz — plus the
+crash-atomicity contract ``sim.resilience`` leans on (a kill mid-save can
+never tear a PUBLISHED npz; the meta sidecar lands before the npz commit)."""
 from __future__ import annotations
+
+import json
+import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro import configs
-from repro.checkpoint import restore, save
+from repro.checkpoint import load_pytree, restore, save, save_pytree
 from repro.models import api
 from repro.optim.optimizers import adamw
 
@@ -31,3 +37,71 @@ def test_roundtrip(tmp_path):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     for a, b in zip(jax.tree.leaves(opt_state), jax.tree.leaves(o2)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------------------------------
+# crash-atomicity (the sim.resilience checkpoint contract)
+# --------------------------------------------------------------------------
+
+
+def test_suffix_and_suffixless_paths_are_the_same_checkpoint(tmp_path):
+    """Save with '.npz', load without (and vice versa): one normalization
+    rule, so the meta sidecar is always found next to its npz."""
+    tree = {"a": jnp.arange(3.0)}
+    save_pytree(str(tmp_path / "ck.npz"), tree, metadata={"step": 3})
+    out = load_pytree(str(tmp_path / "ck"), {"a": jnp.zeros(3)})
+    np.testing.assert_array_equal(np.asarray(out["a"]), [0.0, 1.0, 2.0])
+    assert json.load(open(tmp_path / "ck.meta.json"))["step"] == 3
+
+    save_pytree(str(tmp_path / "ck2"), tree)
+    load_pytree(str(tmp_path / "ck2.npz"), {"a": jnp.zeros(3)})
+
+
+def test_failed_save_keeps_published_checkpoint_intact(tmp_path, monkeypatch):
+    """Torn-file regression: a save that dies mid-write must leave the
+    previously PUBLISHED npz loadable and byte-identical, and no tmp
+    litter behind."""
+    path = str(tmp_path / "ck")
+    save_pytree(path, {"a": jnp.full(4, 7.0)}, metadata={"gen": 1})
+
+    real_savez = np.savez
+
+    def dying_savez(f, **kw):
+        f.write(b"garbage-partial-write")  # tear the stream, then die
+        raise OSError("disk died mid-save")
+
+    monkeypatch.setattr(np, "savez", dying_savez)
+    with pytest.raises(OSError, match="disk died"):
+        save_pytree(path, {"a": jnp.full(4, 9.0)}, metadata={"gen": 2})
+    monkeypatch.setattr(np, "savez", real_savez)
+
+    out = load_pytree(path, {"a": jnp.zeros(4)})
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.full(4, 7.0))
+    assert not [n for n in os.listdir(tmp_path) if ".tmp-" in n]
+
+
+def test_meta_published_before_npz_commit(tmp_path, monkeypatch):
+    """The write-order contract: discovery keys on npz presence, so the
+    ``os.replace`` that publishes the meta sidecar must happen strictly
+    before the one that commits the npz."""
+    order = []
+    real_replace = os.replace
+
+    def recording_replace(src, dst):
+        order.append(dst)
+        return real_replace(src, dst)
+
+    monkeypatch.setattr(os, "replace", recording_replace)
+    save_pytree(str(tmp_path / "ck"), {"a": jnp.zeros(2)}, metadata={"t": 1})
+    assert [os.path.basename(p) for p in order] == ["ck.meta.json", "ck.npz"]
+
+
+def test_truncated_npz_fails_loudly(tmp_path):
+    """A file torn by anything OTHER than save_pytree (partial copy, bad
+    disk) must raise on load, never half-read."""
+    path = str(tmp_path / "ck")
+    save_pytree(path, {"a": jnp.arange(100.0)})
+    npz = tmp_path / "ck.npz"
+    npz.write_bytes(npz.read_bytes()[:40])  # tear it
+    with pytest.raises(Exception):
+        load_pytree(path, {"a": jnp.zeros(100)})

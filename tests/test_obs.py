@@ -141,6 +141,32 @@ def test_read_events_skips_torn_lines(tmp_path):
     assert len(events) == 1 and events[0]["name"] == "ok"
 
 
+def test_sink_survives_killed_writer(tmp_path):
+    """The resilience contract: a writer that dies hard (``os._exit``, as
+    the ``REPRO_FAULT_KILL`` injection does — no atexit, no flush-on-close)
+    loses at most the torn trailing line. Every event emitted before the
+    kill must be durable on disk, and ``read_events`` must yield exactly
+    those events past the tear."""
+    script = (
+        "import os\n"
+        "os.environ['REPRO_OBS_DIR'] = r'%s'\n"
+        "from repro.obs.sink import _handle, emit, obs_dir\n"
+        "for i in range(3):\n"
+        "    emit('heartbeat', 'killed.writer', i=i)\n"
+        "h = _handle(obs_dir())\n"
+        "h.write('{\"kind\": \"torn mid-li')\n"  # no newline: a torn write
+        "os._exit(137)\n"
+    ) % str(tmp_path)
+    env = dict(os.environ, PYTHONPATH=SRC)
+    proc = subprocess.run(
+        [sys.executable, "-c", script], env=env, capture_output=True,
+        text=True, timeout=120,
+    )
+    assert proc.returncode == 137, proc.stderr[-2000:]
+    events = [e for e in read_events(str(tmp_path)) if e["name"] == "killed.writer"]
+    assert [e["i"] for e in events] == [0, 1, 2]
+
+
 # --------------------------------------------------------------------------
 # engine integration: shims, lifecycle, diagnostics
 # --------------------------------------------------------------------------

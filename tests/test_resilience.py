@@ -1,0 +1,568 @@
+"""Fault-tolerant lattice suite (ISSUE 10 tentpole pin).
+
+Three layers:
+
+  * checkpoint/resume — the HARD bit-identity contract: a chunked sweep
+    interrupted at ANY checkpoint boundary and resumed produces records
+    bitwise equal to the uninterrupted chunked run (same chunk executable,
+    same carries, bytewise npz round-trip), including the fully-stateful
+    churn × dirichlet_mixed × feddyn cell;
+  * deterministic fault injection — ``REPRO_FAULT_NAN`` poisons exactly one
+    cell/round as an input VALUE (unfaulted cells share the executable and
+    stay bitwise unchanged; the ``on_nonfinite="skip"`` quarantine holds
+    params and counts the round on the ``health`` subtree), and the
+    default-off path (``on_nonfinite="propagate"``, no env) adds ZERO ops;
+  * supervision — per-rank crash restart with backoff, liveness kill of a
+    silent rank, restart-budget exhaustion, and (``@pytest.mark.distributed``)
+    the full launcher topology recovering an injected ``REPRO_FAULT_KILL``
+    with records bit-identical to the unfaulted run.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.pofl import DeviceData, POFLConfig
+from repro.sim.lattice import LatticeSpec
+from repro.sim.resilience import (
+    ENV_FAULT_KILL,
+    ENV_FAULT_NAN,
+    FAULT_EXIT_CODE,
+    CheckpointConfig,
+    fault_kill,
+    fault_nan,
+    fault_nan_rounds,
+    latest_checkpoint,
+    merge_shards,
+    run_lattice_checkpointed,
+    run_worker_shard,
+    shard_bounds,
+)
+
+_FLAT_FIELDS = ("e_com", "e_var", "grad_norm", "n_scheduled", "loss", "acc")
+
+
+def _tiny_task():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (8, 20, 4))
+    y = jax.random.randint(key, (8, 20), 0, 3)
+    data = DeviceData(features=x, labels=y)
+    params0 = {"w": jnp.zeros((4, 3)), "b": jnp.zeros((3,))}
+
+    def loss_fn(p, fx, fy):
+        logits = fx @ p["w"] + p["b"]
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, fy[:, None], axis=1))
+
+    return loss_fn, data, params0
+
+
+def _assert_bitwise(a, b, fields=_FLAT_FIELDS):
+    for f in fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f)), err_msg=f
+        )
+
+
+# --------------------------------------------------------------------------
+# fault env contract
+# --------------------------------------------------------------------------
+
+
+def test_fault_env_parsing(monkeypatch):
+    monkeypatch.delenv(ENV_FAULT_KILL, raising=False)
+    monkeypatch.delenv(ENV_FAULT_NAN, raising=False)
+    assert fault_kill() is None and fault_nan() is None
+
+    monkeypatch.setenv(ENV_FAULT_KILL, "1:5")
+    monkeypatch.setenv(ENV_FAULT_NAN, "3:2")
+    assert fault_kill() == (1, 5)
+    assert fault_nan() == (3, 2)
+
+    monkeypatch.setenv(ENV_FAULT_KILL, "nonsense")
+    with pytest.raises(ValueError, match="REPRO_FAULT_KILL"):
+        fault_kill()
+
+
+def test_fault_nan_rounds_slicing(monkeypatch):
+    monkeypatch.delenv(ENV_FAULT_NAN, raising=False)
+    np.testing.assert_array_equal(fault_nan_rounds(0, 3), [-1, -1, -1])
+    monkeypatch.setenv(ENV_FAULT_NAN, "5:7")
+    np.testing.assert_array_equal(fault_nan_rounds(4, 8), [-1, 7, -1, -1])
+    # the named cell lives in another worker's slice: nothing injected here
+    np.testing.assert_array_equal(fault_nan_rounds(0, 4), [-1, -1, -1, -1])
+
+
+def test_shard_bounds_tile_exactly():
+    for n_cells, count in ((8, 2), (7, 3), (5, 5), (3, 2)):
+        spans = [shard_bounds(n_cells, r, count) for r in range(count)]
+        assert spans[0][0] == 0 and spans[-1][1] == n_cells
+        for (_, hi), (lo, _) in zip(spans, spans[1:]):
+            assert hi == lo
+    with pytest.raises(ValueError):
+        shard_bounds(8, 2, 2)
+
+
+# --------------------------------------------------------------------------
+# checkpoint/resume bit-identity (the tentpole contract)
+# --------------------------------------------------------------------------
+
+
+def test_resume_any_boundary_bit_identical(tmp_path):
+    """Interrupt at EVERY checkpoint boundary; each resume must reproduce
+    the uninterrupted chunked run bit for bit (same executable, same
+    carries — n_rounds=7 with every=3 also exercises the padded short
+    final chunk)."""
+    loss_fn, data, params0 = _tiny_task()
+    spec = LatticeSpec(
+        policies=("pofl", "channel"), noise_powers=(1e-11,), alphas=(0.1,),
+        seeds=(0, 1), n_rounds=7, eval_every=3,
+    )
+    cfg = POFLConfig(n_devices=8, n_scheduled=3)
+    kw = dict(base_cfg=cfg)
+
+    full = run_lattice_checkpointed(
+        loss_fn, data, params0, spec,
+        checkpoint=CheckpointConfig(dir=str(tmp_path / "full"), every=3), **kw,
+    )
+    for boundary in (3, 6):
+        d = str(tmp_path / f"stop{boundary}")
+        ck = CheckpointConfig(dir=d, every=3)
+        out = run_lattice_checkpointed(
+            loss_fn, data, params0, spec, checkpoint=ck,
+            _stop_after_round=boundary, **kw,
+        )
+        assert out is None  # the simulated crash fired
+        assert latest_checkpoint(d)[0] == boundary
+        resumed = run_lattice_checkpointed(
+            loss_fn, data, params0, spec, checkpoint=ck, **kw,
+        )
+        _assert_bitwise(full, resumed)
+        np.testing.assert_array_equal(full.eval_rounds, resumed.eval_rounds)
+
+
+def test_resume_churn_dirichlet_feddyn_bit_identical(tmp_path):
+    """The fully-stateful acceptance cell: churn channel scenario,
+    dirichlet_mixed partition (true sizes in ``n_samples``), traced
+    fedavg+feddyn axis — the resumed carry includes channel state AND
+    ``AlgState.h`` and must still be bit-identical."""
+    from repro.data.partition import partition_dirichlet_mixed
+    from repro.data.synthetic import make_classification_dataset
+
+    key = jax.random.PRNGKey(1)
+    x, y = make_classification_dataset("mnist_like", 160, key, dim=8)
+    data = partition_dirichlet_mixed(x, y, n_devices=8, seed=0)
+    params0 = {"w": jnp.zeros((8, 10)), "b": jnp.zeros((10,))}
+
+    def loss_fn(p, fx, fy):
+        logits = fx @ p["w"] + p["b"]
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, fy[:, None], axis=1))
+
+    spec = LatticeSpec(
+        policies=("pofl",), noise_powers=(1e-11,), alphas=(0.1,),
+        seeds=(0, 1), n_rounds=5, algorithms=("fedavg", "feddyn"),
+    )
+    cfg = POFLConfig(n_devices=8, n_scheduled=3)
+    kw = dict(base_cfg=cfg, scenario="churn")
+
+    full = run_lattice_checkpointed(
+        loss_fn, data, params0, spec,
+        checkpoint=CheckpointConfig(dir=str(tmp_path / "full"), every=2), **kw,
+    )
+    ck = CheckpointConfig(dir=str(tmp_path / "stop"), every=2)
+    assert run_lattice_checkpointed(
+        loss_fn, data, params0, spec, checkpoint=ck,
+        _stop_after_round=2, **kw,
+    ) is None
+    resumed = run_lattice_checkpointed(
+        loss_fn, data, params0, spec, checkpoint=ck, **kw,
+    )
+    _assert_bitwise(full, resumed)
+
+
+def test_resume_refuses_foreign_fingerprint(tmp_path):
+    loss_fn, data, params0 = _tiny_task()
+    spec = LatticeSpec(
+        policies=("pofl",), noise_powers=(1e-11,), alphas=(0.1,),
+        seeds=(0,), n_rounds=4,
+    )
+    cfg = POFLConfig(n_devices=8, n_scheduled=3)
+    ck = CheckpointConfig(dir=str(tmp_path), every=2)
+    assert run_lattice_checkpointed(
+        loss_fn, data, params0, spec, base_cfg=cfg, checkpoint=ck,
+        _stop_after_round=2,
+    ) is None
+    other = POFLConfig(n_devices=8, n_scheduled=4)  # different sweep
+    with pytest.raises(ValueError, match="different sweep"):
+        run_lattice_checkpointed(
+            loss_fn, data, params0, spec, base_cfg=other, checkpoint=ck,
+        )
+
+
+def test_checkpoint_pruning_keeps_newest(tmp_path):
+    loss_fn, data, params0 = _tiny_task()
+    spec = LatticeSpec(
+        policies=("pofl",), noise_powers=(1e-11,), alphas=(0.1,),
+        seeds=(0,), n_rounds=6,
+    )
+    ck = CheckpointConfig(dir=str(tmp_path), every=2, keep=1)
+    run_lattice_checkpointed(
+        loss_fn, data, params0, spec,
+        base_cfg=POFLConfig(n_devices=8, n_scheduled=3), checkpoint=ck,
+    )
+    npzs = [n for n in os.listdir(tmp_path) if n.endswith(".npz")]
+    metas = [n for n in os.listdir(tmp_path) if n.endswith(".meta.json")]
+    assert npzs == ["ckpt-000006.npz"] and metas == ["ckpt-000006.meta.json"]
+
+
+def test_checkpoint_roundtrip_full_carry(tmp_path):
+    """The persisted carry — params, PRNG key, channel state, stateful
+    AlgState (feddyn h / scaffold c), None-flattening optional subtrees —
+    survives the npz round-trip bitwise, into a zeroed template of the same
+    structure."""
+    from repro.checkpoint import load_pytree, save_pytree
+    from repro.sim.engine import cached_engine
+
+    loss_fn, data, params0 = _tiny_task()
+    for algorithm in ("feddyn", "scaffold"):
+        cfg = POFLConfig(
+            n_devices=8, n_scheduled=3, local_algorithm=algorithm,
+        )
+        eng = cached_engine(loss_fn, data, cfg)
+        state = eng.init_lattice_states(params0, jnp.asarray([0, 1], jnp.int32))
+        assert state.alg is not None  # the stateful carry is actually there
+        path = str(tmp_path / f"carry-{algorithm}")
+        save_pytree(path, {"state": state}, metadata={"algorithm": algorithm})
+        template = jax.tree.map(jnp.zeros_like, state)
+        back = load_pytree(path, {"state": template})["state"]
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(back)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert jax.tree.structure(state) == jax.tree.structure(
+            jax.tree.map(jnp.asarray, back)
+        )
+
+
+@pytest.mark.skipif(
+    len(jax.devices()) < 2, reason="needs a multi-device cell mesh"
+)
+def test_checkpoint_roundtrip_sharded_carry(tmp_path):
+    """Sharded leaves gather to host on save and re-place onto the
+    template's shardings on load — byte-identical values, same shardings."""
+    from repro.checkpoint import load_pytree, save_pytree
+    from repro.sim.engine import cached_engine
+    from repro.sim.lattice import make_cell_mesh
+
+    loss_fn, data, params0 = _tiny_task()
+    mesh = make_cell_mesh(len(jax.devices()))
+    cfg = POFLConfig(n_devices=8, n_scheduled=3, local_algorithm="feddyn")
+    eng = cached_engine(loss_fn, data, cfg, mesh=mesh)
+    seeds = jnp.arange(len(jax.devices()), dtype=jnp.int32)
+    state = eng.init_lattice_states(params0, seeds)
+    path = str(tmp_path / "sharded-carry")
+    save_pytree(path, {"state": state})
+    back = load_pytree(path, {"state": state})["state"]
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        if hasattr(a, "sharding"):
+            assert a.sharding == b.sharding
+
+
+# --------------------------------------------------------------------------
+# NaN fault injection + in-trace quarantine
+# --------------------------------------------------------------------------
+
+
+def test_nan_quarantine_isolated_and_counted(monkeypatch):
+    """Poisoning one flat cell's aggregate at one round (a) leaves every
+    OTHER cell bitwise unchanged vs the unfaulted run of the same
+    executable, (b) shows up exactly once on the health subtree, and
+    (c) never propagates PAST the poisoned round in the faulted cell — the
+    quarantine held the previous params, so every later round's records are
+    finite again (the round-2 record itself honestly carries the NaN; the
+    health flag is how consumers find it)."""
+    loss_fn, data, params0 = _tiny_task()
+    spec = LatticeSpec(
+        policies=("pofl", "channel"), noise_powers=(1e-11,), alphas=(0.1,),
+        seeds=(0, 1), n_rounds=5,
+    )
+    cfg = POFLConfig(n_devices=8, n_scheduled=3, on_nonfinite="skip")
+
+    monkeypatch.delenv(ENV_FAULT_NAN, raising=False)
+    clean = run_lattice_checkpointed(loss_fn, data, params0, spec, base_cfg=cfg)
+    assert clean.health is not None
+    assert float(np.sum(clean.health.nonfinite)) == 0.0
+
+    monkeypatch.setenv(ENV_FAULT_NAN, "1:2")  # flat cell 1, round 2
+    faulted = run_lattice_checkpointed(loss_fn, data, params0, spec, base_cfg=cfg)
+
+    n_cells, T = spec.n_cells, spec.n_rounds
+    health = np.asarray(faulted.health.nonfinite).reshape(n_cells, T)
+    assert health.sum() == 1.0 and health[1, 2] == 1.0
+    for f in _FLAT_FIELDS:
+        a = np.asarray(getattr(clean, f)).reshape(n_cells, -1)
+        b = np.asarray(getattr(faulted, f)).reshape(n_cells, -1)
+        for cell in range(n_cells):
+            if cell == 1:
+                # the quarantine held params: rounds after the poisoned one
+                # are finite again (only the flagged round may carry NaN)
+                if b[cell].shape[-1] == T:
+                    assert np.all(np.isfinite(np.delete(b[cell], 2))), f
+            else:
+                np.testing.assert_array_equal(a[cell], b[cell], err_msg=f)
+
+
+def test_quarantine_holds_params_and_alg_state():
+    """A quarantined round is 'a round that never happened' for the model:
+    with every round poisoned, params never move (grad_norm of the frozen
+    params repeats identically), while the PRNG chain still advances (the
+    schedule keeps sampling)."""
+    loss_fn, data, params0 = _tiny_task()
+    spec = LatticeSpec(
+        policies=("pofl",), noise_powers=(1e-11,), alphas=(0.1,),
+        seeds=(0,), n_rounds=4,
+    )
+    cfg = POFLConfig(n_devices=8, n_scheduled=3, on_nonfinite="skip")
+    os.environ[ENV_FAULT_NAN] = "0:0"
+    try:
+        r0 = run_lattice_checkpointed(loss_fn, data, params0, spec, base_cfg=cfg)
+    finally:
+        del os.environ[ENV_FAULT_NAN]
+    health = np.asarray(r0.health.nonfinite).ravel()
+    assert health[0] == 1.0 and health.sum() == 1.0
+    # params were held through the poisoned round 0, so rounds 1+ compute
+    # finite records from the original (frozen) params
+    assert np.all(np.isfinite(np.asarray(r0.grad_norm).ravel()[1:]))
+
+
+def test_on_nonfinite_validation():
+    loss_fn, data, _ = _tiny_task()
+    from repro.sim.engine import cached_engine
+
+    with pytest.raises(ValueError, match="on_nonfinite"):
+        cached_engine(
+            loss_fn, data,
+            POFLConfig(n_devices=8, n_scheduled=3, on_nonfinite="explode"),
+        )
+
+
+def test_default_off_zero_new_ops():
+    """The default-off guarantee: with ``on_nonfinite="propagate"`` (and no
+    fault input) the traced program contains NO finiteness machinery and the
+    record's health subtree is None — the pre-PR program, bit for bit (the
+    pinned-trajectory batteries in test_sim/test_fused_lattice hold this
+    across the suite)."""
+    from repro.sim.engine import cached_engine
+
+    loss_fn, data, params0 = _tiny_task()
+
+    def jaxpr_for(cfg):
+        eng = cached_engine(loss_fn, data, cfg)
+        state = eng.init(params0, 0)
+        t_ints = jnp.arange(3, dtype=jnp.int32)
+        do_eval = jnp.zeros(3, bool)
+        return str(jax.make_jaxpr(
+            lambda s: eng.scan_rounds(s, t_ints, do_eval)
+        )(state))
+
+    off = jaxpr_for(POFLConfig(n_devices=8, n_scheduled=3))
+    on = jaxpr_for(POFLConfig(n_devices=8, n_scheduled=3, on_nonfinite="skip"))
+    assert "is_finite" not in off
+    assert "is_finite" in on
+
+    eng = cached_engine(loss_fn, data, POFLConfig(n_devices=8, n_scheduled=3))
+    state = eng.init(params0, 0)
+    _, rec = jax.jit(
+        lambda s: eng.scan_rounds(
+            s, jnp.arange(2, dtype=jnp.int32), jnp.zeros(2, bool)
+        )
+    )(state)
+    assert rec.health is None
+
+
+# --------------------------------------------------------------------------
+# shard workers + merge
+# --------------------------------------------------------------------------
+
+
+def test_shard_merge_matches_full_run(tmp_path):
+    loss_fn, data, params0 = _tiny_task()
+    spec = LatticeSpec(
+        policies=("pofl", "channel"), noise_powers=(1e-11,), alphas=(0.1,),
+        seeds=(0, 1), n_rounds=4,
+    )
+    cfg = POFLConfig(n_devices=8, n_scheduled=3)
+    # reference: the SAME chunk length as the workers, so the comparison is
+    # within one program (cross-chunk-length comparisons are cross-program)
+    full = run_lattice_checkpointed(
+        loss_fn, data, params0, spec, base_cfg=cfg,
+        checkpoint=CheckpointConfig(dir=str(tmp_path / "full"), every=2),
+    )
+    paths = []
+    for rank in range(2):
+        p = str(tmp_path / f"shard-r{rank}.npz")
+        run_worker_shard(
+            loss_fn, data, params0, spec, p, str(tmp_path / "ckpt"), 2,
+            rank=rank, count=2, base_cfg=cfg,
+        )
+        paths.append(p)
+    merged = merge_shards(spec, paths)
+    _assert_bitwise(full, merged)
+
+    with pytest.raises(ValueError, match="shards"):
+        merge_shards(spec, paths[:1])
+
+
+# --------------------------------------------------------------------------
+# supervision (fast in-process: tiny non-jax worker scripts)
+# --------------------------------------------------------------------------
+
+_CRASH_THEN_SUCCEED = textwrap.dedent("""
+    import os, sys
+    rank = os.environ["REPRO_DIST_PROCESS_ID"]
+    marker = os.path.join({d!r}, "attempted-" + rank)
+    if not os.path.exists(marker):
+        open(marker, "w").close()
+        sys.exit({rc})
+    print("rank", rank, "recovered")
+""")
+
+
+def _run_supervised(script, n_procs=2, **sup_kw):
+    from repro.launch.distributed import SupervisorConfig, supervise_workers
+
+    return supervise_workers(
+        [sys.executable, "-c", script],
+        n_procs=n_procs,
+        devices_per_proc=1,
+        timeout=60.0,
+        supervisor=SupervisorConfig(
+            backoff_base=0.05, poll_interval=0.05, **sup_kw
+        ),
+    )
+
+
+def test_supervisor_restarts_crashed_rank(tmp_path):
+    results = _run_supervised(
+        _CRASH_THEN_SUCCEED.format(d=str(tmp_path), rc=7), max_restarts=2
+    )
+    assert [r.returncode for r in results] == [0, 0]
+    # both ranks crashed once, were restarted, then recovered
+    for r in results:
+        assert "recovered" in r.output
+        assert f"rank {r.process_id} crashed (rc=7); restart 1/2" in r.output
+
+
+def test_supervisor_exhausts_restart_budget(tmp_path):
+    always_crash = "import sys; sys.exit(3)"
+    with pytest.raises(RuntimeError, match="supervised workers failed") as ei:
+        _run_supervised(always_crash, max_restarts=1)
+    assert "restart budget" in str(ei.value)
+    assert "rc=3" in str(ei.value)  # the per-rank tails name the exit code
+
+
+def test_supervisor_strips_fault_env_on_restart(tmp_path, monkeypatch):
+    """Injected faults are one-shot: the env var is present on attempt 0 and
+    stripped on the restart, so the restarted rank recovers instead of
+    re-crashing forever."""
+    monkeypatch.setenv(ENV_FAULT_KILL, "0:0")
+    script = textwrap.dedent("""
+        import os, sys
+        sys.exit(113 if os.environ.get("REPRO_FAULT_KILL") else 0)
+    """)
+    results = _run_supervised(script, n_procs=1, max_restarts=1)
+    assert results[0].returncode == 0
+    assert "restart 1/1" in results[0].output
+
+
+def test_supervisor_liveness_kills_silent_rank(tmp_path):
+    """A rank that hangs without heartbeating is killed at the liveness
+    timeout and restarted — the topology never waits for the absolute
+    deadline."""
+    hang_then_succeed = textwrap.dedent("""
+        import os, sys, time
+        marker = os.path.join({d!r}, "hung")
+        if not os.path.exists(marker):
+            open(marker, "w").close()
+            time.sleep(600)
+        print("recovered after hang")
+    """).format(d=str(tmp_path))
+    results = _run_supervised(
+        hang_then_succeed, n_procs=1, max_restarts=1, liveness_timeout=1.5
+    )
+    assert results[0].returncode == 0
+    assert "went silent" in results[0].output
+    assert "recovered after hang" in results[0].output
+
+
+def test_spawn_local_deadline_kill_accounting():
+    """spawn_local's straggler bookkeeping: the rank killed at the deadline
+    reports a signal rc and the kill note; the rank that exited cleanly
+    keeps its real rc (never rewritten to -9)."""
+    from repro.launch.distributed import spawn_local
+
+    script = textwrap.dedent("""
+        import os, time
+        if os.environ["REPRO_DIST_PROCESS_ID"] == "0":
+            raise SystemExit(0)
+        time.sleep(600)
+    """)
+    results = spawn_local(
+        [sys.executable, "-c", script], n_procs=2, devices_per_proc=1,
+        timeout=2.0,
+    )
+    assert results[0].returncode == 0
+    assert "killed at the" not in results[0].output
+    assert results[1].returncode == -9
+    assert "killed at the 2.0s deadline" in results[1].output
+
+
+# --------------------------------------------------------------------------
+# the full supervised topology under an injected kill (CI fault-injection job)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.distributed
+def test_injected_kill_recovers_bit_identical(tmp_path, monkeypatch):
+    """Acceptance: REPRO_FAULT_KILL=1:N kills rank 1 mid-sweep (after its
+    round-2 checkpoint), the supervisor restarts it within the budget, it
+    resumes from checkpoint, and the merged records are BIT-IDENTICAL to
+    the unfaulted supervised run of the same workload."""
+    from repro.launch.distributed import SupervisorConfig, run_resilient
+    from repro.obs.sink import read_events
+
+    obs = tmp_path / "obs"
+    monkeypatch.delenv(ENV_FAULT_KILL, raising=False)
+    clean = run_resilient(
+        2, str(tmp_path / "clean"), n_rounds=4, checkpoint_every=2,
+        timeout=600.0,
+    )
+
+    monkeypatch.setenv(ENV_FAULT_KILL, "1:2")
+    monkeypatch.setenv("REPRO_OBS_DIR", str(obs))
+    faulted = run_resilient(
+        2, str(tmp_path / "fault"), n_rounds=4, checkpoint_every=2,
+        timeout=600.0,
+        supervisor=SupervisorConfig(max_restarts=2, backoff_base=0.1),
+    )
+    _assert_bitwise(clean, faulted)
+
+    events = list(read_events(str(obs)))
+    restarts = [e for e in events if e["name"] == "supervisor.restart"]
+    assert len(restarts) == 1  # recovered in one restart, budget respected
+    assert restarts[0]["rank"] == 1
+    assert restarts[0]["rc"] == FAULT_EXIT_CODE
+    kills = [e for e in events if e["name"] == "resilience.fault_kill"]
+    assert len(kills) == 1 and kills[0]["process_index"] == 1
+    # the restarted rank announced its resume from the checkpoint
+    resumes = [e for e in events if e["name"] == "resilience.resume"]
+    assert len(resumes) == 1 and resumes[0]["process_index"] == 1
+    assert resumes[0]["t_next"] >= 2
